@@ -1,0 +1,53 @@
+"""FlashAttention benchmark — paper Table 3 (FA0–FA4), Fig. 12."""
+import numpy as np
+
+from repro.core import Schedule, compile as tl_compile
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_program
+
+from .common import Row, check, emit, kernel_row
+
+# (batch, heads, seq_len, head_dim, causal) — Table 3
+FA_SHAPES = {
+    "FA0": (1, 32, 512, 128, True),
+    "FA1": (1, 32, 512, 128, False),
+    "FA2": (1, 32, 1024, 128, True),
+    "FA3": (1, 32, 1024, 128, False),
+    "FA4": (1, 32, 4096, 128, True),
+}
+
+
+def run():
+    rows = []
+    for name, (b, h, s, d, causal) in FA_SHAPES.items():
+        bm = bn = min(128, s)
+        prog = flash_attention_program(b, h, h, s, s, d, causal, bm, bn,
+                                       dtype="bfloat16", num_stages=2)
+        rows.append(
+            kernel_row(
+                f"flash_attn_{name}_b{b}h{h}s{s}d{d}" + ("_causal" if causal else ""),
+                prog,
+                extra=f"blocks={bm}x{bn}",
+            )
+        )
+
+    def _ok():
+        rng = np.random.default_rng(0)
+        prog = flash_attention_program(1, 2, 2, 64, 64, 32, True, 32, 32)
+        kern = tl_compile(prog, Schedule(interpret=True))
+        q = rng.standard_normal((1, 2, 64, 32), dtype=np.float32)
+        k = rng.standard_normal((1, 2, 64, 32), dtype=np.float32)
+        v = rng.standard_normal((1, 2, 64, 32), dtype=np.float32)
+        return np.allclose(
+            np.asarray(kern(q, k, v)),
+            np.asarray(ref.attention(q, k, v, causal=True)),
+            atol=2e-3,
+        )
+
+    check(_ok, "flash-attn-interpret-vs-oracle")
+    emit(rows, "Table 3 / Fig 12: FlashAttention (cost-model roofline, v5e)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Mamba-2 linear attention benchmark — paper Table 4 (CC0–5 chunk_scan,
+CT0–5 chunk_state), Fig. 12.
+
+Shapes fold (batch × heads) into the kernel grid's batch dim, exactly as the
+model layer dispatches them; chunk length 64 matches Mamba-2's default.
+"""
+import numpy as np
+
+from repro.core import Schedule, compile as tl_compile
+from repro.kernels import ref
+from repro.kernels.linear_attention import chunk_scan_program, chunk_state_program
+
+from .common import Row, check, emit, kernel_row
+
+# batch, nheads, seq_len, head_dim, d_state — Table 4
+SHAPES = {
+    "0": (1, 64, 1024, 64, 128),
+    "1": (1, 64, 2048, 64, 128),
+    "2": (1, 64, 8192, 64, 128),
+    "3": (64, 64, 1024, 64, 128),
+    "4": (64, 64, 2048, 64, 128),
+    "5": (64, 64, 8192, 64, 128),
+}
+CHUNK = 64
+
+
+def run():
+    rows = []
+    for idx, (b, h, s, p, n) in SHAPES.items():
+        bf = b * h  # heads folded into batch (model-layer dispatch)
+        nc = s // CHUNK
+        rows.append(
+            kernel_row(
+                f"chunk_state_CT{idx}_b{b}h{h}s{s}",
+                chunk_state_program(bf, nc, CHUNK, n, p, dtype="bfloat16"),
+            )
+        )
+        rows.append(
+            kernel_row(
+                f"chunk_scan_CC{idx}_b{b}h{h}s{s}",
+                chunk_scan_program(bf, nc, CHUNK, n, p, dtype="bfloat16"),
+            )
+        )
+
+    def _ok():
+        rng = np.random.default_rng(0)
+        prog = chunk_scan_program(2, 2, 32, 16, 32)
+        kern = tl_compile(prog, Schedule(interpret=True))
+        c = rng.standard_normal((2, 2, 32, 16), dtype=np.float32)
+        bm = rng.standard_normal((2, 2, 32, 16), dtype=np.float32)
+        x = rng.standard_normal((2, 2, 32, 32), dtype=np.float32)
+        da = np.cumsum(np.abs(rng.standard_normal((2, 2, 32), dtype=np.float32)) * 0.1, -1)
+        prev = rng.standard_normal((2, 2, 16, 32), dtype=np.float32)
+        return np.allclose(
+            np.asarray(kern(c, bm, x, da.astype(np.float32), prev)),
+            np.asarray(ref.chunk_scan(c, bm, x, da, prev)),
+            atol=2e-3,
+        )
+
+    check(_ok, "chunk-scan-interpret-vs-oracle")
+    emit(rows, "Table 4 / Fig 12: Mamba-2 SSD linear attention (cost model, v5e)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

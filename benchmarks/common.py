@@ -1,0 +1,60 @@
+"""Shared benchmark machinery.
+
+This container is CPU-only, so per-kernel numbers are *structural*: the
+tile-level cost model (FLOPs / HBM traffic / VMEM plan / MXU utilization
+from the compiled tile program) evaluated against TPU v5e peaks — the same
+three-term methodology as the dry-run roofline, applied per kernel.  Each
+row also carries an interpret-mode correctness check at a reduced shape so
+the numbers always describe a *working* kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import Schedule, compile as tl_compile
+from repro.core.autotune import HBM_BW, PEAK_FLOPS_BF16, score_kernel
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us: float  # cost-model microseconds on v5e
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us:.2f},{self.derived}"
+
+
+def kernel_row(name: str, program, extra: str = "", schedule=None) -> Row:
+    kern = tl_compile(program, schedule or Schedule())
+    total, cs, ms, mxu = score_kernel(kern)
+    cost = kern.info.cost
+    bound = "compute" if cs >= ms else "memory"
+    ai = cost.arithmetic_intensity
+    frac = max(cs, ms) / total if total else 0.0
+    derived = (
+        f"bound={bound} flops={cost.flops:.3g} hbm={cost.hbm_bytes:.3g}B "
+        f"AI={ai:.1f} mxu={mxu:.0%} vmem={cost.vmem_bytes/2**20:.1f}MiB"
+        + (f" {extra}" if extra else "")
+    )
+    return Row(name, total * 1e6, derived)
+
+
+def check(fn: Callable[[], bool], label: str):
+    ok = fn()
+    status = "ok" if ok else "FAIL"
+    print(f"# correctness[{label}]: {status}")
+    if not ok:
+        raise AssertionError(f"benchmark correctness check failed: {label}")
+
+
+def emit(rows: List[Row], header: str):
+    print(f"# {header}")
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    print()

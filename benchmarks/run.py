@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV blocks (cost-model microseconds on
+TPU v5e — see common.py for why structural numbers on a CPU host) plus an
+inline correctness check per table.
+
+    PYTHONPATH=src python -m benchmarks.run            # all tables
+    PYTHONPATH=src python -m benchmarks.run --only gemm,mla
+"""
+import argparse
+import sys
+import time
+
+from . import (
+    bench_attention,
+    bench_dequant,
+    bench_gemm,
+    bench_linear_attention,
+    bench_loc,
+    bench_mla,
+)
+
+TABLES = {
+    "gemm": bench_gemm,
+    "attention": bench_attention,
+    "linear_attention": bench_linear_attention,
+    "dequant": bench_dequant,
+    "mla": bench_mla,
+    "loc": bench_loc,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(TABLES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(TABLES)
+    t0 = time.time()
+    total_rows = 0
+    for name in names:
+        mod = TABLES[name]
+        rows = mod.run()
+        total_rows += len(rows)
+    print(f"# benchmarks complete: {total_rows} rows in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

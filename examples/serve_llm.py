@@ -1,0 +1,16 @@
+"""Serve a small model with batched requests through the continuous-batching
+engine (per-slot positions, slot recycling).
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main([
+        "--arch", "qwen2_1_5b",
+        "--reduced",
+        "--requests", "12",
+        "--slots", "4",
+        "--max-new", "12",
+        "--prompt-len", "6",
+    ])

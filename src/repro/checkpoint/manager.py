@@ -1,0 +1,158 @@
+"""Sharding-aware checkpointing: atomic, versioned, async-capable.
+
+Layout:
+    <dir>/step_00000042/
+        manifest.json      {step, keys, shapes, dtypes, complete: true}
+        000000.npy ...     one file per pytree leaf (path-keyed order)
+
+Atomicity: leaves are written into ``step_X.tmp`` and the directory is
+renamed only after the manifest (with ``complete=true``) is flushed — a
+crashed writer leaves a ``.tmp`` that restore ignores.  Restart picks the
+newest complete manifest (``latest_step``).  On restore, leaves are
+``device_put`` against the *current* mesh's shardings, which is what makes
+elastic re-meshing (distributed.fault.elastic_remesh) a pure restore-time
+decision.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save(state, step: int, directory: str | Path, keep: Optional[int] = None):
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    tmp = directory / f"step_{step:08d}.tmp"
+    final = directory / f"step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves = _flatten_with_paths(state)
+    manifest: Dict[str, Any] = {"step": step, "keys": [], "complete": False}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(tmp / f"{i:06d}.npy", arr)
+        manifest["keys"].append(
+            {"key": key, "file": f"{i:06d}.npy", "shape": list(arr.shape),
+             "dtype": str(arr.dtype)}
+        )
+    manifest["complete"] = True
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    if keep:
+        steps = sorted(p for p in directory.glob("step_????????") if p.is_dir())
+        for p in steps[:-keep]:
+            shutil.rmtree(p)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    best = None
+    for p in sorted(directory.glob("step_????????")):
+        man = p / "manifest.json"
+        if man.exists():
+            try:
+                m = json.loads(man.read_text())
+                if m.get("complete"):
+                    best = m["step"]
+            except (json.JSONDecodeError, KeyError):
+                continue
+    return best
+
+
+def restore(state_like, step: int, directory: str | Path, shardings=None):
+    """Load step into the structure of ``state_like`` (shapes validated).
+
+    ``shardings``: optional matching pytree of NamedSharding — leaves are
+    placed directly onto the (possibly different) current mesh.
+    """
+    directory = Path(directory) / f"step_{step:08d}"
+    manifest = json.loads((directory / "manifest.json").read_text())
+    if not manifest.get("complete"):
+        raise ValueError(f"checkpoint at {directory} is incomplete")
+    paths = _flatten_with_paths(state_like)
+    by_key = {e["key"]: e for e in manifest["keys"]}
+    flat_shardings = (
+        [s for _, s in _flatten_with_paths(shardings)] if shardings is not None
+        else [None] * len(paths)
+    )
+    leaves_out = []
+    for (key, like), shard in zip(paths, flat_shardings):
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(directory / entry["file"])
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {like.shape}"
+            )
+        arr = arr.astype(like.dtype)
+        leaves_out.append(
+            jax.device_put(arr, shard) if shard is not None else arr
+        )
+    treedef = jax.tree_util.tree_structure(state_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves_out)
+
+
+class CheckpointManager:
+    """Periodic async checkpointing + restart bookkeeping."""
+
+    def __init__(self, directory: str | Path, interval: int = 100,
+                 keep: int = 3, async_save: bool = True):
+        self.directory = Path(directory)
+        self.interval = interval
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_save(self, state, step: int, force: bool = False):
+        if not force and (self.interval <= 0 or step % self.interval != 0):
+            return False
+        self.wait()  # one in-flight save at a time
+        # snapshot to host NOW so training can mutate freely afterwards
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=save, args=(host_state, step, self.directory, self.keep),
+                daemon=True,
+            )
+            self._thread.start()
+        else:
+            save(host_state, step, self.directory, self.keep)
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def restore(self, state_like, shardings=None, step: Optional[int] = None):
+        step = step if step is not None else self.latest()
+        if step is None:
+            return None
+        return restore(state_like, step, self.directory, shardings)

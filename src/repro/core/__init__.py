@@ -1,0 +1,57 @@
+# repro.core — TileLang-on-TPU: the paper's primary contribution.
+#
+# A Python-embedded tile DSL (program.py) whose dataflow operators
+# (tile_ops.py) are decoupled from scheduling (schedule.py), with
+# priority-ordered layout inference (infer.py, layout.py) and a lowering to
+# Pallas TPU kernels / a reference interpreter (lower.py).  autotune.py adds
+# the cost-model config search.  See DESIGN.md §2 for the GPU->TPU mapping.
+
+from . import program as lang  # the "T" namespace:  from repro.core import lang as T
+from .autotune import autotune, grid_configs
+from .buffer import FRAGMENT, GLOBAL, SHARED, Region, TileBuffer
+from .errors import (
+    LayoutError,
+    LoweringError,
+    ScheduleError,
+    TileError,
+    TraceError,
+)
+from .infer import InferenceResult, infer_layouts
+from .layout import Fragment, IterVar, Layout, padded, row_major, swizzle_2d, tiled_2d, vreg_fragment
+from .lower import CompiledKernel, KernelCost, compile
+from .program import TileProgram, Tensor, prim_func
+from .schedule import Schedule, plan_vmem
+
+__all__ = [
+    "lang",
+    "autotune",
+    "grid_configs",
+    "FRAGMENT",
+    "GLOBAL",
+    "SHARED",
+    "Region",
+    "TileBuffer",
+    "TileError",
+    "TraceError",
+    "LoweringError",
+    "LayoutError",
+    "ScheduleError",
+    "InferenceResult",
+    "infer_layouts",
+    "Fragment",
+    "IterVar",
+    "Layout",
+    "padded",
+    "row_major",
+    "swizzle_2d",
+    "tiled_2d",
+    "vreg_fragment",
+    "CompiledKernel",
+    "KernelCost",
+    "compile",
+    "TileProgram",
+    "Tensor",
+    "prim_func",
+    "Schedule",
+    "plan_vmem",
+]

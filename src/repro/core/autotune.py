@@ -1,0 +1,136 @@
+"""Cost-model-driven configuration search (paper §6 future direction).
+
+Because TileLang exposes thread mapping, memory access and compute behavior
+explicitly, a static cost model is enough to rank configurations without
+running them — exactly the property the paper argues for.  We exploit it:
+``lower.compile`` records a :class:`KernelCost` (FLOPs, HBM bytes, VMEM
+footprint, grid) and the inference pass records padding waste and MXU
+utilization; :func:`autotune` combines them into a roofline-style score and
+returns the best-scoring feasible config.
+
+This is *structural* tuning (no hardware timing needed): the same mechanism
+the dry-run roofline uses, applied at kernel granularity.  Scores are cached
+per (program-name, shapes, config) so kernel libraries with dynamic shape
+sets amortize the search — the TPU analogue of the paper's "dynamic parameter
+simplification" for kernel libraries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .errors import ScheduleError, TileError
+from .lower import CompiledKernel, compile as tl_compile
+from .schedule import Schedule
+
+# TPU v5e hardware constants (also used by repro.roofline).
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12  # MXU int8 path is 2x bf16
+HBM_BW = 819e9
+
+
+def peak_flops_for(dtype: str) -> float:
+    return PEAK_FLOPS_INT8 if "int8" in dtype or "int4" in dtype else PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class Candidate:
+    config: Dict[str, Any]
+    score: float  # estimated seconds (lower is better)
+    compute_s: float
+    memory_s: float
+    mxu_util: float
+    pad_waste: float
+    feasible: bool
+    reason: str = ""
+
+
+_CACHE: Dict[Tuple, "Candidate"] = {}
+
+
+def score_kernel(kernel: CompiledKernel) -> Tuple[float, float, float, float]:
+    """Roofline-style score: max(compute, memory) with efficiency derates.
+
+    * compute is derated by the worst MXU tile utilization (M/N pad to 128,
+      K to the sublane granule) and credited the int8 2x path when the GEMM
+      operands are int8.
+    * memory is RAW HBM traffic — VMEM padding is a *capacity* effect
+      (planned by plan_vmem), not wire traffic, so it does not derate
+      bandwidth.
+    """
+    cost = kernel.info.cost
+    inf = kernel.info.inference
+    mxu = 1.0
+    peak = PEAK_FLOPS_BF16
+    if inf.gemms:
+        mxu = min(g.mxu_utilization for g in inf.gemms)
+    # operand dtype of the gemms decides the MXU rate (int8 path = 2x)
+    if inf.gemms and all(g.a_dtype in ("int8", "uint8") for g in inf.gemms):
+        peak = PEAK_FLOPS_INT8
+    compute_s = cost.compute_seconds(peak) / max(mxu, 1e-3)
+    memory_s = cost.memory_seconds(HBM_BW)
+    # pipeline overlap: with >=2 stages compute and memory overlap; otherwise add
+    overlap = kernel.info.num_stages >= 2
+    total = max(compute_s, memory_s) if overlap else compute_s + memory_s
+    return total, compute_s, memory_s, mxu
+
+
+def autotune(
+    build: Callable[..., Any],
+    configs: Iterable[Dict[str, Any]],
+    schedule: Optional[Schedule] = None,
+    cache_key: Optional[Tuple] = None,
+    return_all: bool = False,
+):
+    """Pick the best config for a program factory.
+
+    ``build(**config)`` must return a TileProgram.  Infeasible configs (VMEM
+    over budget, lowering errors) are skipped but recorded.
+    """
+    schedule = schedule or Schedule()
+    results: List[Candidate] = []
+    best: Optional[Tuple[Candidate, Any]] = None
+    for config in configs:
+        key = None
+        if cache_key is not None:
+            key = (cache_key, tuple(sorted(config.items())))
+            if key in _CACHE:
+                cand = _CACHE[key]
+                results.append(cand)
+                if cand.feasible and (best is None or cand.score < best[0].score):
+                    best = (cand, None)  # rebuild lazily below
+                continue
+        try:
+            program = build(**config)
+            kernel = tl_compile(program, schedule=schedule)
+            total, cs, ms, mxu = score_kernel(kernel)
+            waste = max(kernel.info.inference.waste.values(), default=0.0)
+            cand = Candidate(config, total, cs, ms, mxu, waste, True)
+        except (ScheduleError, TileError) as e:
+            cand = Candidate(config, float("inf"), 0, 0, 0, 0, False, str(e))
+            kernel = None
+        results.append(cand)
+        if key is not None:
+            _CACHE[key] = cand
+        if cand.feasible and (best is None or cand.score < best[0].score):
+            best = (cand, kernel)
+    if best is None:
+        msgs = "; ".join(c.reason[:80] for c in results[:4])
+        raise ScheduleError(f"autotune: no feasible config ({msgs})")
+    cand, kernel = best
+    if kernel is None:  # cache hit path: rebuild the winner once
+        program = build(**cand.config)
+        kernel = tl_compile(program, schedule=schedule)
+    if return_all:
+        return kernel, cand, results
+    return kernel, cand
+
+
+def grid_configs(**axes: Sequence[Any]) -> List[Dict[str, Any]]:
+    """Cartesian product of named axis values -> list of config dicts."""
+    names = list(axes)
+    out = []
+    for vals in itertools.product(*(axes[n] for n in names)):
+        out.append(dict(zip(names, vals)))
+    return out

@@ -1,0 +1,23 @@
+"""Error types for the tile language."""
+
+
+class TileError(Exception):
+    """Base error for all tile-language failures."""
+
+
+class TraceError(TileError):
+    """Raised when the Python-embedded frontend is used outside a kernel
+    context or with malformed arguments."""
+
+
+class LoweringError(TileError):
+    """Raised when a traced program cannot be lowered to the requested
+    backend (e.g. unsupported op pattern for the Pallas path)."""
+
+
+class LayoutError(TileError):
+    """Raised by the layout-inference pass on conflicting constraints."""
+
+
+class ScheduleError(TileError):
+    """Raised for invalid schedule parameters (vmem budget, stages...)."""

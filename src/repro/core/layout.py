@@ -1,0 +1,425 @@
+"""Layout & Fragment algebra (paper §4.1, TPU-adapted).
+
+TileLang models index translation with a composable ``Layout`` abstraction: a
+function ``f : K^n -> K^m`` from logical indices to memory coordinates,
+expressed algebraically over ``IterVar``-like symbolic variables.  ``Fragment``
+extends it to ``f : K^n -> K^2`` mapping a logical element to *(thread,
+local_register)* on GPUs.
+
+On TPU there are no user-visible threads; the physical partitioning that
+Fragment describes is the mapping of a logical tile onto **(vreg_tile,
+lane)** coordinates — the sublane×lane grid of the VPU's vector registers
+((8,128) f32 / (16,128) bf16 / (32,128) int8) and the 128×128 MXU systolic
+tiles.  The algebra is unchanged (same ``repeat`` / ``repeat_on_thread`` /
+``replicate`` combinators as the paper's Fig. 6); only the interpretation of
+the first output coordinate differs (vreg-tile id instead of thread id).
+
+The inference pass (infer.py) consumes Layouts to decide padded block shapes
+and to check MXU/VREG alignment; the scheduler (schedule.py) uses a Layout
+transform over grid coordinates to realize ``T.use_swizzle``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .errors import LayoutError
+from .expr import (
+    BinExpr,
+    ConstExpr,
+    Expr,
+    VarExpr,
+    linear_decompose,
+    static_eval,
+    wrap,
+)
+
+# ---------------------------------------------------------------------------
+# VREG / MXU geometry for the TPU target (v5e).  The second-minor ("sublane")
+# extent depends on element width; the minor ("lane") extent is always 128.
+# ---------------------------------------------------------------------------
+LANE = 128
+MXU = (128, 128)
+
+
+def sublane(dtype: str) -> int:
+    from .buffer import dtype_bits
+
+    bits = dtype_bits(dtype)
+    return {32: 8, 16: 16, 8: 32, 64: 4}.get(bits, 8)
+
+
+def vreg_tile(dtype: str) -> Tuple[int, int]:
+    """Native vector-register tile for ``dtype``: (sublane, lane)."""
+    return (sublane(dtype), LANE)
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class IterVar:
+    """An iteration variable with a known extent (paper: IterVar with range)."""
+
+    var: VarExpr
+    extent: int
+
+    @staticmethod
+    def make(name: str, extent: int) -> "IterVar":
+        return IterVar(VarExpr(name, extent=int(extent)), int(extent))
+
+
+class Layout:
+    """An algebraic index map ``f : K^n -> K^m``.
+
+    ``iter_vars`` bind the n input dimensions; ``forward_index`` is a tuple of
+    m expressions over those variables.
+    """
+
+    def __init__(self, iter_vars: Sequence[IterVar], forward_index: Sequence[Expr]):
+        self.iter_vars: Tuple[IterVar, ...] = tuple(iter_vars)
+        self.forward_index: Tuple[Expr, ...] = tuple(forward_index)
+
+    # -- basic properties ----------------------------------------------------
+    @property
+    def in_shape(self) -> Tuple[int, ...]:
+        return tuple(iv.extent for iv in self.iter_vars)
+
+    @property
+    def in_rank(self) -> int:
+        return len(self.iter_vars)
+
+    @property
+    def out_rank(self) -> int:
+        return len(self.forward_index)
+
+    def out_shape(self) -> Tuple[int, ...]:
+        """Bounding extents of each output coordinate (affine bound analysis).
+
+        For affine expressions we evaluate the max over the input box exactly
+        from coefficient signs; non-affine expressions fall back to corner
+        sampling of the input box.
+        """
+        shape = []
+        for e in self.forward_index:
+            dec = linear_decompose(e)
+            if dec is not None:
+                hi = dec.get("", 0)
+                for iv in self.iter_vars:
+                    c = dec.get(iv.var.name, 0)
+                    if c > 0:
+                        hi += c * (iv.extent - 1)
+                shape.append(hi + 1)
+            else:
+                shape.append(self._sample_max(e) + 1)
+        return tuple(int(s) for s in shape)
+
+    def _sample_max(self, e: Expr) -> int:
+        import itertools as _it
+
+        best = 0
+        corners = [(0, iv.extent - 1) for iv in self.iter_vars]
+        for pt in _it.product(*corners):
+            env = {iv.var.name: v for iv, v in zip(self.iter_vars, pt)}
+            val = _substitute_eval(e, env)
+            if val is None:
+                raise LayoutError(f"Cannot bound non-affine layout expr {e!r}")
+            best = max(best, int(val))
+        return best
+
+    # -- application -----------------------------------------------------------
+    def __call__(self, *indices):
+        """Apply the map to indices (ints, Exprs, or jnp values)."""
+        if len(indices) != self.in_rank:
+            raise LayoutError(
+                f"Layout expects {self.in_rank} indices, got {len(indices)}"
+            )
+        env = {iv.var.name: idx for iv, idx in zip(self.iter_vars, indices)}
+        return tuple(_substitute(e, env) for e in self.forward_index)
+
+    def map_concrete(self, *indices: int) -> Tuple[int, ...]:
+        env = {iv.var.name: int(i) for iv, i in zip(self.iter_vars, indices)}
+        out = []
+        for e in self.forward_index:
+            v = _substitute_eval(e, env)
+            if v is None:
+                raise LayoutError(f"Layout expr {e!r} not evaluable at {indices}")
+            out.append(int(v))
+        return tuple(out)
+
+    # -- composition (paper: "composable and stackable") -----------------------
+    def compose(self, inner: "Layout") -> "Layout":
+        """``self ∘ inner``: first apply ``inner``, feed its outputs to ``self``."""
+        if inner.out_rank != self.in_rank:
+            raise LayoutError(
+                f"Cannot compose: inner produces {inner.out_rank} coords, outer "
+                f"consumes {self.in_rank}"
+            )
+        env = {
+            iv.var.name: e
+            for iv, e in zip(self.iter_vars, inner.forward_index)
+        }
+        fwd = tuple(_substitute(e, env) for e in self.forward_index)
+        return type(self)(inner.iter_vars, fwd)
+
+    def __repr__(self):
+        ivs = ", ".join(f"{iv.var.name}<{iv.extent}>" for iv in self.iter_vars)
+        fwd = ", ".join(map(repr, self.forward_index))
+        return f"{type(self).__name__}([{ivs}] -> ({fwd}))"
+
+    # -- bijectivity check (padding layouts are non-bijective; Fig. 5c) -------
+    def is_bijective(self) -> bool:
+        import numpy as np
+
+        in_size = 1
+        for iv in self.iter_vars:
+            in_size *= iv.extent
+        if in_size > 1 << 16:  # only check small layouts exactly
+            raise LayoutError("Bijectivity check too large; use structural info")
+        seen = set()
+        import itertools as _it
+
+        for pt in _it.product(*(range(iv.extent) for iv in self.iter_vars)):
+            out = self.map_concrete(*pt)
+            if out in seen:
+                return False
+            seen.add(out)
+        out_size = 1
+        for s in self.out_shape():
+            out_size *= s
+        return len(seen) == out_size
+
+
+# -- substitution helpers ----------------------------------------------------
+
+
+def _substitute(e: Expr, env: Dict[str, object]):
+    """Substitute variables; returns an Expr when env values are Exprs, or a
+    numeric value when everything folds."""
+    from .expr import CastExpr, LoadExpr, UnaryExpr, WhereExpr
+
+    def rec(node):
+        if isinstance(node, ConstExpr):
+            return node
+        if isinstance(node, VarExpr):
+            if node.name in env:
+                v = env[node.name]
+                return v if isinstance(v, Expr) else wrap(v)
+            return node
+        if isinstance(node, BinExpr):
+            return BinExpr(node.op, rec(node.lhs), rec(node.rhs))
+        if isinstance(node, UnaryExpr):
+            return UnaryExpr(node.op, rec(node.operand))
+        if isinstance(node, CastExpr):
+            return CastExpr(rec(node.operand), node.target_dtype)
+        if isinstance(node, WhereExpr):
+            return WhereExpr(rec(node.cond), rec(node.then), rec(node.otherwise))
+        if isinstance(node, LoadExpr):
+            return LoadExpr(node.buffer, tuple(rec(i) for i in node.indices))
+        raise LayoutError(f"Unknown node {node!r}")
+
+    out = rec(e)
+    sv = static_eval(out)
+    return sv if sv is not None else out
+
+
+def _substitute_eval(e: Expr, env: Dict[str, int]) -> Optional[int]:
+    out = _substitute(e, env)
+    if isinstance(out, Expr):
+        return static_eval(out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Common layout constructors
+# ---------------------------------------------------------------------------
+
+
+def row_major(shape: Sequence[int]) -> Layout:
+    """Standard C-order linearization ``(i0,..,ik) -> i0*s0 + ... + ik``."""
+    ivs = [IterVar.make(f"i{d}", s) for d, s in enumerate(shape)]
+    stride = 1
+    strides = []
+    for s in reversed(shape):
+        strides.append(stride)
+        stride *= int(s)
+    strides = list(reversed(strides))
+    expr: Expr = ConstExpr(0)
+    for iv, st in zip(ivs, strides):
+        expr = expr + iv.var * st
+    return Layout(ivs, (expr,))
+
+
+def strided(shape: Sequence[int], strides: Sequence[int]) -> Layout:
+    ivs = [IterVar.make(f"i{d}", s) for d, s in enumerate(shape)]
+    expr: Expr = ConstExpr(0)
+    for iv, st in zip(ivs, strides):
+        expr = expr + iv.var * int(st)
+    return Layout(ivs, (expr,))
+
+
+def padded(shape: Sequence[int], pad_to: Sequence[int]) -> Layout:
+    """Non-bijective padding layout (paper Fig. 5c): logical (i,j) land in a
+    padded physical box. On TPU this is how non-(sublane,lane)-aligned tiles
+    are physically stored in VMEM."""
+    if len(shape) != len(pad_to):
+        raise LayoutError("padded: rank mismatch")
+    ivs = [IterVar.make(f"i{d}", s) for d, s in enumerate(shape)]
+    fwd = tuple(iv.var + 0 for iv in ivs)  # identity coords in a padded box
+    lay = Layout(ivs, fwd)
+    lay._padded_shape = tuple(int(p) for p in pad_to)  # type: ignore[attr-defined]
+    orig_out_shape = lay.out_shape
+
+    def out_shape():
+        return lay._padded_shape  # type: ignore[attr-defined]
+
+    lay.out_shape = out_shape  # type: ignore[assignment]
+    del orig_out_shape
+    return lay
+
+
+def tiled_2d(shape: Tuple[int, int], tile: Tuple[int, int]) -> Layout:
+    """(i, j) -> (i//ti, j//tj, i%ti, j%tj): blocked storage, the layout the
+    Mosaic compiler gives VMEM arrays ((8,128) native tiling)."""
+    (M, N), (ti, tj) = shape, tile
+    i, j = IterVar.make("i", M), IterVar.make("j", N)
+    fwd = (i.var // ti, j.var // tj, i.var % ti, j.var % tj)
+    return Layout([i, j], fwd)
+
+
+def swizzle_2d(shape: Tuple[int, int], bank_words: int = 0) -> Layout:
+    """XOR-swizzled row-major layout.
+
+    On GPUs this kills shared-memory bank conflicts.  VMEM has no banked
+    access hazards, so on TPU this layout is used only for *grid* traversal
+    reordering (schedule.grid_swizzle) — kept here because the paper's
+    ``T.annotate_layout``/``make_swizzle_layout`` are part of the core
+    algebra and kernels may still request it explicitly.
+    """
+    M, N = shape
+    i, j = IterVar.make("i", M), IterVar.make("j", N)
+    fwd = (i.var, (j.var ^ (i.var % max(1, N))) % N if bank_words == 0 else (j.var ^ (i.var // bank_words)) % N)
+    return Layout([i, j], fwd)
+
+
+# ---------------------------------------------------------------------------
+# Fragment: f : K^n -> (partition, local)
+# ---------------------------------------------------------------------------
+
+
+class Fragment(Layout):
+    """A Layout whose two outputs are *(partition, local_index)*.
+
+    GPU reading: partition = thread id within the block, local = register slot.
+    TPU reading: partition = vreg-tile id within the VMEM tile, local = lane
+    slot inside that vreg tile.  ``replication`` counts how many partitions
+    hold a copy of the same logical element (paper Fig. 7 — bias broadcast).
+    """
+
+    def __init__(self, iter_vars, forward_index, replication: int = 1):
+        if len(tuple(forward_index)) != 2:
+            raise LayoutError("Fragment must produce exactly (partition, local)")
+        super().__init__(iter_vars, forward_index)
+        self.replication = int(replication)
+
+    # -- the paper's four extension primitives (Fig. 6) ------------------------
+    def repeat(self, n: int, axis: int = 0) -> "Fragment":
+        """Tile the fragment n× along a logical axis; new elements land in the
+        *same partitions* with new local slots (single warp consuming more
+        rows; Fig. 6c top)."""
+        ivs, subst, new_var = self._extend_axis(n, axis)
+        part, local = (
+            _substitute(self.forward_index[0], subst),
+            _substitute(self.forward_index[1], subst),
+        )
+        locals_per = self._local_extent()
+        local = wrap(local) + new_var * locals_per
+        return Fragment(ivs, (wrap(part), local), self.replication)
+
+    def repeat_on_thread(self, n: int, axis: int = 0) -> "Fragment":
+        """Tile n× along an axis onto *new partitions* (more warps; local slots
+        unchanged)."""
+        ivs, subst, new_var = self._extend_axis(n, axis)
+        part, local = (
+            _substitute(self.forward_index[0], subst),
+            _substitute(self.forward_index[1], subst),
+        )
+        parts_per = self._partition_extent()
+        part = wrap(part) + new_var * parts_per
+        return Fragment(ivs, (part, wrap(local)), self.replication)
+
+    def replicate(self, n: int) -> "Fragment":
+        """Replicate the whole fragment across n partition groups: every
+        logical element now lives in n partitions (broadcast operands)."""
+        rep = IterVar.make(f"_rep{len(self.iter_vars)}", n)
+        parts_per = self._partition_extent()
+        part = wrap(self.forward_index[0]) + rep.var * parts_per
+        return Fragment(
+            tuple(self.iter_vars) + (rep,),
+            (part, self.forward_index[1]),
+            self.replication * n,
+        )
+
+    def condense(self) -> "Fragment":
+        """Drop replication (inverse of replicate); keeps partition group 0."""
+        if self.replication == 1:
+            return self
+        ivs = self.iter_vars[:-1]
+        env = {self.iter_vars[-1].var.name: 0}
+        fwd = tuple(wrap(_substitute(e, env)) for e in self.forward_index)
+        return Fragment(ivs, fwd, 1)
+
+    # -- helpers ---------------------------------------------------------------
+    def _extend_axis(self, n, axis):
+        if axis >= self.in_rank:
+            raise LayoutError(f"repeat axis {axis} out of range")
+        old = self.iter_vars[axis]
+        new_outer = IterVar.make(f"_o{axis}_{n}", n)
+        merged = IterVar.make(old.var.name, old.extent * n)
+        # merged index m decomposes as m = new_outer*old.extent + old
+        subst = {old.var.name: merged.var % old.extent}
+        ivs = list(self.iter_vars)
+        ivs[axis] = merged
+        new_var = merged.var // old.extent
+        return tuple(ivs), subst, new_var
+
+    def _partition_extent(self) -> int:
+        return int(self.out_shape()[0])
+
+    def _local_extent(self) -> int:
+        return int(self.out_shape()[1])
+
+    def threads(self) -> int:  # paper naming
+        return self._partition_extent()
+
+    def locals_per_thread(self) -> int:
+        return self._local_extent()
+
+
+def vreg_fragment(shape: Tuple[int, int], dtype: str) -> Fragment:
+    """Base TPU fragment: map a logical 2-D tile onto (vreg_tile, lane_slot).
+
+    This is the TPU analogue of the paper's ``mma_ldmatrix`` base layout for
+    m16k16 fragments: the native unit the hardware consumes.  A (sub, 128)
+    vreg tile holds ``sub*128`` elements; tiles are raster-ordered over the
+    logical tile.
+    """
+    sub = sublane(dtype)
+    M, N = shape
+    pm, pn = round_up(M, sub), round_up(N, LANE)
+    tiles_n = pn // LANE
+    i, j = IterVar.make("i", M), IterVar.make("j", N)
+    tile_id = (i.var // sub) * tiles_n + (j.var // LANE)
+    slot = (i.var % sub) * LANE + (j.var % LANE)
+    return Fragment([i, j], (tile_id, slot))
+
+
+def mxu_fragment(dtype: str) -> Fragment:
+    """Fragment for one full MXU matmul tile (128×128)."""
+    return vreg_fragment(MXU, dtype)

@@ -1,0 +1,99 @@
+"""Pipeline parallelism: GPipe-style microbatch schedule over a `stage` mesh
+axis via shard_map + collective_permute.
+
+At the assigned model sizes (1.5–26B on 256 chips), TP×DP covers memory and
+compute comfortably, so PP is not enabled by default (DESIGN.md §5) — but a
+1000+-node deployment adds a stage axis.  This wrapper shows the axis
+composes with the rest of the stack: each stage holds a contiguous slice of
+layers; activations rotate stage→stage+1 each tick; the standard GPipe
+schedule runs M microbatches in M + P - 1 ticks.
+
+`bubble_fraction` quantifies the schedule's idle time — the number the
+1F1B/interleaved variants improve on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def bubble_fraction(num_microbatches: int, num_stages: int) -> float:
+    """GPipe bubble: (P-1) / (M + P - 1)."""
+    m, p = num_microbatches, num_stages
+    return (p - 1) / (m + p - 1)
+
+
+def pipeline_forward(
+    layer_params,  # pytree stacked on leading axis = num_stages*layers_per
+    x,  # (M, micro_batch, ...) microbatched input
+    block_fn: Callable,  # fn(params_slice, x) -> x, applied per stage
+    mesh: Mesh,
+    stage_axis: str = "stage",
+):
+    """Run the stacked layers as `num_stages` pipeline stages over
+    microbatches, using shard_map + ppermute (the canonical JAX PP pattern).
+
+    ``layer_params`` leaves must have leading dim divisible by the stage
+    count; ``x`` must have leading dim = num_microbatches.
+    """
+    num_stages = mesh.shape[stage_axis]
+    m = x.shape[0]
+
+    def split_stages(p):
+        return p.reshape(num_stages, p.shape[0] // num_stages, *p.shape[1:])
+
+    staged = jax.tree.map(split_stages, layer_params)
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(stage_axis), P(None)),
+        out_specs=P(None),
+    )
+    def run(stage_params, xs):
+        # stage_params: (1, layers_per, ...) — this stage's slice
+        stage_params = jax.tree.map(lambda a: a[0], stage_params)
+        idx = jax.lax.axis_index(stage_axis)
+        ticks = m + num_stages - 1
+        # pvary: the carries become stage-varying after the first ppermute,
+        # so the initial values must be marked stage-varying too.
+        buf = jax.lax.pvary(jnp.zeros_like(xs[0]), stage_axis)
+        outs = jax.lax.pvary(jnp.zeros_like(xs), stage_axis)
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (when in range)
+            feed = xs[jnp.clip(t, 0, m - 1)]
+            buf = jnp.where(idx == 0, jnp.where(t < m, feed, buf), buf)
+            # every stage applies its layers
+            def apply_stage(b):
+                def layer(h, p):
+                    return block_fn(p, h), None
+                h, _ = jax.lax.scan(layer, b, stage_params)
+                return h
+            buf = apply_stage(buf)
+            # last stage emits microbatch t-(P-1)
+            out_t = t - (num_stages - 1)
+            emit = jnp.logical_and(idx == num_stages - 1, out_t >= 0)
+            outs = jnp.where(
+                emit,
+                outs.at[jnp.clip(out_t, 0, m - 1)].set(buf),
+                outs,
+            )
+            # rotate: stage i sends to stage i+1
+            buf = jax.lax.ppermute(
+                buf, stage_axis,
+                [(i, (i + 1) % num_stages) for i in range(num_stages)],
+            )
+            return (buf, outs), None
+
+        (buf, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(ticks))
+        # only the last stage holds real outputs; psum-select them
+        outs = jnp.where(idx == num_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, stage_axis)
+
+    return run(staged, x)

@@ -1,0 +1,193 @@
+"""Sharding rules: param PartitionSpecs by pytree path, ZeRO-1 state specs,
+and activation constraints (DP / TP / SP / EP on the (pod, data, model) mesh).
+
+Rules (Megatron-style TP on `model`, pure DP over `pod`×`data`):
+
+====================================  =======================================
+param                                 spec
+====================================  =======================================
+embedding (V, D)                      (model, None)        vocab-sharded
+unembed   (D, V)                      (None, model)
+attn wq/wk/wv (D, H*hd)               (None, model)        column-parallel
+attn wo (H*hd, D)                     (model, None)        row-parallel
+mlp w_gate/w_up (D, F)                (None, model)
+mlp w_down (F, D)                     (model, None)
+moe experts (E, D, F)                 (model, None, None)  EP when E%model==0
+                                      (None, None, model)  else TP-in-expert
+mamba w_z/w_x (D, Di)                 (None, model)
+mamba out_proj (Di, D)                (model, None)
+norms / scalars / small projections   replicated
+====================================  =======================================
+
+ZeRO-1: optimizer state (fp32 masters + moments) additionally shards its
+largest replicated axis over the data(+pod) axes when divisible.
+
+Activations: batch over (pod, data); the residual stream between scanned
+layers is additionally sequence-sharded over `model` (Megatron sequence
+parallelism) so per-layer remat residuals shrink by the TP degree.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], cfg: ModelConfig, mesh: Mesh) -> P:
+    """Sharding rule for a single parameter (path = '/'-joined pytree keys).
+
+    Stacked (scanned) layer params carry a leading L axis -> the rule applies
+    to the trailing dims and the layer axis stays unsharded.
+    """
+    tp = mesh_axis_size(mesh, "model")
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    def spec(*trailing):
+        lead = (None,) * (len(shape) - len(trailing))
+        # drop shardings that don't divide
+        fixed = []
+        for dim, ax in zip(shape[len(shape) - len(trailing):], trailing):
+            if ax is None:
+                fixed.append(None)
+            else:
+                fixed.append(ax if _divisible(dim, tp) else None)
+        return P(*lead, *fixed)
+
+    if name == "embedding":
+        return spec("model", None)
+    if name == "unembed":
+        return spec(None, "model")
+    if name in ("enc_pos", "dec_pos"):
+        return P(*(None,) * len(shape))
+    if name in ("wq", "wk", "wv", "w_q", "w_kpe", "w_dkv", "w_uk", "w_uv"):
+        return spec(None, "model")
+    if name in ("wo", "w_o"):
+        return spec("model", None)
+    if name in ("bq", "bk", "bv"):
+        return spec("model")
+    if name in ("w_gate", "w_up") and parent != "moe":
+        return spec(None, "model")
+    if name == "w_down" and parent != "moe":
+        return spec("model", None)
+    if parent == "moe" or (cfg.moe and name in ("w_gate", "w_up", "w_down") and len(shape) >= 3):
+        # expert weights (.., E, D, F) / (.., E, F, D)
+        e = shape[-3]
+        if name == "router":
+            return P(*(None,) * len(shape))
+        if _divisible(e, tp):
+            return spec("model", None, None)  # EP
+        # TP inside the expert FFN
+        if name in ("w_gate", "w_up"):
+            return spec(None, None, "model")
+        return spec(None, "model", None)
+    if name == "router":
+        return P(*(None,) * len(shape))
+    if name in ("w_z", "w_x"):
+        return spec(None, "model")
+    if name == "out_proj":
+        return spec("model", None)
+    if name in ("w_B", "w_C", "w_dt"):
+        return spec(None, "model")
+    # norms, conv, scalars, biases: replicate
+    return P(*(None,) * len(shape))
+
+
+def param_specs(params_shapes, cfg: ModelConfig, mesh: Mesh):
+    """Pytree of PartitionSpec matching a pytree of ShapeDtypeStruct/arrays."""
+
+    def rule(path, leaf):
+        return param_spec(_path_str(path), tuple(leaf.shape), cfg, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def zero1_specs(opt_shapes, params_specs, mesh: Mesh):
+    """ZeRO-1: shard fp32 masters/moments over the data(+pod) axes on the
+    first axis that is unsharded and divisible."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh_axis_size(mesh, a) for a in dp])) if dp else 1
+
+    def rule(spec: P, leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return P()
+        spec_t = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        out = list(spec_t)
+        for i, (dim, ax) in enumerate(zip(leaf.shape, spec_t)):
+            if ax is None and _divisible(dim, dp_size):
+                out[i] = dp if len(dp) > 1 else dp[0]
+                break
+        return P(*out)
+
+    def map_state(state_tree):
+        return jax.tree.map(rule, params_specs, state_tree)
+
+    return {
+        "master": map_state(opt_shapes["master"]),
+        "m": map_state(opt_shapes["m"]),
+        "v": map_state(opt_shapes["v"]),
+        "step": P(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, batch: int) -> P:
+    """Shard the batch dim over (pod, data) when divisible, else replicate."""
+    dp = dp_axes(mesh)
+    size = int(np.prod([mesh_axis_size(mesh, a) for a in dp])) if dp else 1
+    if dp and _divisible(batch, size):
+        return P(dp if len(dp) > 1 else dp[0])
+    # try data alone (e.g. batch 32 on (2,16,16): 32 % 32 == 0 though)
+    if "data" in mesh.axis_names and _divisible(batch, mesh_axis_size(mesh, "data")):
+        return P("data")
+    return P(None)
+
+
+def tokens_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    b = batch_spec(mesh, batch)
+    return P(*tuple(b), *(None,) * extra_dims)
+
+
+def residual_spec(mesh: Mesh, batch: int, seq: int) -> P:
+    """(B, S, D) residual-stream constraint: batch over dp, sequence over
+    `model` (sequence parallelism) when divisible."""
+    b = batch_spec(mesh, batch)
+    seq_ax = "model" if _divisible(seq, mesh_axis_size(mesh, "model")) else None
+    return P(*tuple(b), seq_ax, None)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

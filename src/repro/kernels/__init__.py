@@ -1,0 +1,19 @@
+# Tile-DSL kernels (paper §5 workloads) + jit'd wrappers + jnp oracles.
+from . import ops, ref
+from .dequant_matmul import dequant_matmul_program
+from .flash_attention import flash_attention_program
+from .linear_attention import chunk_scan_program, chunk_state_program
+from .matmul import matmul_program, tune_matmul
+from .mla import mla_program
+
+__all__ = [
+    "ops",
+    "ref",
+    "matmul_program",
+    "tune_matmul",
+    "flash_attention_program",
+    "mla_program",
+    "dequant_matmul_program",
+    "chunk_state_program",
+    "chunk_scan_program",
+]

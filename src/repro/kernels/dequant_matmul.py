@@ -1,0 +1,124 @@
+"""Weight-only-quantized GEMM in the tile DSL (paper Fig. 15/17).
+
+W_{INT4|INT2|NF4} A_{FP16/FP32}: the packed weight tile streams through a
+shared window, is unpacked to compute dtype *inside the kernel* by a
+vectorized elementwise body, then hits the MXU.  The unpack runs on the VPU
+with shift/mask arithmetic over int lanes — the TPU analogue of the PTX
+``lop3``-based fast dtype conversion the paper cites ([15], Ladder [21]).
+
+NF4 uses the tile-library escape hatch (``T.call_tile_lib``) for its 16-entry
+codebook lookup — the same role ``T.import_source``/``T.ptx`` play on GPUs.
+"""
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import TileProgram
+from repro.core import lang as T
+
+from . import ref as _ref
+
+_PACK = {"int4": 2, "int2": 4, "nf4": 2, "int8": 1}
+
+
+def dequant_matmul_program(
+    M: int,
+    N: int,
+    K: int,
+    fmt: str = "int4",
+    in_dtype: str = "float32",
+    out_dtype: str = "float32",
+    accum_dtype: str = "float32",
+    block_M: int = 64,
+    block_N: int = 64,
+    block_K: int = 64,
+    num_stages: int = 2,
+    with_scales: bool = False,
+) -> TileProgram:
+    """C^T[N, M] = dequant(B)[N, K] @ A[M, K]^T  (paper's transposed layout)."""
+    if fmt not in _PACK:
+        raise ValueError(f"unknown quant format {fmt}")
+    pack = _PACK[fmt]
+    if K % (block_K * pack) and fmt != "int8":
+        raise ValueError("K must divide block_K * pack factor")
+    storage_dtype = "int8"
+    if M % block_M or N % block_N or K % block_K:
+        raise ValueError("blocks must divide problem shape")
+
+    params = dict(
+        A=T.Tensor((M, K), in_dtype),
+        B=T.Tensor((N, K // pack), storage_dtype),
+        Ct=T.Tensor((N, M), out_dtype),
+    )
+    if with_scales:
+        params["Scales"] = T.Tensor((N, K // block_K), in_dtype)
+
+    def body(A, B, Ct, Scales=None):
+        with T.Kernel(T.ceildiv(N, block_N), T.ceildiv(M, block_M), threads=128) as (bx, by):
+            A_shared = T.alloc_shared((block_M, block_K), in_dtype)
+            B_shared = T.alloc_shared((block_N, block_K // pack), storage_dtype)
+            B_local = T.alloc_fragment((block_N, block_K // pack), storage_dtype)
+            B_dequant = T.alloc_fragment((block_N, block_K), in_dtype)
+            Ct_local = T.alloc_fragment((block_N, block_M), accum_dtype)
+            if with_scales:
+                S_shared = T.alloc_shared((block_N, 1), in_dtype)
+
+            T.clear(Ct_local)
+            for k in T.Pipelined(T.ceildiv(K, block_K), num_stages=num_stages):
+                T.copy(A[by * block_M, k * block_K], A_shared)
+                T.copy(B[bx * block_N, k * (block_K // pack)], B_shared)
+                if with_scales:
+                    T.copy(Scales[bx * block_N, k], S_shared)
+                T.copy(B_shared, B_local)
+                if fmt == "int4":
+                    for i, j in T.Parallel(block_N, block_K):
+                        v = (B_local[i, j // 2] >> ((j % 2) * 4)) & 15
+                        v = T.if_then_else(v >= 8, v - 16, v)
+                        B_dequant[i, j] = T.cast(v, in_dtype)
+                elif fmt == "int2":
+                    for i, j in T.Parallel(block_N, block_K):
+                        v = (B_local[i, j // 4] >> ((j % 4) * 2)) & 3
+                        v = T.if_then_else(v >= 2, v - 4, v)
+                        B_dequant[i, j] = T.cast(v, in_dtype)
+                elif fmt == "int8":
+                    for i, j in T.Parallel(block_N, block_K):
+                        B_dequant[i, j] = T.cast(B_local[i, j], in_dtype)
+                else:  # nf4: codebook via the tile-library escape hatch
+
+                    def _nf4_decode(packed):
+                        # scalar select-chain: array constants cannot be
+                        # captured by a Pallas kernel, so the 16-entry
+                        # codebook is inlined as scalar immediates (the VPU
+                        # analogue of an in-register LUT).
+                        idx = jnp.stack(
+                            [packed & 0xF, (packed >> 4) & 0xF], axis=-1
+                        ).reshape(packed.shape[0], -1)
+                        out = jnp.zeros(idx.shape, jnp.float32)
+                        for i, val in enumerate(_ref.NF4_CODEBOOK.tolist()):
+                            out = jnp.where(idx == i, jnp.float32(val), out)
+                        return out.astype(jnp.dtype(in_dtype))
+
+                    T.call_tile_lib(_nf4_decode, B_dequant, B_local, name="nf4_decode")
+                if with_scales:
+                    for i, j in T.Parallel(block_N, block_K):
+                        B_dequant[i, j] = B_dequant[i, j] * S_shared[i, 0]
+                T.gemm(B_dequant, A_shared, Ct_local, transpose_B=True)
+            T.copy(Ct_local, Ct[bx * block_N, by * block_M])
+
+    # build a prim_func with the right signature (scales optional)
+    if with_scales:
+
+        def fn(
+            A: params["A"], B: params["B"], Ct: params["Ct"], Scales: params["Scales"]
+        ):
+            body(A, B, Ct, Scales)
+
+    else:
+
+        def fn(A: params["A"], B: params["B"], Ct: params["Ct"]):
+            body(A, B, Ct)
+
+    fn.__name__ = f"dequant_matmul_{fmt}"
+    fn.__annotations__ = {k: v for k, v in params.items()}
+    return T.prim_func(fn)

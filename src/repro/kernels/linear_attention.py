@@ -1,0 +1,110 @@
+"""Mamba-2 SSD linear attention in the tile DSL (paper Table 4, Fig. 12).
+
+Two kernels, exactly the chunk decomposition of Mamba-2 that the paper
+benchmarks (chunk_state / chunk_scan):
+
+* ``chunk_state``: per-chunk local state  S_c = sum_l exp(dA_L - dA_l) B_l^T x_l
+* ``chunk_scan``:  y_l = exp(dA_l) C_l . S_prev  +  sum_{m<=l} (C_l.B_m) exp(dA_l - dA_m) x_m
+
+The inter-chunk recurrence (a tiny sequential scan over chunk count) runs at
+the JAX level (`ref.state_recurrence`), matching Mamba-2's own structure.
+
+Each grid cell owns one (batch, chunk) pair; all operand tiles stream
+through VMEM windows (Pallas pipelines them across grid steps even without
+an explicit reduction axis).
+"""
+
+from repro.core import TileProgram
+from repro.core import lang as T
+
+
+def chunk_state_program(
+    batch: int,
+    nchunks: int,
+    chunk_l: int,
+    dstate: int,
+    headdim: int,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+) -> TileProgram:
+    @T.prim_func
+    def ChunkState(
+        B: T.Tensor((batch, nchunks, chunk_l, dstate), dtype),
+        X: T.Tensor((batch, nchunks, chunk_l, headdim), dtype),
+        dA: T.Tensor((batch, nchunks, chunk_l), accum_dtype),
+        States: T.Tensor((batch, nchunks, dstate, headdim), accum_dtype),
+    ):
+        with T.Kernel(nchunks, batch, threads=128) as (bc, bz):
+            B_shared = T.alloc_shared((chunk_l, dstate), dtype)
+            X_shared = T.alloc_shared((chunk_l, headdim), dtype)
+            dA_shared = T.alloc_shared((chunk_l,), accum_dtype)
+            B_scaled = T.alloc_fragment((chunk_l, dstate), accum_dtype)
+            S_local = T.alloc_fragment((dstate, headdim), accum_dtype)
+
+            T.copy(B[bz, bc, 0, 0], B_shared)
+            T.copy(X[bz, bc, 0, 0], X_shared)
+            T.copy(dA[bz, bc, 0], dA_shared)
+            for l, n in T.Parallel(chunk_l, dstate):
+                B_scaled[l, n] = B_shared[l, n] * T.exp(
+                    dA_shared[chunk_l - 1] - dA_shared[l]
+                )
+            T.clear(S_local)
+            T.gemm(B_scaled, X_shared, S_local, transpose_A=True)
+            T.copy(S_local, States[bz, bc, 0, 0])
+
+    return ChunkState
+
+
+def chunk_scan_program(
+    batch: int,
+    nchunks: int,
+    chunk_l: int,
+    dstate: int,
+    headdim: int,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+) -> TileProgram:
+    @T.prim_func
+    def ChunkScan(
+        C: T.Tensor((batch, nchunks, chunk_l, dstate), dtype),
+        B: T.Tensor((batch, nchunks, chunk_l, dstate), dtype),
+        X: T.Tensor((batch, nchunks, chunk_l, headdim), dtype),
+        dA: T.Tensor((batch, nchunks, chunk_l), accum_dtype),
+        PrevStates: T.Tensor((batch, nchunks, dstate, headdim), accum_dtype),
+        Y: T.Tensor((batch, nchunks, chunk_l, headdim), dtype),
+    ):
+        with T.Kernel(nchunks, batch, threads=128) as (bc, bz):
+            C_shared = T.alloc_shared((chunk_l, dstate), dtype)
+            B_shared = T.alloc_shared((chunk_l, dstate), dtype)
+            X_shared = T.alloc_shared((chunk_l, headdim), dtype)
+            dA_shared = T.alloc_shared((chunk_l,), accum_dtype)
+            S_shared = T.alloc_shared((dstate, headdim), accum_dtype)
+            att = T.alloc_fragment((chunk_l, chunk_l), accum_dtype)
+            y_acc = T.alloc_fragment((chunk_l, headdim), accum_dtype)
+            c_f32 = T.alloc_fragment((chunk_l, dstate), accum_dtype)
+
+            T.copy(C[bz, bc, 0, 0], C_shared)
+            T.copy(B[bz, bc, 0, 0], B_shared)
+            T.copy(X[bz, bc, 0, 0], X_shared)
+            T.copy(dA[bz, bc, 0], dA_shared)
+            T.copy(PrevStates[bz, bc, 0, 0], S_shared)
+
+            # intra-chunk decay attention: att = tril((C B^T) * exp(dA_l - dA_m))
+            T.clear(att)
+            T.gemm(C_shared, B_shared, att, transpose_B=True)
+            for i, j in T.Parallel(chunk_l, chunk_l):
+                att[i, j] = T.if_then_else(
+                    i >= j,
+                    att[i, j] * T.exp(dA_shared[i] - dA_shared[j]),
+                    0.0,
+                )
+            # y = att @ X  +  exp(dA_l) * (C @ S_prev)
+            T.clear(y_acc)
+            T.gemm(att, X_shared, y_acc)
+            T.copy(C_shared, c_f32)
+            for i, j in T.Parallel(chunk_l, dstate):
+                c_f32[i, j] = c_f32[i, j] * T.exp(dA_shared[i])
+            T.gemm(c_f32, S_shared, y_acc)
+            T.copy(y_acc, Y[bz, bc, 0, 0])
+
+    return ChunkScan

@@ -1,0 +1,81 @@
+"""GEMM in the tile DSL (paper Fig. 16 almost verbatim).
+
+The program is the *dataflow only*: tiles of A and B stream through shared
+(VMEM) windows inside a pipelined reduction loop, accumulating into a
+fragment; scheduling (block shapes, stages, swizzle) arrives via the factory
+arguments and the autotuner.
+"""
+
+from typing import Optional
+
+from repro.core import Schedule, TileProgram, autotune, grid_configs
+from repro.core import lang as T
+
+
+def matmul_program(
+    M: int,
+    N: int,
+    K: int,
+    in_dtype: str = "float32",
+    out_dtype: str = "float32",
+    accum_dtype: str = "float32",
+    block_M: int = 128,
+    block_N: int = 128,
+    block_K: int = 64,
+    num_stages: int = 2,
+    swizzle: Optional[int] = None,
+) -> TileProgram:
+    if M % block_M or N % block_N or K % block_K:
+        raise ValueError(
+            f"matmul {M}x{N}x{K}: blocks ({block_M},{block_N},{block_K}) must divide"
+        )
+
+    @T.prim_func
+    def Matmul(
+        A: T.Tensor((M, K), in_dtype),
+        B: T.Tensor((K, N), in_dtype),
+        C: T.Tensor((M, N), out_dtype),
+    ):
+        with T.Kernel(T.ceildiv(N, block_N), T.ceildiv(M, block_M), threads=128) as (bx, by):
+            A_shared = T.alloc_shared((block_M, block_K), in_dtype)
+            B_shared = T.alloc_shared((block_K, block_N), in_dtype)
+            C_local = T.alloc_fragment((block_M, block_N), accum_dtype)
+            if swizzle:
+                T.use_swizzle(swizzle)
+            T.clear(C_local)
+            for k in T.Pipelined(T.ceildiv(K, block_K), num_stages=num_stages):
+                T.copy(A[by * block_M, k * block_K], A_shared)
+                T.copy(B[k * block_K, bx * block_N], B_shared)
+                T.gemm(A_shared, B_shared, C_local)
+            T.copy(C_local, C[by * block_M, bx * block_N])
+
+    return Matmul
+
+
+def default_configs(M: int, N: int, K: int):
+    """Candidate schedules for the cost-model autotuner."""
+    bms = [b for b in (256, 128, 64, 32) if M % b == 0]
+    bns = [b for b in (256, 128, 64, 32) if N % b == 0]
+    bks = [b for b in (512, 256, 128, 64, 32) if K % b == 0]
+    return grid_configs(
+        block_M=bms or [M],
+        block_N=bns or [N],
+        block_K=bks or [K],
+        num_stages=[2, 3],
+    )
+
+
+def tune_matmul(M, N, K, in_dtype="bfloat16", out_dtype="bfloat16", schedule=None):
+    def build(**cfg):
+        return matmul_program(M, N, K, in_dtype, out_dtype, "float32", **cfg)
+
+    return autotune(
+        build,
+        [
+            c
+            for c in default_configs(M, N, K)
+            if M % c["block_M"] == 0 and N % c["block_N"] == 0 and K % c["block_K"] == 0
+        ],
+        schedule=schedule,
+        cache_key=("matmul", M, N, K, in_dtype),
+    )

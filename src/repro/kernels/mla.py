@@ -1,0 +1,110 @@
+"""FlashMLA in the tile DSL — a near-verbatim port of the paper's Fig. 18.
+
+Multi-head Latent Attention (DeepSeek-V2): all query heads of a group attend
+to one shared latent KV (dim) plus a rotary part (pe_dim); V is the latent
+itself.  The paper reports this kernel at 98% of hand-optimized FlashMLA in
+~70 lines — the headline usability result we reproduce here.
+"""
+
+import math
+from typing import Optional
+
+from repro.core import TileProgram
+from repro.core import lang as T
+
+
+def mla_program(
+    batch: int,
+    heads: int,
+    kv_head_num: int,
+    seqlen_kv: int,
+    dim: int,
+    pe_dim: int,
+    block_N: int = 128,
+    block_H: int = 64,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+    swizzle: Optional[int] = None,
+) -> TileProgram:
+    if seqlen_kv % block_N:
+        raise ValueError("seqlen_kv must divide block_N")
+    kv_group_num = heads // kv_head_num
+    VALID_BLOCK_H = min(block_H, kv_group_num)
+    if heads % VALID_BLOCK_H:
+        raise ValueError("heads must divide the valid head block")
+    scale = (
+        sm_scale if sm_scale is not None else 1.0 / math.sqrt(dim + pe_dim)
+    ) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def FlashMLA(
+        Q: T.Tensor((batch, heads, dim), dtype),
+        Q_pe: T.Tensor((batch, heads, pe_dim), dtype),
+        KV: T.Tensor((batch, seqlen_kv, kv_head_num, dim), dtype),
+        K_pe: T.Tensor((batch, seqlen_kv, kv_head_num, pe_dim), dtype),
+        Output: T.Tensor((batch, heads, dim), dtype),
+    ):
+        with T.Kernel(batch, heads // VALID_BLOCK_H, threads=256) as (bx, by):
+            Q_shared = T.alloc_shared((VALID_BLOCK_H, dim), dtype)
+            S_shared = T.alloc_shared((VALID_BLOCK_H, block_N), dtype)
+            Q_pe_shared = T.alloc_shared((VALID_BLOCK_H, pe_dim), dtype)
+            KV_shared = T.alloc_shared((block_N, dim), dtype)
+            K_pe_shared = T.alloc_shared((block_N, pe_dim), dtype)
+            acc_s = T.alloc_fragment((VALID_BLOCK_H, block_N), accum_dtype)
+            acc_o = T.alloc_fragment((VALID_BLOCK_H, dim), accum_dtype)
+            scores_max = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
+            scores_max_prev = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
+            scores_scale = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
+            scores_sum = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
+            logsum = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
+
+            cur_kv_head = by // (kv_group_num // VALID_BLOCK_H)
+            if swizzle:
+                T.use_swizzle(swizzle)
+
+            T.copy(Q[bx, by * VALID_BLOCK_H : (by + 1) * VALID_BLOCK_H, :], Q_shared)
+            T.copy(
+                Q_pe[bx, by * VALID_BLOCK_H : (by + 1) * VALID_BLOCK_H, :], Q_pe_shared
+            )
+            T.fill(acc_o, 0)
+            T.fill(logsum, 0)
+            T.fill(scores_max, -T.infinity(accum_dtype))
+
+            loop_range = T.ceildiv(seqlen_kv, block_N)
+            for k in T.Pipelined(loop_range, num_stages=num_stages):
+                T.copy(
+                    KV[bx, k * block_N : (k + 1) * block_N, cur_kv_head, :], KV_shared
+                )
+                T.copy(
+                    K_pe[bx, k * block_N : (k + 1) * block_N, cur_kv_head, :],
+                    K_pe_shared,
+                )
+                T.clear(acc_s)
+                T.gemm(Q_shared, KV_shared, acc_s, transpose_B=True)
+                T.gemm(Q_pe_shared, K_pe_shared, acc_s, transpose_B=True)
+                T.copy(scores_max, scores_max_prev)
+                T.fill(scores_max, -T.infinity(accum_dtype))
+                T.reduce_max(acc_s, scores_max, dim=1, clear=False)
+                neg_clamp = -1048576.0
+                for i in T.Parallel(VALID_BLOCK_H):
+                    scores_scale[i] = T.exp2(
+                        T.maximum(scores_max_prev[i], neg_clamp) * scale
+                        - scores_max[i] * scale
+                    )
+                for i, j in T.Parallel(VALID_BLOCK_H, block_N):
+                    acc_s[i, j] = T.exp2(acc_s[i, j] * scale - scores_max[i] * scale)
+                T.reduce_sum(acc_s, scores_sum, dim=1)
+                T.copy(acc_s, S_shared)
+                for i in T.Parallel(VALID_BLOCK_H):
+                    logsum[i] = logsum[i] * scores_scale[i] + scores_sum[i]
+                for i, j in T.Parallel(VALID_BLOCK_H, dim):
+                    acc_o[i, j] = acc_o[i, j] * scores_scale[i]
+                T.gemm(S_shared, KV_shared, acc_o)
+
+            for i, j in T.Parallel(VALID_BLOCK_H, dim):
+                acc_o[i, j] = acc_o[i, j] / logsum[i]
+            T.copy(acc_o, Output[bx, by * VALID_BLOCK_H : (by + 1) * VALID_BLOCK_H, :])
+
+    return FlashMLA

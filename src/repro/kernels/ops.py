@@ -1,0 +1,241 @@
+"""Public kernel API: jit'd wrappers dispatching tile-DSL Pallas kernels or
+the pure-jnp reference (XLA) path.
+
+Backend selection (``kernel_backend``):
+
+* ``"pallas"`` — compile the tile-DSL program via repro.core.  On CPU hosts
+  the kernel runs in Pallas interpreter mode (bit-faithful to the TPU
+  lowering's dataflow); on TPU it is the Mosaic-compiled kernel.
+* ``"xla"``    — the ref.py oracle, letting XLA fuse (used by the model layer
+  for the multi-pod dry-run, where kernels must trace through SPMD
+  partitioning).
+* ``"auto"``   — pallas on TPU, xla elsewhere.
+
+Compiled tile kernels are cached per (kernel, static config) — the TPU
+realization of the paper's "dynamic parameter simplification" for kernel
+libraries: a library entry recompiles per shape bucket and reuses the cached
+schedule.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Schedule, compile as tl_compile
+
+from . import ref
+from .dequant_matmul import dequant_matmul_program
+from .flash_attention import flash_attention_program
+from .linear_attention import chunk_scan_program, chunk_state_program
+from .matmul import matmul_program
+from .mla import mla_program
+
+_DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+_CACHE: dict = {}
+
+
+def default_backend() -> str:
+    if _DEFAULT != "auto":
+        return _DEFAULT
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _cached(key, builder):
+    if key not in _CACHE:
+        _CACHE[key] = tl_compile(builder(), Schedule(interpret=_interpret()))
+    return _CACHE[key]
+
+
+def _resolve(backend: Optional[str]) -> str:
+    return backend or default_backend()
+
+
+def _pick_block(n: int, candidates=(128, 64, 32, 16, 8)) -> int:
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return n
+
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+
+def matmul(a, b, *, out_dtype=None, backend: Optional[str] = None,
+           block_m: Optional[int] = None, block_n: Optional[int] = None,
+           block_k: Optional[int] = None, num_stages: int = 2):
+    out_dtype = out_dtype or a.dtype
+    if _resolve(backend) == "xla":
+        return ref.matmul(a, b, out_dtype)
+    M, K = a.shape
+    _, N = b.shape
+    bm = block_m or _pick_block(M)
+    bn = block_n or _pick_block(N)
+    bk = block_k or _pick_block(K, (256, 128, 64, 32, 16, 8))
+    key = ("matmul", M, N, K, str(a.dtype), str(out_dtype), bm, bn, bk, num_stages)
+    kern = _cached(
+        key,
+        lambda: matmul_program(
+            M, N, K, str(a.dtype), str(jnp.dtype(out_dtype)), "float32",
+            bm, bn, bk, num_stages,
+        ),
+    )
+    return kern(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention(q, k, v, *, causal: bool = False, sm_scale=None,
+              backend: Optional[str] = None, block_m: Optional[int] = None,
+              block_n: Optional[int] = None, num_stages: int = 2, **xla_kw):
+    be = _resolve(backend)
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    bm = block_m or _pick_block(sq)
+    bn = block_n or _pick_block(sk)
+    if (
+        be == "xla"
+        or xla_kw.get("window") is not None
+        or xla_kw.get("kv_len") is not None
+        or xla_kw.get("logit_soft_cap") is not None
+    ):
+        return ref.attention(q, k, v, causal=causal, sm_scale=sm_scale, **xla_kw)
+    key = ("fa", b, hq, hkv, sq, sk, d, causal, str(q.dtype), bm, bn, num_stages)
+    kern = _cached(
+        key,
+        lambda: flash_attention_program(
+            b, hq, hkv, sq, sk, d, causal, bm, bn, str(q.dtype), "float32",
+            num_stages, sm_scale,
+        ),
+    )
+    return kern(q, k, v)
+
+
+def mla(q, q_pe, kv, k_pe, *, sm_scale=None, backend: Optional[str] = None,
+        block_n: Optional[int] = None, block_h: int = 64, num_stages: int = 2):
+    be = _resolve(backend)
+    if be == "xla":
+        return ref.mla(q, q_pe, kv, k_pe, sm_scale=sm_scale)
+    b, h, d = q.shape
+    pe = q_pe.shape[-1]
+    s, hkv = kv.shape[1], kv.shape[2]
+    bn = block_n or _pick_block(s)
+    group = h // hkv
+    bh = min(block_h, group)
+    key = ("mla", b, h, hkv, s, d, pe, str(q.dtype), bn, bh, num_stages)
+    kern = _cached(
+        key,
+        lambda: mla_program(
+            b, h, hkv, s, d, pe, bn, bh, str(q.dtype), "float32", num_stages, sm_scale
+        ),
+    )
+    return kern(q, q_pe, kv, k_pe)
+
+
+# ---------------------------------------------------------------------------
+# Dequantized GEMM
+# ---------------------------------------------------------------------------
+
+
+def dequant_matmul(a, b_packed, *, fmt: str = "int4", scales=None,
+                   backend: Optional[str] = None, block_m: Optional[int] = None,
+                   block_n: Optional[int] = None, block_k: Optional[int] = None,
+                   num_stages: int = 2, out_dtype=None):
+    """Returns A @ dequant(B)^T with B stored (N, K//pack) packed int8.
+
+    Note: the Pallas kernel emits the transposed product Ct[N, M] (paper
+    layout) — we transpose back here so both backends agree on [M, N].
+    """
+    out_dtype = out_dtype or a.dtype
+    be = _resolve(backend)
+    if be == "xla":
+        group = a.shape[1] // scales.shape[1] if scales is not None else 128
+        return ref.dequant_matmul(a, b_packed, fmt, scales, group, out_dtype)
+    M, K = a.shape
+    N = b_packed.shape[0]
+    bm = block_m or _pick_block(M, (64, 32, 16, 8))
+    bn = block_n or _pick_block(N, (64, 32, 16, 8))
+    bk = block_k or _pick_block(K, (128, 64, 32, 16))
+    with_scales = scales is not None
+    if with_scales and scales.shape[1] != K // bk:
+        # kernel constraint: one scale group per K block
+        return ref.dequant_matmul(
+            a, b_packed, fmt, scales, K // scales.shape[1], out_dtype
+        )
+    key = ("dq", fmt, M, N, K, str(a.dtype), bm, bn, bk, num_stages, with_scales)
+    kern = _cached(
+        key,
+        lambda: dequant_matmul_program(
+            M, N, K, fmt, str(a.dtype), str(jnp.dtype(out_dtype)), "float32",
+            bm, bn, bk, num_stages, with_scales,
+        ),
+    )
+    args = (a, b_packed) + ((scales,) if with_scales else ())
+    return kern(*args).T
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+def chunk_state(b_mat, x, da_cum, *, backend: Optional[str] = None):
+    be = _resolve(backend)
+    if be == "xla":
+        return ref.chunk_state(b_mat, x, da_cum)
+    bsz, nc, l, n = b_mat.shape
+    p = x.shape[-1]
+    key = ("cstate", bsz, nc, l, n, p, str(b_mat.dtype))
+    kern = _cached(
+        key, lambda: chunk_state_program(bsz, nc, l, n, p, str(b_mat.dtype))
+    )
+    return kern(b_mat, x, da_cum.astype(jnp.float32))
+
+
+def chunk_scan(c_mat, b_mat, x, da_cum, prev_states, *, backend: Optional[str] = None):
+    be = _resolve(backend)
+    if be == "xla":
+        return ref.chunk_scan(c_mat, b_mat, x, da_cum, prev_states)
+    bsz, nc, l, n = c_mat.shape
+    p = x.shape[-1]
+    key = ("cscan", bsz, nc, l, n, p, str(x.dtype))
+    kern = _cached(
+        key, lambda: chunk_scan_program(bsz, nc, l, n, p, str(x.dtype))
+    )
+    return kern(
+        c_mat, b_mat, x, da_cum.astype(jnp.float32), prev_states.astype(jnp.float32)
+    )
+
+
+def ssd(c_mat, b_mat, x, dt, a_log, *, chunk: int = 64, backend: Optional[str] = None):
+    """Full SSD layer pass composed from the two kernels + the inter-chunk
+    recurrence (tiny lax.scan at the JAX level, as in Mamba-2)."""
+    be = _resolve(backend)
+    if be == "xla":
+        return ref.ssd(c_mat, b_mat, x, dt, a_log, chunk)
+    bsz, s, n = c_mat.shape
+    p = x.shape[-1]
+    nc = s // chunk
+    rs = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:])
+    da = dt * (-jnp.exp(a_log))
+    da_cum = jnp.cumsum(da.reshape(bsz, nc, chunk), axis=-1)
+    states = chunk_state(rs(b_mat), rs(x), da_cum, backend=be)
+    incoming = ref.state_recurrence(states, da_cum[..., -1])
+    y = chunk_scan(rs(c_mat), rs(b_mat), rs(x), da_cum, incoming, backend=be)
+    return y.reshape(bsz, s, p).astype(x.dtype)
+
+
+def rmsnorm(x, weight, eps: float = 1e-6, *, backend: Optional[str] = None):
+    return ref.rmsnorm(x, weight, eps)

@@ -1,0 +1,316 @@
+"""Pure-jnp oracles for every tile-DSL kernel (paper §5 workloads).
+
+These are the ground truth the Pallas lowerings are validated against
+(``interpret=True`` on CPU), and double as the XLA execution path used by
+the model layer when ``kernel_backend="xla"`` (the dry-run path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# GEMM
+# ---------------------------------------------------------------------------
+
+
+def matmul(a: jax.Array, b: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    return jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Weight dequantization (paper Fig. 15/17): packed sub-byte -> compute dtype.
+# Weights are packed along the last axis: int4 -> 2 values/byte,
+# int2 -> 4 values/byte.  NF4 uses the bitsandbytes codebook.
+# ---------------------------------------------------------------------------
+
+NF4_CODEBOOK = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634, 0.33791524171829224,
+        0.44070982933044434, 0.5626170039176941, 0.7229568362236023, 1.0,
+    ],
+    dtype=np.float32,
+)
+
+
+def unpack_int4(packed: jax.Array, signed: bool = True) -> jax.Array:
+    """(..., K//2) int8 -> (..., K) int8 values in [-8, 7] (or [0, 15])."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    vals = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    if signed:
+        vals = jnp.where(vals >= 8, vals - 16, vals)
+    return vals.astype(jnp.int8)
+
+
+def unpack_int2(packed: jax.Array, signed: bool = True) -> jax.Array:
+    """(..., K//4) int8 -> (..., K) int8 values in [-2, 1] (or [0, 3])."""
+    parts = [(packed >> (2 * i)) & 0x3 for i in range(4)]
+    vals = jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], -1)
+    if signed:
+        vals = jnp.where(vals >= 2, vals - 4, vals)
+    return vals.astype(jnp.int8)
+
+
+def unpack_nf4(packed: jax.Array) -> jax.Array:
+    """(..., K//2) uint8-packed NF4 -> (..., K) float32 codebook values."""
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    idx = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    return jnp.asarray(NF4_CODEBOOK)[idx]
+
+
+def dequant_matmul(
+    a: jax.Array,
+    b_packed: jax.Array,
+    fmt: str = "int4",
+    scales: Optional[jax.Array] = None,
+    group_size: int = 128,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """A[M,K] @ dequant(B_packed)[N,K]^T -> [M,N].
+
+    B is stored N-major with the K axis packed (weight-only quantization,
+    the W_{INTx}A_{FP16} layout of the paper).  ``scales`` is (N, K//group)
+    per-group scaling.
+    """
+    if fmt == "int4":
+        w = unpack_int4(b_packed).astype(jnp.float32)
+    elif fmt == "int2":
+        w = unpack_int2(b_packed).astype(jnp.float32)
+    elif fmt == "nf4":
+        w = unpack_nf4(b_packed)
+    elif fmt == "int8":
+        w = b_packed.astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown dequant format {fmt}")
+    if scales is not None:
+        n, k = w.shape
+        w = w.reshape(n, k // group_size, group_size) * scales[..., None].astype(
+            jnp.float32
+        )
+        w = w.reshape(n, k)
+    acc = jax.lax.dot_general(
+        a.astype(jnp.float32),
+        w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# FlashAttention (MHA/GQA, optional causal) — paper Table 3
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(q, k, v, q_offset, sk_total, causal, sm_scale, logit_soft_cap,
+                kv_len, window):
+    """Attention for a block of queries at absolute offset ``q_offset``."""
+    sq = q.shape[2]
+    sk = k.shape[2]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    if logit_soft_cap is not None:
+        s = logit_soft_cap * jnp.tanh(s / logit_soft_cap)
+    mask = None
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    if causal:
+        mask = qi >= ki
+    if window is not None:
+        wmask = (qi - ki) < window
+        mask = wmask if mask is None else (mask & wmask)
+    if kv_len is not None:
+        lmask = (ki < kv_len[:, None])[:, None, None, :]
+        s = jnp.where(lmask, s, -jnp.inf)
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+# query-chunk size above which the S^2 logits tensor is streamed through a
+# lax.map (bounds peak memory for long-context prefill)
+CHUNKED_THRESHOLD = 8192
+Q_CHUNK = 512
+
+
+def attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,  # (B, Hkv, Sk, D)
+    causal: bool = False,
+    sm_scale: Optional[float] = None,
+    logit_soft_cap: Optional[float] = None,
+    kv_len: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    out_dtype=None,
+    q_chunk: Optional[int] = None,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    sk = k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(d)
+    if hq != hkv:
+        assert hq % hkv == 0
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    off = sk - sq  # query absolute offset (suffix convention)
+    chunk = q_chunk or (Q_CHUNK if sq >= CHUNKED_THRESHOLD else None)
+    if chunk is not None and sq % chunk == 0 and sq > chunk:
+        nq = sq // chunk
+
+        def chunk_fn(i):
+            qs = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=2)
+            return _attn_block(
+                qs, k, v, i * chunk + off, sk, causal, sm_scale,
+                logit_soft_cap, kv_len, window,
+            )
+
+        out = jax.lax.map(chunk_fn, jnp.arange(nq))  # (nq, b, h, chunk, dv)
+        # note: dv (v head dim) can differ from d (q/k dim), e.g. MLA
+        out = jnp.moveaxis(out, 0, 2).reshape(b, hq, sq, v.shape[-1])
+    else:
+        out = _attn_block(
+            q, k, v, off, sk, causal, sm_scale, logit_soft_cap, kv_len, window
+        )
+    return out.astype(out_dtype or q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (paper Fig. 14/18): queries attend to a shared
+# latent KV (dim) + rotary part (pe_dim); V is the latent itself.
+# ---------------------------------------------------------------------------
+
+
+def mla(
+    q: jax.Array,  # (B, Hq, D)
+    q_pe: jax.Array,  # (B, Hq, Dpe)
+    kv: jax.Array,  # (B, S, Hkv, D)
+    k_pe: jax.Array,  # (B, S, Hkv, Dpe)
+    sm_scale: Optional[float] = None,
+    out_dtype=None,
+) -> jax.Array:
+    b, hq, d = q.shape
+    s_len = kv.shape[1]
+    hkv = kv.shape[2]
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(d + q_pe.shape[-1])
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    qpeg = q_pe.reshape(b, hkv, group, -1).astype(jnp.float32)
+    kvf = kv.astype(jnp.float32)
+    kpef = k_pe.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, kvf)
+    scores += jnp.einsum("bhgp,bshp->bhgs", qpeg, kpef)
+    p = jax.nn.softmax(scores * sm_scale, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, kvf)
+    return out.reshape(b, hq, d).astype(out_dtype or q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD chunked linear attention (paper Table 4: chunk_state/chunk_scan)
+# ---------------------------------------------------------------------------
+
+
+def chunk_cumsum(dt: jax.Array, a_log: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """dt (B,H,L), a_log (H,) -> per-chunk cumulative decay dA_cum (B,H,L)."""
+    da = dt * (-jnp.exp(a_log))[None, :, None]
+    return jnp.cumsum(da, axis=-1), da
+
+
+def chunk_state(
+    b_mat: jax.Array,  # (B, C, L, N)   "B" projections per chunk
+    x: jax.Array,  # (B, C, L, P)   values
+    da_cum: jax.Array,  # (B, C, L)      cumulative decay within chunk
+) -> jax.Array:
+    """Per-chunk state: S = sum_l exp(dA_last - dA_l) * B_l^T x_l  -> (B,C,N,P)."""
+    decay = jnp.exp(da_cum[..., -1:] - da_cum)  # (B,C,L)
+    bw = b_mat.astype(jnp.float32) * decay[..., None]
+    return jnp.einsum("bcln,bclp->bcnp", bw, x.astype(jnp.float32))
+
+
+def chunk_scan(
+    c_mat: jax.Array,  # (B, C, L, N)   "C" projections
+    b_mat: jax.Array,  # (B, C, L, N)
+    x: jax.Array,  # (B, C, L, P)
+    da_cum: jax.Array,  # (B, C, L)
+    prev_states: jax.Array,  # (B, C, N, P)  inter-chunk states (already recurred)
+) -> jax.Array:
+    """Within-chunk scan + contribution of the carried state -> (B,C,L,P)."""
+    cf = c_mat.astype(jnp.float32)
+    bf = b_mat.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    l = x.shape[2]
+    # inter-chunk: y_inter[l] = exp(dA_l) * C_l . S_prev
+    y_inter = jnp.einsum("bcln,bcnp->bclp", cf, prev_states) * jnp.exp(da_cum)[..., None]
+    # intra-chunk: masked decay attention
+    seg = da_cum[..., :, None] - da_cum[..., None, :]  # (B,C,L,L) dA_l - dA_m
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    att = jnp.einsum("bcln,bcmn->bclm", cf, bf) * jnp.exp(jnp.where(mask, seg, 0.0))
+    att = jnp.where(mask, att, 0.0)
+    y_intra = jnp.einsum("bclm,bcmp->bclp", att, xf)
+    return (y_inter + y_intra).astype(x.dtype)
+
+
+def state_recurrence(states: jax.Array, da_chunk: jax.Array) -> jax.Array:
+    """Carry states across chunks: S'_c = exp(dA_chunk_c) S'_{c-1} + S_c.
+
+    ``states`` (B,C,N,P) are per-chunk local states; ``da_chunk`` (B,C) is the
+    total decay of each chunk.  Returns the *incoming* state for each chunk.
+    """
+
+    def step(carry, inp):
+        s_local, decay = inp
+        new = carry * jnp.exp(decay)[..., None, None] + s_local
+        return new, carry  # emit the incoming state
+
+    b, c, n, p = states.shape
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(da_chunk, 1, 0))
+    init = jnp.zeros((b, n, p), jnp.float32)
+    _, incoming = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(incoming, 0, 1)
+
+
+def ssd(
+    c_mat: jax.Array,  # (B, S, N) shared across heads here; callers vmap heads
+    b_mat: jax.Array,
+    x: jax.Array,  # (B, S, P)
+    dt: jax.Array,  # (B, S)
+    a_log: jax.Array,  # scalar per head
+    chunk: int = 64,
+) -> jax.Array:
+    """Full SSD pass (reference composition of the two kernels)."""
+    bsz, s, n = c_mat.shape
+    p = x.shape[-1]
+    nc = s // chunk
+    rs = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:])
+    da = dt * (-jnp.exp(a_log))
+    da_cum = jnp.cumsum(da.reshape(bsz, nc, chunk), axis=-1)
+    states = chunk_state(rs(b_mat), rs(x), da_cum)
+    incoming = state_recurrence(states, da_cum[..., -1])
+    y = chunk_scan(rs(c_mat), rs(b_mat), rs(x), da_cum, incoming)
+    return y.reshape(bsz, s, p)
+
+
+# ---------------------------------------------------------------------------
+# Fused RMSNorm (bonus beyond-paper kernel used by the model layer)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,2 @@
+# launch: production meshes, cell definitions (arch x shape), dry-run driver,
+# train/serve entrypoints.

@@ -1,0 +1,43 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state.  The dry-run host forces 512 placeholder CPU
+devices; the single-pod mesh uses the first 256 of them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax."
+        )
+    if len(devices) == need:
+        return jax.make_mesh(shape, axes)
+    # more devices than needed (512 host devices, single-pod 256): slice
+    dev = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many real devices exist (tests)."""
+    import jax
+    from jax.sharding import Mesh
+
+    devices = jax.devices()[: data * model]
+    dev = np.asarray(devices).reshape(data, model)
+    return Mesh(dev, ("data", "model"))

@@ -1,0 +1,146 @@
+"""End-to-end training driver.
+
+On this CPU container it runs reduced configs on a 1×1 debug mesh (the
+examples use it to train a ~small model for a few hundred steps); on real
+hardware the same code paths run against ``make_production_mesh``.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2_1_5b \
+        --steps 50 --batch 8 --seq 128 --reduced --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticTokens, make_loader
+from repro.distributed import sharding as shd
+from repro.distributed.fault import FaultConfig, run_with_recovery
+from repro.launch import cells as C
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.models import encdec, lm
+from repro.optim import AdamWConfig, init_opt_state
+
+
+def named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def build_state(cfg, mesh, key):
+    mod = encdec if cfg.is_encoder_decoder else lm
+    params = mod.init(cfg, key)
+    opt = init_opt_state(params)
+    return {"params": params, "opt": opt}
+
+
+def state_specs(cfg, mesh, state):
+    pspecs = shd.param_specs(state["params"], cfg, mesh)
+    oz = shd.zero1_specs(state["opt"], pspecs, mesh)
+    return {"params": pspecs, "opt": oz}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--mesh", default="debug", choices=["debug", "single_pod", "multi_pod"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-interval", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--failure-prob", type=float, default=0.0,
+                    help="per-step injected failure probability (FT demo)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.mesh == "debug":
+        mesh = make_debug_mesh(1, 1)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi_pod")
+
+    cell = C.Cell("cli", "train", args.seq, args.batch)
+    adamw = AdamWConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps)
+    key = jax.random.PRNGKey(args.seed)
+
+    with mesh:
+        state = build_state(cfg, mesh, key)
+        specs = state_specs(cfg, mesh, state)
+        state = jax.device_put(state, named(mesh, specs))
+        dspecs = C.data_specs(cfg, cell, mesh)
+        step_fn = C.make_train_step(cfg, mesh, cell, adamw=adamw,
+                                    logits_chunk=0)
+        jit_step = jax.jit(
+            step_fn,
+            in_shardings=(named(mesh, specs), named(mesh, dspecs)),
+            out_shardings=(named(mesh, specs), None),
+            donate_argnums=(0,),
+        )
+
+        data_cfg = DataConfig(batch=args.batch, seq=args.seq,
+                              vocab_size=cfg.vocab_size, seed=args.seed)
+        dataset = SyntheticTokens(data_cfg)
+
+        def loader_factory(start):
+            return make_loader(dataset, start)
+
+        ckpt = CheckpointManager(args.ckpt_dir, interval=args.ckpt_interval)
+        fault = FaultConfig(failure_prob=args.failure_prob, seed=args.seed)
+
+        losses = []
+
+        def logged_step(state, batch):
+            nonlocal losses
+            t0 = time.time()
+            if cfg.is_encoder_decoder:
+                batch = dict(batch)
+                batch["frames"] = jnp.zeros(
+                    (args.batch, cfg.frontend_seq, cfg.d_model), cfg.dtype
+                )
+            elif cfg.frontend != "none":
+                batch = dict(batch)
+                batch["prefix_embeds"] = jnp.zeros(
+                    (args.batch, cfg.frontend_seq, cfg.d_model), cfg.dtype
+                )
+            state, metrics = jit_step(state, batch)
+            losses.append(float(metrics["loss"]))
+            n = len(losses)
+            if n % args.log_every == 0:
+                dt = time.time() - t0
+                print(
+                    f"step {n:5d}  loss {losses[-1]:.4f}  "
+                    f"lr {float(metrics['lr']):.2e}  "
+                    f"gnorm {float(metrics['grad_norm']):.3f}  {dt*1e3:.0f} ms"
+                )
+            return state, metrics
+
+        result = run_with_recovery(
+            logged_step, state, loader_factory, args.steps, ckpt,
+            shardings=named(mesh, specs), fault=fault,
+        )
+        ckpt.wait()
+        print(
+            f"done: {result['steps']} steps, {result['restarts']} restarts, "
+            f"final loss {float(result['last_metrics']['loss']):.4f}"
+        )
+        return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,597 @@
+"""Composable model layers (pure functions over param pytrees).
+
+Every block exists in two execution modes:
+
+* full-sequence (training / prefill) — uses the tile-DSL kernels through
+  ``repro.kernels.ops`` when ``kernel_backend`` allows, else the XLA path;
+* single-token decode — operates against static-shape caches (contiguous KV,
+  ring-buffer KV for sliding windows, SSM state for Mamba).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Sharding hints: step builders install activation constraints that apply
+# while their step function traces (GSPMD needs interior hints when the
+# natural propagation would replicate — e.g. attention with head counts not
+# divisible by the TP degree, or MoE expert buffers).
+# ---------------------------------------------------------------------------
+
+import contextlib
+
+_HINT_STACK: list = []
+
+
+@contextlib.contextmanager
+def shard_hints(**hooks):
+    """hooks: name -> fn(x) -> x (usually with_sharding_constraint)."""
+    _HINT_STACK.append(hooks)
+    try:
+        yield
+    finally:
+        _HINT_STACK.pop()
+
+
+def _hint(name: str, x):
+    for h in reversed(_HINT_STACK):
+        if name in h and h[name] is not None:
+            return h[name](x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Norm / embeddings / rope
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, weight, eps=1e-6):
+    return ops.rmsnorm(x, weight, eps)
+
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    k1, k2 = _split(key, 2)
+    p = {"embedding": _dense_init(k1, cfg.vocab_size, cfg.d_model, cfg.dtype, 1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(k2, cfg.d_model, cfg.vocab_size, cfg.dtype)
+    return p
+
+
+def embed(params: Params, tokens):
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed(params: Params, x, cfg: ModelConfig):
+    w = params.get("unembed")
+    if w is None:
+        w = params["embedding"].T
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    inv, rot = rope_freqs(d, theta, fraction)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    if x.ndim == ang.ndim + 1:  # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(*x1.shape[:-1], rot)
+    if rot < d:
+        out = jnp.concatenate([out, x[..., rot:].astype(jnp.float32)], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = _split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], d, h * hd, cfg.dtype),
+        "wk": _dense_init(ks[1], d, hkv * hd, cfg.dtype),
+        "wv": _dense_init(ks[2], d, hkv * hd, cfg.dtype),
+        "wo": _dense_init(ks[3], h * hd, d, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), cfg.dtype)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    return (
+        q.reshape(b, s, h, hd),
+        k.reshape(b, s, hkv, hd),
+        v.reshape(b, s, hkv, hd),
+    )
+
+
+def attention_full(params, x, cfg: ModelConfig, positions, window=None,
+                   rope_fraction=1.0):
+    """Full-sequence causal attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta, rope_fraction)
+    k = apply_rope(k, positions, cfg.rope_theta, rope_fraction)
+    qt = _hint("attn_q", q.transpose(0, 2, 1, 3))
+    kt = _hint("attn_kv", k.transpose(0, 2, 1, 3))
+    vt = _hint("attn_kv", v.transpose(0, 2, 1, 3))
+    out = ops.attention(
+        qt, kt, vt, causal=True, window=window,
+        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+        logit_soft_cap=cfg.logit_soft_cap,
+    )
+    out = _hint("attn_q", out)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window=None):
+    size = min(max_len, window) if window else max_len
+    return {
+        "k": jnp.zeros((batch, cfg.num_kv_heads, size, cfg.head_dim), cfg.dtype),
+        "v": jnp.zeros((batch, cfg.num_kv_heads, size, cfg.head_dim), cfg.dtype),
+    }
+
+
+def attention_decode(params, x, cfg: ModelConfig, cache, pos, window=None,
+                     rope_fraction=1.0):
+    """One-token decode.  ``pos`` is the absolute position — a scalar (lockstep
+    batch) or an (B,) vector (continuous batching: every slot at its own
+    position).  The cache is contiguous, or a ring buffer when ``window``."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)  # (b, 1, ...)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = posb[:, None]
+    q = apply_rope(q, posv, cfg.rope_theta, rope_fraction)
+    k = apply_rope(k, posv, cfg.rope_theta, rope_fraction)
+    size = cache["k"].shape[2]
+    slot = (posb % size) if window else jnp.minimum(posb, size - 1)
+
+    def upd(c, u, s):  # per-batch-row dynamic update at its own slot
+        return jax.lax.dynamic_update_slice(c, u, (0, s, 0))
+
+    knew = jax.vmap(upd)(cache["k"], k.transpose(0, 2, 1, 3), slot)
+    vnew = jax.vmap(upd)(cache["v"], v.transpose(0, 2, 1, 3), slot)
+    kv_len = jnp.minimum(posb + 1, size)
+    qt = q.transpose(0, 2, 1, 3)
+    out = ref.attention(
+        qt, knew, vnew, causal=False, kv_len=kv_len,
+        logit_soft_cap=cfg.logit_soft_cap,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    proj = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
+    return proj, {"k": knew, "v": vnew}
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = _split(key, 6)
+    qd = h * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+    p = {
+        "w_dkv": _dense_init(ks[0], d, m.kv_lora_rank, cfg.dtype),
+        "w_kpe": _dense_init(ks[1], d, m.qk_rope_head_dim, cfg.dtype),
+        "w_uk": _dense_init(ks[2], m.kv_lora_rank, h * m.qk_nope_head_dim, cfg.dtype),
+        "w_uv": _dense_init(ks[3], m.kv_lora_rank, h * m.v_head_dim, cfg.dtype),
+        "w_o": _dense_init(ks[4], h * m.v_head_dim, d, cfg.dtype),
+        "w_q": _dense_init(ks[5], d, qd, cfg.dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), cfg.dtype),
+    }
+    return p
+
+
+def mla_full(params, x, cfg: ModelConfig, positions):
+    """Training/prefill MLA: expand the latent into per-head K/V."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"]).reshape(
+        b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    c_kv = rmsnorm(jnp.einsum("bsd,de->bse", x, params["w_dkv"]), params["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(
+        jnp.einsum("bsd,de->bse", x, params["w_kpe"]), positions, cfg.rope_theta
+    )
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, params["w_uk"]).reshape(
+        b, s, h, m.qk_nope_head_dim
+    )
+    v = jnp.einsum("bsr,re->bse", c_kv, params["w_uv"]).reshape(b, s, h, m.v_head_dim)
+    k_pe_h = jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, m.qk_rope_head_dim))
+    qfull = jnp.concatenate([q_nope, q_pe], axis=-1).transpose(0, 2, 1, 3)
+    kfull = jnp.concatenate([k_nope, k_pe_h], axis=-1).transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    sm = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    out = ops.attention(
+        qfull, kfull, vt, causal=True, sm_scale=sm,
+        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    return jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["w_o"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, 1, m.kv_lora_rank), cfg.dtype),
+        "k_pe": jnp.zeros((batch, max_len, 1, m.qk_rope_head_dim), cfg.dtype),
+    }
+
+
+def mla_decode(params, x, cfg: ModelConfig, cache, pos):
+    """Latent-cache decode: absorb W_uk into q and attend in latent space —
+    the FlashMLA serving path (paper Fig. 18), backed by our MLA kernel."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"]).reshape(
+        b, h, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = posb[:, None]
+    q_pe = apply_rope(
+        q_pe.reshape(b, 1, h, m.qk_rope_head_dim), posv, cfg.rope_theta
+    ).reshape(b, h, m.qk_rope_head_dim)
+    c_kv = rmsnorm(
+        jnp.einsum("bd,de->be", x[:, 0], params["w_dkv"]), params["kv_norm"], cfg.norm_eps
+    )
+    k_pe = apply_rope(
+        jnp.einsum("bd,de->be", x[:, 0], params["w_kpe"]).reshape(b, 1, -1),
+        posv,
+        cfg.rope_theta,
+    )
+
+    def upd(c, u, s):  # per-row write at its own position
+        return jax.lax.dynamic_update_slice(c, u, (s, 0, 0))
+
+    cache_ckv = jax.vmap(upd)(cache["c_kv"], c_kv[:, None, None, :], posb)
+    cache_kpe = jax.vmap(upd)(cache["k_pe"], k_pe[:, :, None, :], posb)
+    # absorb: q_latent[h, r] = q_nope[h, n] @ w_uk[r, h*n]
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    sm = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # attend over the latent cache (mask positions beyond pos via kv_len)
+    out_lat = _mla_masked(
+        q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), cache_ckv, cache_kpe,
+        pos + 1, sm, cfg,
+    )
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", out_lat.astype(jnp.float32), w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    proj = jnp.einsum("bse,ed->bsd", out, params["w_o"])
+    return proj, {"c_kv": cache_ckv, "k_pe": cache_kpe}
+
+
+def _mla_masked(q_lat, q_pe, c_kv, k_pe, kv_len, sm_scale, cfg):
+    """Latent attention with a length mask (XLA path; the Pallas MLA kernel
+    is used by the serving engine when the cache is exactly full)."""
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), c_kv[:, :, 0].astype(jnp.float32))
+        + jnp.einsum("bhp,bsp->bhs", q_pe.astype(jnp.float32), k_pe[:, :, 0].astype(jnp.float32))
+    )
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (scores.shape[0],))
+    mask = jnp.arange(c_kv.shape[1])[None, None, :] < kv_len[:, None, None]
+    scores = jnp.where(mask, scores * sm_scale, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", p, c_kv[:, :, 0].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff=None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = _split(key, 3)
+    if cfg.act in ("silu", "geglu"):
+        return {
+            "w_gate": _dense_init(ks[0], cfg.d_model, d_ff, cfg.dtype),
+            "w_up": _dense_init(ks[1], cfg.d_model, d_ff, cfg.dtype),
+            "w_down": _dense_init(ks[2], d_ff, cfg.d_model, cfg.dtype),
+        }
+    return {
+        "w_up": _dense_init(ks[0], cfg.d_model, d_ff, cfg.dtype),
+        "w_down": _dense_init(ks[1], d_ff, cfg.d_model, cfg.dtype),
+    }
+
+
+def mlp(params: Params, x, cfg: ModelConfig):
+    if "w_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        act = jax.nn.gelu(g) if cfg.act == "geglu" else jax.nn.silu(g)
+        h = act * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["w_up"]))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# MoE (GShard-style capacity dispatch; EP- or TP-shardable expert weights)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    mo = cfg.moe
+    d, fe, e = cfg.d_model, mo.d_ff_expert, mo.num_experts
+    ks = _split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": _dense_init(ks[0], d, e, "float32"),
+        "w_gate": (jax.random.normal(ks[1], (e, d, fe), jnp.float32) * scale).astype(cfg.dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, fe), jnp.float32) * scale).astype(cfg.dtype),
+        "w_down": (jax.random.normal(ks[3], (e, fe, d), jnp.float32) / math.sqrt(fe)).astype(cfg.dtype),
+    }
+    if mo.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=mo.num_shared_experts * fe)
+    return p
+
+
+def _moe_groups(t: int, batch: int) -> int:
+    """Dispatch-group count: groups align with the data-parallel shards so
+    every scatter/gather is shard-local (GShard grouping).  Must divide t."""
+    for g in (16, 8, 4, 2):
+        if t % g == 0 and t // g >= 1:
+            return g
+    return 1
+
+
+def moe(params: Params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).
+
+    Capacity-based top-k routing with **grouped scatter/gather dispatch**
+    (GShard grouping): tokens are split into G groups (aligned with the
+    data shards), each group scatters into its own (E, cap_g) expert
+    buffers via a vmapped (batched) scatter — so the SPMD partitioner sees
+    a scatter with a leading batch dim and never rewrites it into a
+    cross-shard one-hot contraction.  Expert buffers (G, E, cap_g, D) shard
+    G over data and E over `model` (EP) when E divides; dispatch cost stays
+    O(T·k·D) and all shapes are static."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = mo.num_experts, mo.experts_per_token
+    G = _moe_groups(t, b)
+    tg = t // G
+    cap = max(1, int(mo.capacity_factor * tg * k / e))
+    xg = x.reshape(G, tg, d)
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G, tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    # position of each (token, slot) within its expert queue, per group
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (G, tg, k, e)
+    flat = onehot.reshape(G, tg * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.sum(pos_in_expert * flat, axis=-1)  # (G, tg*k)
+    keep = (pos < cap).astype(x.dtype)
+    slot = jnp.clip(pos, 0, cap - 1)
+    eidx = gate_idx.reshape(G, tg * k)
+
+    # batched scatter: every group's tokens land in its own expert buffers
+    updates = (
+        xg[:, :, None, :] * keep.reshape(G, tg, k)[..., None]
+    ).reshape(G, tg * k, d)
+
+    def scatter_one(ei, sl, upd):
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        return buf.at[ei, sl].add(upd, mode="drop")
+
+    expert_in = jax.vmap(scatter_one)(eidx, slot, updates)  # (G, e, cap, d)
+    expert_in = _hint("moe_expert", expert_in)
+    g_ = jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+    h = jax.nn.silu(g_) * u
+    expert_out = _hint(
+        "moe_expert", jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    )
+
+    def gather_one(buf, ei, sl):
+        return buf[ei, sl]  # (tg*k, d)
+
+    gathered = jax.vmap(gather_one)(expert_out, eidx, slot)
+    wts = (gate_vals.reshape(G, tg * k) * keep)[..., None].astype(gathered.dtype)
+    out = jnp.sum((gathered * wts).reshape(G, tg, k, d), axis=2)
+    out = out.reshape(t, d)
+    if "shared" in params:
+        out = out + mlp(params["shared"], x.reshape(t, d), cfg)
+    # load-balance auxiliary loss (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_prob) * e * mo.router_aux_weight
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) layer
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    # separate projections (not one fused in_proj) so each shards cleanly:
+    # z/x column-parallel over d_inner, B/C/dt small (replicated or sharded)
+    sm = cfg.ssm
+    d = cfg.d_model
+    di = sm.d_inner(d)
+    nh = sm.num_heads(d)
+    conv_dim = di + 2 * sm.state_dim
+    ks = _split(key, 7)
+    return {
+        "w_z": _dense_init(ks[0], d, di, cfg.dtype),
+        "w_x": _dense_init(ks[1], d, di, cfg.dtype),
+        "w_B": _dense_init(ks[2], d, sm.state_dim, cfg.dtype),
+        "w_C": _dense_init(ks[3], d, sm.state_dim, cfg.dtype),
+        "w_dt": _dense_init(ks[4], d, nh, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[5], (sm.conv_width, conv_dim), jnp.float32) * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), cfg.dtype),
+        "out_proj": _dense_init(ks[6], di, d, cfg.dtype),
+    }
+
+
+def _mamba_proj(params, x):
+    z = jnp.einsum("...d,de->...e", x, params["w_z"])
+    xin = jnp.einsum("...d,de->...e", x, params["w_x"])
+    B = jnp.einsum("...d,de->...e", x, params["w_B"])
+    C = jnp.einsum("...d,de->...e", x, params["w_C"])
+    dt = jnp.einsum("...d,de->...e", x, params["w_dt"])
+    return z, xin, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, C); depthwise causal conv, width W."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + b)
+
+
+def mamba2_full(params: Params, x, cfg: ModelConfig):
+    sm = cfg.ssm
+    b, s, d = x.shape
+    di = sm.d_inner(d)
+    nh = sm.num_heads(d)
+    z, xin, B, C, dt = _mamba_proj(params, x)
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xin, B, C = jnp.split(conv_out, [di, di + sm.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b,s,nh)
+    # fold heads into batch for the SSD kernels
+    xh = xin.reshape(b, s, nh, sm.head_dim).transpose(0, 2, 1, 3).reshape(b * nh, s, sm.head_dim)
+    Bh = jnp.broadcast_to(B[:, None], (b, nh, s, sm.state_dim)).reshape(
+        b * nh, s, sm.state_dim
+    )
+    Ch = jnp.broadcast_to(C[:, None], (b, nh, s, sm.state_dim)).reshape(
+        b * nh, s, sm.state_dim
+    )
+    dth = dt.transpose(0, 2, 1).reshape(b * nh, s)
+    a_log = jnp.broadcast_to(params["a_log"][None], (b, nh)).reshape(b * nh)
+    chunk = min(sm.chunk, s)
+    if s % chunk:
+        chunk = math.gcd(s, chunk) or 1
+    y = _ssd_batched(Ch, Bh, xh * dth[..., None].astype(xh.dtype), dth, a_log, chunk, cfg)
+    y = y.reshape(b, nh, s, sm.head_dim)
+    y = y + params["d_skip"][None, :, None, None] * xh.reshape(b, nh, s, sm.head_dim)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out_proj"])
+
+
+def _ssd_batched(c, bm, x, dt, a_log, chunk, cfg: ModelConfig):
+    """SSD with per-batch a_log (heads folded into batch)."""
+    be = cfg.kernel_backend if cfg.kernel_backend != "auto" else None
+    bsz, s, n = c.shape
+    p = x.shape[-1]
+    nc = s // chunk
+    rs = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:])
+    da = dt * (-jnp.exp(a_log))[:, None]
+    da_cum = jnp.cumsum(da.reshape(bsz, nc, chunk), axis=-1)
+    states = ops.chunk_state(rs(bm), rs(x), da_cum, backend=be)
+    incoming = ref.state_recurrence(states, da_cum[..., -1])
+    y = ops.chunk_scan(rs(c), rs(bm), rs(x), da_cum, incoming, backend=be)
+    return y.reshape(bsz, s, p).astype(x.dtype)
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int):
+    sm = cfg.ssm
+    d = cfg.d_model
+    nh = sm.num_heads(d)
+    conv_dim = sm.d_inner(d) + 2 * sm.state_dim
+    return {
+        "ssm": jnp.zeros((batch, nh, sm.state_dim, sm.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, sm.conv_width - 1, conv_dim), cfg.dtype),
+    }
+
+
+def mamba2_decode(params: Params, x, cfg: ModelConfig, cache):
+    """Single-token SSM recurrence: h = exp(dt*A) h + dt * B^T x ; y = C h."""
+    sm = cfg.ssm
+    b, _, d = x.shape
+    di = sm.d_inner(d)
+    nh = sm.num_heads(d)
+    z, xin, B, C, dt = (p[:, 0] for p in _mamba_proj(params, x))
+    conv_in = jnp.concatenate([xin, B, C], axis=-1)  # (b, conv_dim)
+    window = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)
+    w = params["conv_w"]
+    conv_out = jax.nn.silu(
+        jnp.sum(window * w[None], axis=1) + params["conv_b"]
+    )
+    xin, B, C = jnp.split(conv_out, [di, di + sm.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (b, nh)
+    xh = xin.reshape(b, nh, sm.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * (-jnp.exp(params["a_log"]))[None])  # (b, nh)
+    upd = jnp.einsum("bn,bhp->bhnp", B.astype(jnp.float32), xh * dt[..., None])
+    h = cache["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), h)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z[:, None]).astype(jnp.float32), params["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out_proj"])
+    return out, {"ssm": h, "conv": window[:, 1:]}

@@ -1,0 +1,377 @@
+"""Decoder-only language model covering dense / MoE / MLA / SSM / hybrid
+families (all assigned architectures except whisper, which lives in
+encdec.py).
+
+Layers are homogeneous and scanned (``jax.lax.scan`` over stacked params) —
+the standard trick for O(1) HLO size at hundreds of layers; heterogeneous
+prefixes (e.g. DeepSeek-V2's first dense FFN layer) are kept as unscanned
+python-list layers in front.  Decode caches carry static metadata (ring
+windows, stacking) in pytree aux data so jit boundaries stay stable.
+
+All functions are pure; params/caches are pytrees of jnp arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+
+BIG_WINDOW = 1 << 30  # "no window" sentinel for traced mask arithmetic
+
+
+# ---------------------------------------------------------------------------
+# per-layer param init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, layer_idx: int, dense_ffn: bool) -> Dict:
+    ks = L._split(key, 4)
+    p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), cfg.dtype)}
+    if cfg.attention == "gqa":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif cfg.attention == "mla":
+        p["attn"] = L.init_mla(ks[0], cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        p["mamba"] = L.init_mamba2(ks[1], cfg)
+        if cfg.family == "hybrid":
+            p["norm_m"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    if cfg.d_ff or (cfg.moe and cfg.moe.num_experts):
+        p["norm2"] = jnp.ones((cfg.d_model,), cfg.dtype)
+        if cfg.moe and cfg.moe.num_experts and not dense_ffn:
+            p["moe"] = L.init_moe(ks[2], cfg)
+        elif cfg.d_ff:
+            p["mlp"] = L.init_mlp(ks[2], cfg)
+        elif cfg.moe:
+            # dense prefix layer of an MoE model: widen to ~active-expert FLOPs
+            p["mlp"] = L.init_mlp(
+                ks[2], cfg,
+                d_ff=cfg.moe.d_ff_expert
+                * max(cfg.moe.experts_per_token + cfg.moe.num_shared_experts, 1),
+            )
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Dict:
+    ks = L._split(key, cfg.num_layers + 2)
+    params: Dict[str, Any] = {"embed": L.init_embedding(ks[0], cfg)}
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    prefix = [
+        _init_block(ks[1 + i], cfg, i, dense_ffn=True) for i in range(n_prefix)
+    ]
+    rest = [
+        _init_block(ks[1 + i], cfg, i, dense_ffn=False)
+        for i in range(n_prefix, cfg.num_layers)
+    ]
+    params["prefix_layers"] = prefix
+    params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *rest)
+    params["final_norm"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# per-layer windows
+# ---------------------------------------------------------------------------
+
+
+def static_windows(cfg: ModelConfig) -> List[Optional[int]]:
+    """Python-level per-layer window (None = global attention)."""
+    out: List[Optional[int]] = []
+    for i in range(cfg.num_layers):
+        w = cfg.window_for_layer(i)
+        # Hymba-style hybrids keep first / middle / last layers global
+        if cfg.family == "hybrid" and i in (0, cfg.num_layers // 2, cfg.num_layers - 1):
+            w = None
+        out.append(w)
+    return out
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) int32 traced windows for the full-sequence (scan) path."""
+    return jnp.asarray(
+        [w if w is not None else BIG_WINDOW for w in static_windows(cfg)], jnp.int32
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_full(p, x, cfg: ModelConfig, positions, window, rope_fraction):
+    """One transformer block, full-sequence.  Returns (x, aux_loss).
+
+    Sharding-hint hooks (models.layers.shard_hints):
+      * "attn_in": re-shard the normed input ONCE before the q/k/v
+        projections (otherwise each projection re-gathers the SP residual).
+      * "block_out": constrain attention/FFN outputs to the residual (SP)
+        spec so GSPMD lowers the row-parallel psum as reduce-scatter
+        instead of a full all-reduce.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    delta = jnp.zeros_like(x)
+    if cfg.attention == "gqa":
+        w = None if cfg.sliding_window is None else window
+        delta = L.attention_full(
+            p["attn"], L._hint("attn_in", h), cfg, positions, window=w,
+            rope_fraction=rope_fraction,
+        )
+        delta = L._hint("block_out", delta)
+    elif cfg.attention == "mla":
+        delta = L._hint("block_out", L.mla_full(p["attn"], L._hint("attn_in", h), cfg, positions))
+    if cfg.family == "ssm":
+        delta = L._hint("block_out", L.mamba2_full(p["mamba"], h, cfg))
+    elif cfg.family == "hybrid":
+        hm = L.rmsnorm(x, p["norm_m"], cfg.norm_eps)
+        delta = 0.5 * (delta + L._hint("block_out", L.mamba2_full(p["mamba"], hm, cfg)))
+    x = x + delta
+    if "moe" in p:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        out, aux = L.moe(p["moe"], h2, cfg)
+        x = x + L._hint("block_out", out)
+    elif "mlp" in p:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L._hint("block_out", L.mlp(p["mlp"], h2, cfg))
+    return x, aux
+
+
+def rope_fraction(cfg: ModelConfig) -> float:
+    # ChatGLM's "2d RoPE" rotates half the head dim
+    return 0.5 if "chatglm" in cfg.name else 1.0
+
+
+def hidden_forward(
+    params,
+    cfg: ModelConfig,
+    tokens,  # (B, S) int32
+    prefix_embeds=None,  # (B, P, d) modality-stub prefix
+    remat: bool = False,
+    residual_constraint=None,  # fn(x)->x: SP sharding hint between layers
+    unroll: int = 1,  # scan unroll factor (dry-run uses full unroll so HLO
+                      # cost analysis sees every layer, not one loop body)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states (B, S_total, d), aux_loss)."""
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = layer_windows(cfg)
+    rf = rope_fraction(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    n_prefix = len(params["prefix_layers"])
+    for i, p in enumerate(params["prefix_layers"]):
+        x, aux = _block_full(p, x, cfg, positions, windows[i], rf)
+        aux_total += aux
+
+    def body(carry, inp):
+        x, aux_acc = carry
+        p, w = inp
+        if residual_constraint is not None:
+            x = residual_constraint(x)
+        x, aux = _block_full(p, x, cfg, positions, w, rf)
+        if residual_constraint is not None:
+            # constrain the *outgoing* carry too: this is the tensor the
+            # per-layer checkpoint saves for the backward pass — without the
+            # hint it inherits the block's natural output sharding and the
+            # saved residuals blow up by the TP degree.
+            x = residual_constraint(x)
+        return (x, aux_acc + aux), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux_total), _ = jax.lax.scan(
+        body_fn, (x, aux_total), (params["layers"], windows[n_prefix:]),
+        unroll=unroll,
+    )
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def _logits_of(params, cfg: ModelConfig, x):
+    logits = L.unembed(params["embed"], x, cfg)
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            remat: bool = False, residual_constraint=None, unroll: int = 1):
+    """Returns (logits (B, S_total, V) f32, aux_loss)."""
+    x, aux = hidden_forward(params, cfg, tokens, prefix_embeds, remat,
+                            residual_constraint, unroll)
+    return _logits_of(params, cfg, x), aux
+
+
+def _ce(params, cfg, x, labels):
+    logits = _logits_of(params, cfg, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask), jnp.sum(mask).astype(jnp.float32)
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, prefix_embeds=None,
+            remat: bool = False, residual_constraint=None,
+            logits_chunk: int = 0, unroll: int = 1):
+    """Causal LM loss; labels < 0 are masked out.
+
+    ``logits_chunk`` > 0 streams the unembedding + softmax over sequence
+    chunks (rematerialized in the backward pass), bounding the live logits
+    tensor to (B, chunk, V) instead of (B, S, V) — essential for the 256k
+    vocab archs at 4k sequence."""
+    x, aux = hidden_forward(params, cfg, tokens, prefix_embeds, remat,
+                            residual_constraint, unroll)
+    if prefix_embeds is not None:
+        x = x[:, prefix_embeds.shape[1]:]
+    s = x.shape[1]
+    if logits_chunk and s % logits_chunk == 0 and s > logits_chunk:
+        nchunks = s // logits_chunk
+        xc = x.reshape(x.shape[0], nchunks, logits_chunk, -1)
+        lc = labels.reshape(labels.shape[0], nchunks, logits_chunk)
+
+        @jax.checkpoint
+        def chunk_ce(carry, inp):
+            xi, li = inp
+            nll, cnt = _ce(params, cfg, xi, li)
+            return (carry[0] + nll, carry[1] + cnt), None
+
+        (nll, cnt), _ = jax.lax.scan(
+            chunk_ce,
+            (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xc.swapaxes(0, 1), lc.swapaxes(0, 1)),
+        )
+    else:
+        nll, cnt = _ce(params, cfg, x, labels)
+    ce = nll / jnp.maximum(cnt, 1)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode caches
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+class Cache:
+    """Decode cache with static layout metadata (aux data, not leaves)."""
+
+    def __init__(self, prefix, rest, stacked: bool, max_len: int):
+        self.prefix = prefix
+        self.rest = rest
+        self.stacked = stacked
+        self.max_len = max_len
+
+    def tree_flatten(self):
+        return (self.prefix, self.rest), (self.stacked, self.max_len)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    wlist = static_windows(cfg)
+
+    def one(layer_idx: int) -> Dict:
+        c: Dict[str, Any] = {}
+        if cfg.attention == "gqa":
+            c["kv"] = L.init_kv_cache(cfg, batch, max_len, window=wlist[layer_idx])
+        elif cfg.attention == "mla":
+            c["mla"] = L.init_mla_cache(cfg, batch, max_len)
+        if cfg.family in ("ssm", "hybrid"):
+            c["ssm"] = L.init_mamba2_cache(cfg, batch)
+        return c
+
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
+    prefix = [one(i) for i in range(n_prefix)]
+    rest = [one(i) for i in range(n_prefix, cfg.num_layers)]
+    homogeneous = len({w for w in wlist[n_prefix:]}) <= 1
+    if homogeneous and len(rest) > 1:
+        rest_t = jax.tree.map(lambda *xs: jnp.stack(xs), *rest)
+        return Cache(prefix, rest_t, True, max_len)
+    return Cache(prefix, rest, False, max_len)
+
+
+def _block_decode(p, x, cfg: ModelConfig, cache, pos, window):
+    """``window`` must be a static python value here (ring layout)."""
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    new_cache: Dict[str, Any] = {}
+    delta = jnp.zeros_like(x)
+    if cfg.attention == "gqa":
+        delta, kv = L.attention_decode(
+            p["attn"], h, cfg, cache["kv"], pos, window=window,
+            rope_fraction=rope_fraction(cfg),
+        )
+        new_cache["kv"] = kv
+    elif cfg.attention == "mla":
+        delta, mc = L.mla_decode(p["attn"], h, cfg, cache["mla"], pos)
+        new_cache["mla"] = mc
+    if cfg.family == "ssm":
+        delta, sc = L.mamba2_decode(p["mamba"], h, cfg, cache["ssm"])
+        new_cache["ssm"] = sc
+    elif cfg.family == "hybrid":
+        hm = L.rmsnorm(x, p["norm_m"], cfg.norm_eps)
+        md, sc = L.mamba2_decode(p["mamba"], hm, cfg, cache["ssm"])
+        delta = 0.5 * (delta + md)
+        new_cache["ssm"] = sc
+    x = x + delta
+    if "moe" in p:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        out, _ = L.moe(p["moe"], h2, cfg)
+        x = x + out
+    elif "mlp" in p:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h2, cfg)
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
+                unroll: int = 1):
+    """One decode step: token (B,) int32, pos scalar int32 -> (logits, cache)."""
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
+    wlist = static_windows(cfg)
+    n_prefix = len(params["prefix_layers"])
+    new_prefix = []
+    for i, p in enumerate(params["prefix_layers"]):
+        x, c = _block_decode(p, x, cfg, cache.prefix[i], pos, wlist[i])
+        new_prefix.append(c)
+
+    if cache.stacked:
+        wcommon = wlist[n_prefix] if cfg.num_layers > n_prefix else None
+
+        def body(x, inp):
+            p, c = inp
+            x, cnew = _block_decode(p, x, cfg, c, pos, wcommon)
+            return x, cnew
+
+        x, new_rest = jax.lax.scan(
+            body, x, (params["layers"], cache.rest), unroll=unroll
+        )
+    else:
+        new_rest = []
+        layer_list = _unstack(params["layers"], cfg.num_layers - n_prefix)
+        for j, (p, c) in enumerate(zip(layer_list, cache.rest)):
+            x, cnew = _block_decode(p, x, cfg, c, pos, wlist[n_prefix + j])
+            new_rest.append(cnew)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits, Cache(new_prefix, new_rest, cache.stacked, cache.max_len)
+
+
+def _unstack(tree, n):
+    return [jax.tree.map(lambda a, i=i: a[i], tree) for i in range(n)]

@@ -1,0 +1,15 @@
+from .analysis import (
+    HW_V5E,
+    RooflineTerms,
+    collective_bytes,
+    model_flops,
+    roofline_from_compiled,
+)
+
+__all__ = [
+    "HW_V5E",
+    "RooflineTerms",
+    "collective_bytes",
+    "model_flops",
+    "roofline_from_compiled",
+]

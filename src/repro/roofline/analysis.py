@@ -1,0 +1,333 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs    / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes    / HBM_bw               (per chip)
+    collective term = collective_bytes / ICI link bw      (per chip)
+
+``compiled.cost_analysis()`` supplies FLOPs and bytes of the *partitioned*
+(per-device) program.  Collective bytes are not in cost_analysis — we parse
+the post-SPMD optimized HLO (``compiled.as_text()``) and sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI, 16 GiB HBM per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+HW_V5E = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "ici_bw": 50e9,  # per link, one direction
+    "hbm_bytes": 16 * 1024**3,
+    "vmem_bytes": 128 * 1024**2,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.:  %all-gather.3 = bf16[8,128,3072]{2,1,0} all-gather(...)
+_RE_INSTR = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+# tuple-result collectives:  = (f32[...], f32[...]) all-reduce(...)
+_RE_TUPLE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_RE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    if not dims:
+        return nb
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result sizes of collective instructions, keyed by op kind.
+
+    ``-start`` instructions are counted; their matching ``-done`` is skipped
+    (same tensor).  Result size is the natural "traffic unit": for
+    all-gather it is the gathered (full) tensor, for reduce-scatter the
+    scattered shard, for all-reduce the reduced tensor.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # counted at -start
+        m = _RE_INSTR.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _RE_TUPLE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for sm in _RE_SHAPE.finditer(shapes):
+                out[kind] += _shape_bytes(*sm.groups())
+            counts[kind] += 1
+    out["_instruction_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device HLO bytes accessed (UNFUSED upper bound)
+    coll_bytes: float  # per-device collective traffic
+    coll_breakdown: Dict[str, int]
+    model_flops: float  # 6*N*D useful flops (global)
+    chips: int
+    flop_correction: float = 0.0  # chunked-attention loop-body undercount
+    analytic_bytes: float = 0.0  # fusion-aware HBM estimate (0 = unavailable)
+    peak_flops: float = HW_V5E["peak_flops_bf16"]
+    hbm_bw: float = HW_V5E["hbm_bw"]
+    ici_bw: float = HW_V5E["ici_bw"]
+
+    @property
+    def compute_s(self) -> float:
+        return (self.flops + self.flop_correction) / self.peak_flops
+
+    @property
+    def memory_ub_s(self) -> float:
+        """Unfused upper bound (raw HLO bytes accessed)."""
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def memory_s(self) -> float:
+        """Memory term: the fusion-aware analytic estimate when available
+        (the TPU backend fuses elementwise chains the CPU-side cost
+        analysis counts), else the unfused bound."""
+        if self.analytic_bytes > 0:
+            return self.analytic_bytes / self.hbm_bw
+        return self.memory_ub_s
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / self.ici_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time: dominant term (others assumed overlapped)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * chips): how much compiled compute is
+        'useful' (catches remat / dispatch / padding waste)."""
+        total = (self.flops + self.flop_correction) * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        denom = self.step_s * self.peak_flops * self.chips
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_dev": self.flops,
+            "useful_fraction": self.useful_fraction,
+            "mfu_at_roofline": self.mfu,
+        }
+
+
+def attention_flops(cfg, cell, passes: int) -> float:
+    """O(S^2) attention FLOPs (qk + pv), causal halved, windows clipped."""
+    if not cfg.attends:
+        return 0.0
+    h, hd, L = cfg.num_heads, cfg.head_dim, cfg.num_layers
+    s = cell.seq
+    if cfg.sliding_window:
+        # all-but-3 layers see only `window` keys (hybrid global layers full)
+        w = cfg.sliding_window
+        per_tok = min(w, s)
+        full_layers = 3 if cfg.family == "hybrid" else 0
+        win_layers = L - full_layers
+        att = cell.batch * h * hd * 2 * 2 * (
+            win_layers * s * per_tok + full_layers * (s * s // 2)
+        )
+    else:
+        att = cell.batch * L * h * (s * s // 2) * hd * 2 * 2
+    return float(att * passes)
+
+
+def model_flops(cfg, cell) -> float:
+    """Useful model FLOPs for the cell: 6*N*D train, 2*N*D per forward token
+    (N = active params for MoE), plus attention score/value FLOPs."""
+    n_active = cfg.param_count(active_only=True)
+    tokens = cell.batch * cell.seq if cell.kind in ("train", "prefill") else cell.batch
+    mult = 6 if cell.kind == "train" else 2
+    base = mult * n_active * tokens
+    if cell.kind in ("train", "prefill"):
+        base += attention_flops(cfg, cell, 3 if cell.kind == "train" else 1)
+    return float(base)
+
+
+def chunked_attention_correction(cfg, cell, chips: int) -> float:
+    """Per-device FLOPs that HLO cost analysis misses when the XLA attention
+    path streams query chunks through a lax.map (while-loop bodies are
+    counted once): (nq-1)/nq of the attention FLOPs."""
+    from repro.kernels.ref import CHUNKED_THRESHOLD, Q_CHUNK
+
+    if cell.kind not in ("train", "prefill") or not cfg.attends:
+        return 0.0
+    s = cell.seq
+    if s < CHUNKED_THRESHOLD or s % Q_CHUNK:
+        return 0.0
+    nq = s // Q_CHUNK
+    passes = 3 if cell.kind == "train" else 1
+    missing = attention_flops(cfg, cell, passes) * (nq - 1) / nq
+    return missing / chips
+
+
+# ---------------------------------------------------------------------------
+# Analytic (fusion-aware) HBM traffic model.
+#
+# XLA's cost_analysis "bytes accessed" counts every instruction's operands
+# and outputs — an UNFUSED upper bound (the TPU backend fuses elementwise
+# chains into their producers).  For the roofline's memory term we also
+# compute an analytic estimate of the fused traffic:
+#
+#   params     : read in fwd + read in bwd (+ grad write)          [train]
+#   optimizer  : ZeRO-1 masters/moments, 3 reads + 3 writes f32    [train]
+#   activations: ~6 residual-width + 2 ffn-width values moved per
+#                token-layer in fwd; x4 for fwd+remat-recompute+bwd [train]
+#   attention  : the S^2 score tensor spills to HBM on the XLA path
+#                (~4 passes); the Pallas flash kernel keeps it in VMEM
+#                — `flash_attention=True` removes this term.
+#   kv/state   : decode reads the entire cache once per token.
+# ---------------------------------------------------------------------------
+
+
+def analytic_hbm_bytes(cfg, cell, mesh_shape: Dict[str, int],
+                       flash_attention: bool = False) -> float:
+    tp = mesh_shape.get("model", 1)
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    chips = tp * dp
+    p_total = cfg.param_count()
+    p_active = cfg.param_count(active_only=True)
+    bytes_param = 2  # bf16
+    tokens_local = cell.batch * cell.seq / dp if cell.kind in ("train", "prefill") else cell.batch / min(dp, cell.batch)
+
+    total = 0.0
+    if cell.kind == "train":
+        total += 2 * p_total / tp * bytes_param * 2  # fwd + bwd weight reads
+        total += p_total / tp * bytes_param  # grad write (bf16 wire)
+        total += 6 * 4 * p_total / chips  # ZeRO-1: r/w master+m+v f32
+    else:
+        # inference touches only active params (MoE skips unrouted experts)
+        total += p_active / tp * bytes_param
+
+    d, f = cfg.d_model, cfg.d_ff or (cfg.moe.d_ff_expert * cfg.moe.experts_per_token if cfg.moe else 0)
+    L = cfg.num_layers
+    passes = 4 if cell.kind == "train" else 1
+    # ~6 residual-width + 2 ffn-width values per token-layer, tp-sharded
+    total += passes * L * tokens_local * (6 * d + 2 * f) / max(tp, 1) * bytes_param
+
+    if cfg.attends and not flash_attention and cell.kind in ("train", "prefill"):
+        s = cell.seq
+        h = cfg.num_heads
+        b_loc = max(cell.batch / dp, 1)
+        keys = min(cfg.sliding_window or s, s)
+        att_passes = 4 if cell.kind == "train" else 2
+        if h % tp == 0:  # heads shard over `model`
+            h_loc, s_loc = h / tp, s
+        else:  # seq-shard fallback (make_hints)
+            h_loc, s_loc = h, s / tp
+        total += att_passes * L * b_loc * h_loc * s_loc * keys * 4  # f32 scores
+
+    if cell.kind == "decode":
+        # read the full KV/state cache once per token
+        if cfg.attention == "gqa":
+            per_layer = cfg.num_kv_heads * cfg.head_dim * 2 * bytes_param
+            sizes = []
+            for i in range(L):
+                wdw = cfg.window_for_layer(i)
+                if cfg.family == "hybrid" and i in (0, L // 2, L - 1):
+                    wdw = None
+                sizes.append(min(wdw or cell.seq, cell.seq))
+            total += cell.batch * per_layer * sum(sizes) / chips * dp  # sharded over chips
+        elif cfg.attention == "mla":
+            m = cfg.mla
+            total += cell.batch * L * cell.seq * (m.kv_lora_rank + m.qk_rope_head_dim) * bytes_param / tp
+        if cfg.ssm is not None:
+            nh = cfg.ssm.num_heads(d)
+            total += cell.batch * L * nh * cfg.ssm.state_dim * cfg.ssm.head_dim * 4 / tp
+    return float(total)
+
+
+def roofline_from_compiled(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    cfg,
+    cell,
+) -> RooflineTerms:
+    coll = collective_bytes(hlo_text)
+    counts = coll.pop("_instruction_counts", {})
+    total_coll = float(sum(v for v in coll.values()))
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        flops=float(cost.get("flops", 0.0)),
+        hbm_bytes=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes=total_coll,
+        coll_breakdown={**coll, "counts": counts},
+        model_flops=model_flops(cfg, cell),
+        chips=chips,
+    )

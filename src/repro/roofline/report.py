@@ -1,0 +1,155 @@
+"""Generate the §Dry-run and §Roofline tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.roofline.report [--mesh single_pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, get_config
+from repro.launch.cells import SHAPES
+from repro.roofline.analysis import (
+    HW_V5E,
+    RooflineTerms,
+    analytic_hbm_bytes,
+    chunked_attention_correction,
+)
+
+DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def load(arch: str, shape: str, mesh: str) -> dict | None:
+    p = DRYRUN_DIR / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def terms_of(rec: dict, flash_attention: bool = False) -> RooflineTerms:
+    coll = rec.get("collective_bytes", {})
+    cfg = get_config(rec["arch"])
+    cell = SHAPES[rec["shape"]]
+    chips = rec.get("chips", 256)
+    mesh_shape = (
+        {"pod": 2, "data": 16, "model": 16}
+        if rec["mesh"] == "multi_pod"
+        else {"data": 16, "model": 16}
+    )
+    return RooflineTerms(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        flops=rec.get("flops", 0.0),
+        hbm_bytes=rec.get("bytes_accessed", 0.0),
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=rec.get("model_flops", 0.0),
+        chips=chips,
+        flop_correction=chunked_attention_correction(cfg, cell, chips),
+        analytic_bytes=analytic_hbm_bytes(cfg, cell, mesh_shape,
+                                          flash_attention=flash_attention),
+    )
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table(mesh: str) -> str:
+    lines = [
+        "| arch | shape | status | GiB/chip | compile | collectives (counts) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load(arch, shape, mesh)
+            if rec is None:
+                lines.append(f"| {arch} | {shape} | *pending* | | | |")
+                continue
+            if rec["status"] == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | skip | — | — | {rec['reason'][:48]} |"
+                )
+                continue
+            if rec["status"] == "error":
+                lines.append(
+                    f"| {arch} | {shape} | **FAIL** | — | — | {rec.get('error','')[:60]} |"
+                )
+                continue
+            gib = rec.get("per_chip_bytes", 0) / 2**30
+            counts = rec.get("collective_counts", {})
+            cstr = " ".join(
+                f"{k.split('-')[-1][:4]}:{v}" for k, v in counts.items() if v
+            )
+            fits = "" if rec.get("fits_16gib") else " ⚠"
+            lines.append(
+                f"| {arch} | {shape} | ok | {gib:.2f}{fits} | "
+                f"{rec.get('compile_s', 0):.0f}s | {cstr} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str) -> str:
+    lines = [
+        "| arch | shape | compute | memory (fused est / unfused UB) | "
+        "collective | dominant | useful frac | MFU@roofline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load(arch, shape, mesh)
+            if rec is None or rec["status"] != "ok":
+                continue
+            t = terms_of(rec)
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(t.compute_s)} | "
+                f"{fmt_s(t.memory_s)} / {fmt_s(t.memory_ub_s)} | "
+                f"{fmt_s(t.collective_s)} | **{t.dominant}** | "
+                f"{t.useful_fraction:.0%} | {t.mfu:.1%} |"
+            )
+    return "\n".join(lines)
+
+
+def pick_hillclimb(mesh: str = "single_pod"):
+    """The three §Perf cells: worst MFU, most collective-bound, and the one
+    most representative of the paper (deepseek-v2 MLA decode)."""
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            rec = load(arch, shape, mesh)
+            if rec and rec["status"] == "ok":
+                rows.append(terms_of(rec))
+    if not rows:
+        return []
+    worst_mfu = min((r for r in rows if r.shape == "train_4k"), key=lambda r: r.mfu,
+                    default=min(rows, key=lambda r: r.mfu))
+    coll = max(rows, key=lambda r: r.collective_s / max(r.step_s, 1e-12))
+    mla = next((r for r in rows if r.arch == "deepseek_v2_lite_16b"), rows[0])
+    return [worst_mfu, coll, mla]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod"])
+    args = ap.parse_args()
+    print(f"## Dry-run ({args.mesh})\n")
+    print(dryrun_table(args.mesh))
+    print(f"\n## Roofline ({args.mesh})\n")
+    print(roofline_table(args.mesh))
+    picks = pick_hillclimb(args.mesh)
+    if picks:
+        print("\nhillclimb picks:",
+              ", ".join(f"{t.arch}×{t.shape} ({t.dominant}, mfu {t.mfu:.1%})" for t in picks))
+
+
+if __name__ == "__main__":
+    main()

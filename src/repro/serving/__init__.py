@@ -1,0 +1,4 @@
+from .engine import Request, ServeConfig, ServingEngine
+from .sampling import sample
+
+__all__ = ["Request", "ServeConfig", "ServingEngine", "sample"]

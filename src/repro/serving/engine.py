@@ -1,0 +1,131 @@
+"""Batched serving engine with continuous batching.
+
+The engine owns a fixed number of decode *slots* (static shapes — the jit'd
+step never retraces).  Requests are admitted into free slots, prefilled by
+streaming their prompt through the decode step at their own positions
+(per-slot ``pos`` vector — see layers.attention_decode), and generate until
+EOS / max_tokens, at which point the slot is recycled for the next queued
+request.  This is vLLM-style continuous batching with a contiguous
+(per-slot) KV cache; ring buffers bound the cache for sliding-window layers
+and SSM archs hold O(1) state.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+from .sampling import sample
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    slots: int = 8  # decode batch width
+    max_len: int = 1024  # per-slot cache length
+    max_new_tokens: int = 128
+    eos_id: int = -1  # -1: never stops early
+    temperature: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = serve_cfg
+        b = serve_cfg.slots
+        self.cache = lm.init_cache(cfg, b, serve_cfg.max_len)
+        self.pos = np.zeros((b,), np.int32)  # next write position per slot
+        self.slot_req: List[Optional[Request]] = [None] * b
+        self.queue: collections.deque[Request] = collections.deque()
+        self._uid = itertools.count()
+        self._key = jax.random.PRNGKey(serve_cfg.seed)
+        self._token_buf = np.zeros((b,), np.int32)
+        self._step = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, cfg, c, t, pos)
+        )
+        self.completed: List[Request] = []
+        self.steps_run = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens=None) -> Request:
+        req = Request(next(self._uid), list(prompt), max_new_tokens)
+        self.queue.append(req)
+        return req
+
+    def _admit(self):
+        for s in range(self.scfg.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.slot_req[s] = req
+                self.pos[s] = 0
+                req._cursor = 0  # type: ignore[attr-defined]
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick = one batched decode step.  Slots still consuming
+        their prompt feed the next prompt token (prefill-as-decode); slots in
+        generation feed their last sampled token.  Returns #active slots."""
+        self._admit()
+        active = [s for s in range(self.scfg.slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        feed = np.zeros((self.scfg.slots,), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            cur = req._cursor  # type: ignore[attr-defined]
+            if cur < len(req.prompt):
+                feed[s] = req.prompt[cur]
+            else:
+                feed[s] = req.output[-1] if req.output else req.prompt[-1]
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(feed), jnp.asarray(self.pos)
+        )
+        self._key, sub = jax.random.split(self._key)
+        next_tok = np.asarray(
+            sample(logits, sub, temperature=self.scfg.temperature)
+        )
+        for s in active:
+            req = self.slot_req[s]
+            cur = req._cursor  # type: ignore[attr-defined]
+            self.pos[s] += 1
+            req._cursor = cur + 1  # type: ignore[attr-defined]
+            if cur + 1 >= len(req.prompt):  # this step produced a real token
+                tok = int(next_tok[s])
+                req.output.append(tok)
+                limit = req.max_new_tokens or self.scfg.max_new_tokens
+                if (
+                    tok == self.scfg.eos_id
+                    or len(req.output) >= limit
+                    or self.pos[s] >= self.scfg.max_len
+                ):
+                    req.done = True
+                    self.completed.append(req)
+                    self.slot_req[s] = None
+        self.steps_run += 1
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive until queue + slots drain (or step budget)."""
+        for _ in range(max_steps):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.completed

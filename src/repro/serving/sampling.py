@@ -1,0 +1,30 @@
+"""Token sampling: greedy / temperature / top-k / top-p, batched."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(
+    logits: jax.Array,  # (B, V) f32
+    key,
+    temperature: float = 0.0,
+    top_k: Optional[int] = None,
+    top_p: Optional[float] = None,
+) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k is not None:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if top_p is not None:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,15 @@
+import os
+
+# Smoke tests and benches must see the real (single) CPU device; ONLY
+# launch/dryrun.py sets XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT (to 512).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), (
+    "tests must not run with the dry-run's 512-device XLA_FLAGS"
+)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Schedule, compile as tl_compile
+from repro.core import lang as T
+from repro.core.expr import VarExpr, evaluate, linear_decompose
+from repro.core.layout import round_up, row_major, vreg_fragment
+from repro.core.schedule import physical_tile_shape, swizzle_decode
+
+SMALL = st.integers(min_value=1, max_value=64)
+
+
+class TestExprProperties:
+    @given(
+        st.integers(-100, 100), st.integers(-100, 100),
+        st.integers(1, 100), st.integers(-100, 100),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_eval_matches_python(self, x, y, d, c):
+        vx, vy = VarExpr("x"), VarExpr("y")
+        e = (vx * 3 + vy) // d + c - vy
+        assert evaluate(e, {"x": x, "y": y}, None) == (x * 3 + y) // d + c - y
+
+    @given(st.integers(-20, 20), st.integers(-20, 20), st.integers(-20, 20))
+    @settings(max_examples=50, deadline=None)
+    def test_linear_decompose_sound(self, a, b, c):
+        """decompose(a*x + b*y + c) reproduces the coefficients exactly."""
+        vx, vy = VarExpr("x"), VarExpr("y")
+        dec = linear_decompose(a * vx + vy * b + c)
+        assert dec is not None
+        assert dec.get("x", 0) == a and dec.get("y", 0) == b and dec.get("", 0) == c
+
+
+class TestLayoutProperties:
+    @given(st.integers(1, 16), st.integers(1, 16))
+    @settings(max_examples=30, deadline=None)
+    def test_row_major_bijective(self, m, n):
+        assert row_major((m, n)).is_bijective()
+
+    @given(st.integers(1, 64), st.integers(1, 256), st.sampled_from(["float32", "bfloat16", "int8"]))
+    @settings(max_examples=40, deadline=None)
+    def test_physical_padding_is_aligned_superset(self, m, n, dtype):
+        pm, pn = physical_tile_shape((m, n), dtype)
+        assert pm >= m and pn >= n
+        assert pn % 128 == 0
+
+    @given(st.integers(1, 32), st.integers(1, 4), st.integers(1, 4))
+    @settings(max_examples=30, deadline=None)
+    def test_fragment_element_conservation(self, m, r, rt):
+        """repeat/repeat_on_thread preserve elements-per-partition bookkeeping:
+        threads * locals == total padded elements (x replication)."""
+        base = vreg_fragment((8 * m, 128), "float32")
+        frag = base.repeat(r, axis=0).repeat_on_thread(rt, axis=0)
+        total = frag.threads() * frag.locals_per_thread()
+        in_elems = 8 * m * r * rt * 128
+        assert total >= in_elems  # padding can only add
+        rep = frag.replicate(2)
+        assert rep.threads() == 2 * frag.threads()
+
+
+class TestSwizzleProperties:
+    @given(st.integers(1, 12), st.integers(1, 12), st.integers(1, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_decode_is_permutation(self, g0, g1, factor):
+        pts = {swizzle_decode(f, g0, g1, factor) for f in range(g0 * g1)}
+        assert len(pts) == g0 * g1
+        assert all(0 <= i < g0 and 0 <= j < g1 for i, j in pts)
+
+
+class TestKernelProperties:
+    @given(
+        st.sampled_from([32, 64, 96]),
+        st.sampled_from([32, 64]),
+        st.sampled_from([32, 64, 128]),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_matmul_random_shapes(self, M, N, K):
+        from repro.kernels.matmul import matmul_program
+
+        prog = matmul_program(M, N, K, block_M=32, block_N=32, block_K=32)
+        kern = tl_compile(prog, Schedule(interpret=True))
+        rng = np.random.default_rng(M * 1000 + N * 10 + K)
+        a = rng.standard_normal((M, K), dtype=np.float32)
+        b = rng.standard_normal((K, N), dtype=np.float32)
+        np.testing.assert_allclose(np.asarray(kern(a, b)), a @ b, atol=2e-3)
+
+    @given(st.integers(0, 3))
+    @settings(max_examples=4, deadline=None)
+    def test_copy_roundtrip(self, seed):
+        """global -> shared -> fragment -> global is the identity."""
+        m, n = 16, 128
+
+        @T.prim_func
+        def RoundTrip(X: T.Tensor((m, n), "float32"), Y: T.Tensor((m, n), "float32")):
+            with T.Kernel(1) as bx:
+                s = T.alloc_shared((m, n), "float32")
+                f = T.alloc_fragment((m, n), "float32")
+                T.copy(X[0, 0], s)
+                T.copy(s, f)
+                T.copy(f, Y[0, 0])
+
+        kern = tl_compile(RoundTrip, Schedule(interpret=True))
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((m, n), dtype=np.float32)
+        np.testing.assert_array_equal(np.asarray(kern(x)), x)
