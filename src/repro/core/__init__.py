@@ -2,13 +2,18 @@
 #
 # A Python-embedded tile DSL (program.py) whose dataflow operators
 # (tile_ops.py) are decoupled from scheduling (schedule.py), with
-# priority-ordered layout inference (infer.py, layout.py) and a lowering to
-# Pallas TPU kernels / a reference interpreter (lower.py).  autotune.py adds
-# the cost-model config search.  See DESIGN.md §2 for the GPU->TPU mapping.
+# priority-ordered layout inference (infer.py, layout.py), a pass-based
+# lowering pipeline (lowering/) producing a LoweredModule analysis artifact,
+# and a pluggable backend registry (backends/: Pallas-TPU + a reference
+# interpreter).  autotune.py adds the cost-model config search over cached
+# analyses.  See DESIGN.md §2 for the GPU->TPU mapping and §3–§4 for the
+# pipeline/backend architecture.
 
 from . import program as lang  # the "T" namespace:  from repro.core import lang as T
 from .autotune import autotune, grid_configs
+from .backends import available_backends, get_backend, register_backend
 from .buffer import FRAGMENT, GLOBAL, SHARED, Region, TileBuffer
+from .compiler import clear_compile_cache, compile
 from .errors import (
     LayoutError,
     LoweringError,
@@ -18,7 +23,14 @@ from .errors import (
 )
 from .infer import InferenceResult, infer_layouts
 from .layout import Fragment, IterVar, Layout, padded, row_major, swizzle_2d, tiled_2d, vreg_fragment
-from .lower import CompiledKernel, KernelCost, compile
+from .lowering import (
+    CompiledKernel,
+    KernelCost,
+    LoweredInfo,
+    LoweredModule,
+    analyze,
+    program_fingerprint,
+)
 from .program import TileProgram, Tensor, prim_func
 from .schedule import Schedule, plan_vmem
 
@@ -48,7 +60,15 @@ __all__ = [
     "vreg_fragment",
     "CompiledKernel",
     "KernelCost",
+    "LoweredInfo",
+    "LoweredModule",
+    "analyze",
+    "program_fingerprint",
     "compile",
+    "clear_compile_cache",
+    "available_backends",
+    "get_backend",
+    "register_backend",
     "TileProgram",
     "Tensor",
     "prim_func",

@@ -3,16 +3,20 @@
 Because TileLang exposes thread mapping, memory access and compute behavior
 explicitly, a static cost model is enough to rank configurations without
 running them — exactly the property the paper argues for.  We exploit it:
-``lower.compile`` records a :class:`KernelCost` (FLOPs, HBM bytes, VMEM
-footprint, grid) and the inference pass records padding waste and MXU
-utilization; :func:`autotune` combines them into a roofline-style score and
-returns the best-scoring feasible config.
+the pass pipeline (repro.core.lowering) records a :class:`KernelCost`
+(FLOPs, HBM bytes, VMEM footprint, grid) and the inference pass records
+padding waste and MXU utilization; :func:`autotune` combines them into a
+roofline-style score and returns the best-scoring feasible config.
+
+Candidates are scored from the cached **analysis artifact**
+(``lowering.analyze``) alone — no backend code is emitted while searching;
+only the winning config is actually compiled.  Scores are additionally
+cached per (program-name, shapes, config) so kernel libraries with dynamic
+shape sets amortize the search — the TPU analogue of the paper's "dynamic
+parameter simplification" for kernel libraries.
 
 This is *structural* tuning (no hardware timing needed): the same mechanism
-the dry-run roofline uses, applied at kernel granularity.  Scores are cached
-per (program-name, shapes, config) so kernel libraries with dynamic shape
-sets amortize the search — the TPU analogue of the paper's "dynamic parameter
-simplification" for kernel libraries.
+the dry-run roofline uses, applied at kernel granularity.
 """
 from __future__ import annotations
 
@@ -20,8 +24,9 @@ import dataclasses
 import itertools
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
+from .compiler import compile as tl_compile
 from .errors import ScheduleError, TileError
-from .lower import CompiledKernel, compile as tl_compile
+from .lowering import CompiledKernel, analyze, schedule_key
 from .schedule import Schedule
 
 # TPU v5e hardware constants (also used by repro.roofline).
@@ -49,7 +54,7 @@ class Candidate:
 _CACHE: Dict[Tuple, "Candidate"] = {}
 
 
-def score_kernel(kernel: CompiledKernel) -> Tuple[float, float, float, float]:
+def _score(cost, inference, num_stages) -> Tuple[float, float, float, float]:
     """Roofline-style score: max(compute, memory) with efficiency derates.
 
     * compute is derated by the worst MXU tile utilization (M/N pad to 128,
@@ -59,21 +64,30 @@ def score_kernel(kernel: CompiledKernel) -> Tuple[float, float, float, float]:
       (planned by plan_vmem), not wire traffic, so it does not derate
       bandwidth.
     """
-    cost = kernel.info.cost
-    inf = kernel.info.inference
     mxu = 1.0
     peak = PEAK_FLOPS_BF16
-    if inf.gemms:
-        mxu = min(g.mxu_utilization for g in inf.gemms)
+    if inference.gemms:
+        mxu = min(g.mxu_utilization for g in inference.gemms)
     # operand dtype of the gemms decides the MXU rate (int8 path = 2x)
-    if inf.gemms and all(g.a_dtype in ("int8", "uint8") for g in inf.gemms):
+    if inference.gemms and all(g.a_dtype in ("int8", "uint8") for g in inference.gemms):
         peak = PEAK_FLOPS_INT8
     compute_s = cost.compute_seconds(peak) / max(mxu, 1e-3)
     memory_s = cost.memory_seconds(HBM_BW)
     # pipeline overlap: with >=2 stages compute and memory overlap; otherwise add
-    overlap = kernel.info.num_stages >= 2
+    overlap = num_stages >= 2
     total = max(compute_s, memory_s) if overlap else compute_s + memory_s
     return total, compute_s, memory_s, mxu
+
+
+def score_kernel(kernel: CompiledKernel) -> Tuple[float, float, float, float]:
+    """Score an already-compiled kernel (delegates to the shared model)."""
+    info = kernel.info
+    return _score(info.cost, info.inference, info.num_stages)
+
+
+def score_module(module) -> Tuple[float, float, float, float]:
+    """Score a :class:`LoweredModule` analysis artifact — no emission."""
+    return _score(module.cost, module.inference, module.num_stages)
 
 
 def autotune(
@@ -86,45 +100,66 @@ def autotune(
     """Pick the best config for a program factory.
 
     ``build(**config)`` must return a TileProgram.  Infeasible configs (VMEM
-    over budget, lowering errors) are skipped but recorded.
+    over budget, lowering errors) are skipped but recorded.  Scoring runs on
+    the cached pipeline analysis; only the winner is compiled.
     """
     schedule = schedule or Schedule()
     results: List[Candidate] = []
-    best: Optional[Tuple[Candidate, Any]] = None
     for config in configs:
         key = None
         if cache_key is not None:
-            key = (cache_key, tuple(sorted(config.items())))
+            # schedule_key included: the same config can be feasible under
+            # one schedule and not another (stages, vmem limit, interpret).
+            key = (cache_key, schedule_key(schedule), tuple(sorted(config.items())))
             if key in _CACHE:
-                cand = _CACHE[key]
-                results.append(cand)
-                if cand.feasible and (best is None or cand.score < best[0].score):
-                    best = (cand, None)  # rebuild lazily below
+                results.append(_CACHE[key])
                 continue
         try:
             program = build(**config)
-            kernel = tl_compile(program, schedule=schedule)
-            total, cs, ms, mxu = score_kernel(kernel)
-            waste = max(kernel.info.inference.waste.values(), default=0.0)
+            module = analyze(program, schedule)
+            if module.vmem is not None and not module.vmem.ok:
+                raise ScheduleError(
+                    f"VMEM budget exceeded —\n{module.vmem.summary()}"
+                )
+            total, cs, ms, mxu = _score(module.cost, module.inference, module.num_stages)
+            waste = max(module.inference.waste.values(), default=0.0)
             cand = Candidate(config, total, cs, ms, mxu, waste, True)
         except (ScheduleError, TileError) as e:
             cand = Candidate(config, float("inf"), 0, 0, 0, 0, False, str(e))
-            kernel = None
         results.append(cand)
         if key is not None:
             _CACHE[key] = cand
-        if cand.feasible and (best is None or cand.score < best[0].score):
-            best = (cand, kernel)
-    if best is None:
+    # Compile winners best-first — analysis is cached, so this only runs
+    # backend emission.  A config can still fail *there* (some checks are
+    # backend-specific, e.g. the Pallas written-and-read window rule); such
+    # a candidate is demoted to infeasible and the next-best one is tried.
+    # Demotion replaces the results entry with a copy: Candidate objects may
+    # be aliased into _CACHE and into lists returned from earlier calls.
+    kernel = winner = None
+    for cand in sorted((c for c in results if c.feasible), key=lambda c: c.score):
+        try:
+            program = build(**cand.config)
+            kernel = tl_compile(program, schedule=schedule)
+            winner = cand
+            break
+        except (ScheduleError, TileError) as e:
+            demoted = dataclasses.replace(
+                cand, feasible=False, score=float("inf"), reason=str(e)
+            )
+            results[results.index(cand)] = demoted
+            if cache_key is not None:
+                # persist the demotion so later calls don't redo the
+                # failing emission before falling back
+                _CACHE[
+                    (cache_key, schedule_key(schedule),
+                     tuple(sorted(cand.config.items())))
+                ] = demoted
+    if kernel is None:
         msgs = "; ".join(c.reason[:80] for c in results[:4])
         raise ScheduleError(f"autotune: no feasible config ({msgs})")
-    cand, kernel = best
-    if kernel is None:  # cache hit path: rebuild the winner once
-        program = build(**cand.config)
-        kernel = tl_compile(program, schedule=schedule)
     if return_all:
-        return kernel, cand, results
-    return kernel, cand
+        return kernel, winner, results
+    return kernel, winner
 
 
 def grid_configs(**axes: Sequence[Any]) -> List[Dict[str, Any]]:

@@ -1,0 +1,471 @@
+"""Pallas-TPU backend: ``LoweredModule -> pl.pallas_call`` (DESIGN.md §2, §4).
+
+The central translation: a ``T.Pipelined`` loop over K with global->shared
+``T.copy`` ops becomes the **Pallas grid pipeline** — the copies turn into
+BlockSpec-managed windows whose index maps depend on the reduction grid
+axis, so the hardware DMA double-buffers them and overlaps with compute
+exactly like cp.async/TMA rings on GPUs.  Fragment buffers become VMEM
+scratch accumulators persisting across the ``arbitrary`` axis.
+
+With ``schedule.interpret=True`` the same kernel body executes on CPU for
+validation; on a TPU host it is the Mosaic-compiled kernel.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import numpy as np
+
+from ..buffer import GLOBAL, TileBuffer
+from ..errors import LoweringError, ScheduleError
+from ..expr import BinExpr, ConstExpr, Expr, VarExpr, evaluate
+from ..lowering.indexing import make_index_map, no_loads
+from ..lowering.module import CompiledKernel, LoweredModule
+from ..lowering.phases import LOOP, POST, PRE
+from ..lowering.windows import _is_onchip
+from ..tile_ops import (
+    AtomicOp,
+    CopyOp,
+    CumsumOp,
+    CustomOp,
+    FillOp,
+    GemmOp,
+    ParallelOp,
+    PipelinedOp,
+    ReduceOp,
+    ResolvedRegion,
+    SerialOp,
+    TileOp,
+)
+from . import register_backend
+
+
+def _compiler_params_cls(pltpu):
+    """JAX moved ``TPUCompilerParams`` -> ``CompilerParams`` across releases;
+    accept whichever name the installed version exposes."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        raise LoweringError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; unsupported JAX version"
+        )
+    return cls
+
+
+@register_backend("pallas")
+def emit_pallas(module: LoweredModule) -> CompiledKernel:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    program = module.program
+    schedule = module.schedule
+    if module.vmem is not None and not module.vmem.ok:
+        raise ScheduleError(
+            f"{program.name}: VMEM budget exceeded —\n{module.vmem.summary()}\n"
+            "Reduce block shapes or num_stages."
+        )
+    phases = module.phases
+    in_windows, out_windows = module.in_windows, module.out_windows
+    plan = module.grid_plan
+    grid, env_builder, kdim = plan.grid, plan.env_builder, plan.kdim
+    dim_sem = plan.dimension_semantics
+    pipe = phases.pipeline
+    scratch_bufs, scratch_pos = module.scratch_bufs, module.scratch_pos
+    arg_params, out_params = module.arg_params, module.out_params
+    window_of, out_window_of = module.window_of, module.out_window_of
+
+    # ---- operand list: one per input window (+ aliased outputs last) -----
+    window_param_idx: List[int] = []
+    for w, idx in zip(in_windows, module.window_param_idx):
+        if idx is None:
+            # a written global read back through a window — unsupported
+            raise LoweringError(
+                f"{program.name}: {w.param.name} is both written and read "
+                "through separate windows; use T.atomic or split kernels."
+            )
+        window_param_idx.append(idx)
+    aliased_js = [j for j, w in enumerate(out_windows) if w.aliased]
+    n_in_ops = len(in_windows)
+
+    # ---- specs -----------------------------------------------------------
+    in_specs = [
+        pl.BlockSpec(w.block_shape, make_index_map(w.region, env_builder))
+        for w in in_windows
+    ]
+    alias_in_specs = [
+        pl.BlockSpec(
+            out_windows[j].block_shape,
+            make_index_map(out_windows[j].region, env_builder),
+        )
+        for j in aliased_js
+    ]
+    out_specs = [
+        pl.BlockSpec(w.block_shape, make_index_map(w.region, env_builder))
+        for w in out_windows
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct(w.param.shape, jnp.dtype(w.param.dtype))
+        for w in out_windows
+    ]
+    scratch_shapes = [
+        pltpu.VMEM(b.shape, jnp.dtype(b.dtype)) for b in scratch_bufs
+    ]
+    input_output_aliases = {n_in_ops + i: j for i, j in enumerate(aliased_js)}
+
+    kext = pipe.extent if pipe is not None else None
+
+    # ---- kernel body ------------------------------------------------------
+    def body(*refs):
+        n_in_total = n_in_ops + len(alias_in_specs)
+        in_refs = refs[:n_in_total]
+        out_refs = refs[n_in_total : n_in_total + len(out_windows)]
+        scr_refs = refs[n_in_total + len(out_windows) :]
+
+        grid_ids = tuple(pl.program_id(d) for d in range(len(grid)))
+        env_scalars = env_builder(*grid_ids)
+        kval = grid_ids[kdim] if kdim is not None else None
+
+        values: Dict[str, Any] = {}
+        dirty: set = set()
+
+        def squeeze(arr, region: ResolvedRegion):
+            keep = tuple(
+                i for i, c in enumerate(region.collapsed) if not c
+            )
+            if len(keep) == arr.ndim:
+                return arr
+            return arr.reshape(tuple(arr.shape[i] for i in keep))
+
+        def get(buf: TileBuffer):
+            if buf.name in values:
+                return values[buf.name]
+            if buf.name in window_of:
+                w = in_windows[window_of[buf.name]]
+                val = squeeze(in_refs[window_of[buf.name]][...], w.region)
+                val = val.astype(jnp.dtype(buf.dtype))
+                values[buf.name] = val
+                return val
+            pos = scratch_pos[buf.name]
+            val = scr_refs[pos][...]
+            values[buf.name] = val
+            return val
+
+        def put(buf: TileBuffer, val):
+            if buf.name in window_of:
+                raise LoweringError(
+                    f"{program.name}: write to window-backed tile {buf.name}"
+                )
+            val = val.astype(jnp.dtype(buf.dtype))
+            val = jnp.broadcast_to(val, buf.shape)
+            values[buf.name] = val
+            if buf.name in scratch_pos:
+                dirty.add(buf.name)
+
+        def gput(buf: TileBuffer, new, phase: str):
+            """Phase-guarded value update.
+
+            PRE ops must only take effect at k==0 and POST ops at k==last —
+            the body re-executes every grid step, and unguarded PRE/POST
+            writes would corrupt accumulators carried across the reduction
+            axis.  Guards are functional selects (Mosaic-friendly), not
+            control flow."""
+            g = guard(phase)
+            if g is None:
+                put(buf, new)
+                return
+            new = jnp.broadcast_to(
+                jnp.asarray(new).astype(jnp.dtype(buf.dtype)), buf.shape
+            )
+            put(buf, jnp.where(g, new, get(buf).astype(new.dtype)))
+
+        def scalar_env():
+            return dict(env_scalars)
+
+        def eval_expr(e: Expr, extra: Dict[str, Any], load_fn):
+            env = scalar_env()
+            env.update(extra)
+            return evaluate(e, env, load_fn)
+
+        def guard(phase: str):
+            """Functional guard for value ops outside the loop phase."""
+            if kval is None:
+                return None
+            if phase == PRE:
+                return kval == 0
+            if phase == POST:
+                return kval == kext - 1
+            return None
+
+        def run_fill(op: FillOp, phase: str, extra):
+            fillval = eval_expr(op.value, extra, no_loads)
+            tile = jnp.full(op.buffer.shape, fillval, dtype=jnp.dtype(op.buffer.dtype))
+            gput(op.buffer, tile, phase)
+
+        def region_value(region: ResolvedRegion, extra):
+            """Read a region of an on-chip buffer as a tile value."""
+            base = get(region.buffer)
+            starts = [eval_expr(s, extra, no_loads) for s in region.starts]
+            if all(isinstance(s, (int, np.integer)) and s == 0 for s in starts) and tuple(
+                region.sizes
+            ) == tuple(region.buffer.shape):
+                val = base
+            else:
+                import jax.lax as lax
+
+                val = lax.dynamic_slice(base, [jnp.asarray(s, jnp.int32) for s in starts], region.sizes)
+            return squeeze(val, region)
+
+        def run_copy(op: CopyOp, phase: str, extra):
+            s, d = op.src.buffer, op.dst.buffer
+            if s.scope == GLOBAL and _is_onchip(d):
+                val = get(d)  # window read; already cast
+                values[d.name] = val
+                return
+            if _is_onchip(s) and d.scope == GLOBAL:
+                j = out_window_of[id(d)]
+                w = out_windows[j]
+                val = region_value(op.src, extra).astype(jnp.dtype(d.dtype))
+                block = val.reshape(w.block_shape)
+                g = guard(phase)
+                if g is None:
+                    out_refs[j][...] = block
+                else:
+                    @pl.when(g)
+                    def _():
+                        out_refs[j][...] = block
+                return
+            # on-chip -> on-chip
+            val = region_value(op.src, extra)
+            if tuple(op.dst.tile_shape) == tuple(d.shape) and not any(op.dst.collapsed):
+                gput(d, val, phase)
+            else:
+                import jax.lax as lax
+
+                starts = [eval_expr(x, extra, no_loads) for x in op.dst.starts]
+                cur = get(d)
+                upd = val.reshape(tuple(op.dst.sizes)).astype(cur.dtype)
+                gput(
+                    d,
+                    lax.dynamic_update_slice(
+                        cur, upd, [jnp.asarray(x, jnp.int32) for x in starts]
+                    ),
+                    phase,
+                )
+
+        def run_gemm(op: GemmOp, phase: str, extra):
+            a, b = get(op.a), get(op.b)
+            if op.transpose_a:
+                a = a.T if a.ndim == 2 else jnp.swapaxes(a, -1, -2)
+            if op.transpose_b:
+                b = b.T if b.ndim == 2 else jnp.swapaxes(b, -1, -2)
+            acc = get(op.c)
+            prod = jax.lax.dot_general(
+                a,
+                b,
+                dimension_numbers=(((a.ndim - 1,), (b.ndim - 2,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            gput(op.c, acc + prod.astype(acc.dtype), phase)
+
+        def run_reduce(op: ReduceOp, phase: str, extra):
+            src = get(op.src)
+            if op.kind == "absmax":
+                val = jnp.max(jnp.abs(src), axis=op.axis)
+            elif op.kind == "sum":
+                val = jnp.sum(src, axis=op.axis)
+            elif op.kind == "max":
+                val = jnp.max(src, axis=op.axis)
+            elif op.kind == "min":
+                val = jnp.min(src, axis=op.axis)
+            elif op.kind == "prod":
+                val = jnp.prod(src, axis=op.axis)
+            else:
+                raise LoweringError(f"Unknown reduce kind {op.kind}")
+            if not op.clear:
+                cur = get(op.dst)
+                comb = {
+                    "sum": jnp.add,
+                    "max": jnp.maximum,
+                    "min": jnp.minimum,
+                    "prod": jnp.multiply,
+                    "absmax": jnp.maximum,
+                }[op.kind]
+                val = comb(cur, val.astype(cur.dtype))
+            gput(op.dst, val, phase)
+
+        def run_cumsum(op: CumsumOp, phase: str, extra):
+            src = get(op.src)
+            if op.reverse:
+                src = jnp.flip(src, axis=op.axis)
+            val = jnp.cumsum(src, axis=op.axis)
+            if op.reverse:
+                val = jnp.flip(val, axis=op.axis)
+            gput(op.dst, val, phase)
+
+        def run_parallel(op: ParallelOp, phase: str, extra):
+            nax = len(op.axes)
+            axis_names = [a.name for a in op.axes]
+            iotas = {}
+            for i, (v, e) in enumerate(zip(op.axes, op.extents)):
+                shape = [1] * nax
+                shape[i] = e
+                iotas[v.name] = jax.lax.broadcasted_iota(jnp.int32, tuple(shape), i)
+
+            def structured_load(buffer, idx_exprs):
+                """TPU-friendly load patterns over the parallel box.
+
+                * all-direct indices -> the whole tile (pure vector op)
+                * ``ax // c`` on an axis -> jnp.repeat along that axis (the
+                  vectorized sub-byte unpack idiom; the TPU analogue of PTX
+                  lop3 byte-extraction in the paper's dequant kernels)
+                Returns None when the pattern doesn't apply.
+                """
+                if len(idx_exprs) != buffer.ndim or len(idx_exprs) != nax:
+                    return None
+                plan = []
+                for i, e in enumerate(idx_exprs):
+                    if (
+                        isinstance(e, VarExpr)
+                        and e.name == axis_names[i]
+                        and buffer.shape[i] == op.extents[i]
+                    ):
+                        plan.append(("id", 1))
+                    elif (
+                        isinstance(e, BinExpr)
+                        and e.op == "floordiv"
+                        and isinstance(e.lhs, VarExpr)
+                        and e.lhs.name == axis_names[i]
+                        and isinstance(e.rhs, ConstExpr)
+                        and buffer.shape[i] * int(e.rhs.value) == op.extents[i]
+                    ):
+                        plan.append(("repeat", int(e.rhs.value)))
+                    else:
+                        return None
+                val = get(buffer)
+                for ax, (kind, c) in enumerate(plan):
+                    if kind == "repeat":
+                        val = jnp.repeat(val, c, axis=ax)
+                return val
+
+            def load_fn(buffer, idx_values, idx_exprs):
+                fast = structured_load(buffer, idx_exprs)
+                if fast is not None:
+                    return fast
+                base = get(buffer)
+                idx = tuple(jnp.asarray(v) for v in idx_values)
+                return base[idx]
+
+            for buf, idx_exprs, val_expr in op.stores:
+                senv = scalar_env()
+                senv.update(extra)
+                senv.update(iotas)
+                val = evaluate(val_expr, senv, load_fn)
+                direct = (
+                    len(idx_exprs) == nax
+                    and all(
+                        isinstance(e, VarExpr) and e.name == axis_names[i]
+                        for i, e in enumerate(idx_exprs)
+                    )
+                    and tuple(buf.shape) == op.extents
+                )
+                if direct:
+                    new = jnp.broadcast_to(val, op.extents)
+                else:
+                    cur0 = get(buf)
+                    idx_vals = tuple(
+                        jnp.asarray(evaluate(e, senv, load_fn)) for e in idx_exprs
+                    )
+                    new = cur0.at[idx_vals].set(jnp.asarray(val).astype(cur0.dtype))
+                gput(buf, new, phase)
+
+        def run_custom(op: CustomOp, phase: str, extra):
+            vals = [get(b) for b in op.inputs]
+            out = op.fn(*vals)
+            if tuple(out.shape) != tuple(op.output.shape):
+                raise LoweringError(
+                    f"custom op {op.name}: produced {out.shape}, expected "
+                    f"{op.output.shape}"
+                )
+            gput(op.output, out, phase)
+
+        def run_atomic(op: AtomicOp, phase: str, extra):
+            j = out_window_of[id(op.dst.buffer)]
+            val = get(op.src).astype(jnp.dtype(op.dst.buffer.dtype))
+            block = val.reshape(out_windows[j].block_shape)
+            comb = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op.kind]
+            g = guard(phase)
+            if g is None:
+                out_refs[j][...] = comb(out_refs[j][...], block)
+            else:
+                @pl.when(g)
+                def _():
+                    out_refs[j][...] = comb(out_refs[j][...], block)
+
+        def run_ops(ops: List[TileOp], phase: str, extra):
+            for op in ops:
+                if isinstance(op, CopyOp):
+                    run_copy(op, phase, extra)
+                elif isinstance(op, GemmOp):
+                    run_gemm(op, phase, extra)
+                elif isinstance(op, FillOp):
+                    run_fill(op, phase, extra)
+                elif isinstance(op, ReduceOp):
+                    run_reduce(op, phase, extra)
+                elif isinstance(op, CumsumOp):
+                    run_cumsum(op, phase, extra)
+                elif isinstance(op, ParallelOp):
+                    run_parallel(op, phase, extra)
+                elif isinstance(op, CustomOp):
+                    run_custom(op, phase, extra)
+                elif isinstance(op, AtomicOp):
+                    run_atomic(op, phase, extra)
+                elif isinstance(op, SerialOp):
+                    for i in range(op.extent):
+                        e2 = dict(extra)
+                        e2[op.var.name] = i
+                        run_ops(op.body, phase, e2)
+                elif isinstance(op, PipelinedOp):
+                    raise LoweringError("nested T.Pipelined is unsupported")
+                else:
+                    raise LoweringError(f"Unhandled op {op!r}")
+
+        run_ops(phases.pre, PRE, {})
+        if pipe is not None:
+            run_ops(pipe.body, LOOP, {})
+        run_ops(phases.post, POST, {})
+
+        # write back dirty scratch accumulators
+        for name in dirty:
+            scr_refs[scratch_pos[name]][...] = values[name].astype(
+                scr_refs[scratch_pos[name]].dtype
+            )
+
+    compiler_params = _compiler_params_cls(pltpu)(dimension_semantics=dim_sem)
+    call = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs + alias_in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
+        input_output_aliases=input_output_aliases,
+        interpret=schedule.interpret,
+        compiler_params=compiler_params,
+        name=program.name,
+    )
+
+    n_aliased = len(alias_in_specs)
+
+    def fn(*arrays):
+        operands = [arrays[i] for i in window_param_idx]
+        operands += list(arrays[len(arrays) - n_aliased :]) if n_aliased else []
+        res = call(*operands)
+        return res[0] if len(out_windows) == 1 else tuple(res)
+
+    return CompiledKernel(
+        program, fn, module.info(), arg_params, out_params, backend="pallas"
+    )

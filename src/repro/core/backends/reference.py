@@ -1,0 +1,214 @@
+"""Reference interpreter backend: an independent oracle for the lowering.
+
+Walks every grid cell sequentially and interprets the traced ops over jnp
+arrays — no Pallas, no BlockSpecs, no pipelining.  Tiny shapes only; its
+entire value is being *structurally unrelated* to the Pallas emission so the
+parity suite can cross-check them (DESIGN.md §4.2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from ..buffer import GLOBAL, TileBuffer
+from ..errors import LoweringError
+from ..expr import Expr, VarExpr, evaluate
+from ..lowering.indexing import no_loads
+from ..lowering.module import CompiledKernel, LoweredInfo, LoweredModule
+from ..tile_ops import (
+    AtomicOp,
+    CopyOp,
+    CumsumOp,
+    CustomOp,
+    FillOp,
+    GemmOp,
+    ParallelOp,
+    ReduceOp,
+    ResolvedRegion,
+    SerialOp,
+    TileOp,
+)
+from . import register_backend
+
+
+@register_backend("reference")
+def emit_reference(module: LoweredModule) -> CompiledKernel:
+    import itertools
+
+    import jax.numpy as jnp
+
+    program = module.program
+    phases = module.phases
+    pipe = phases.pipeline
+    arg_params, out_params = module.arg_params, module.out_params
+    kernel_axes = program.grid_axes
+
+    def fn(*arrays):
+        globals_: Dict[str, Any] = {}
+        for p, a in zip(arg_params, arrays):
+            globals_[p.name] = jnp.asarray(a)
+        for p in out_params:
+            if p.name not in globals_:
+                globals_[p.name] = jnp.zeros(p.shape, jnp.dtype(p.dtype))
+
+        for cell in itertools.product(*[range(e) for _, e in kernel_axes]):
+            env0 = {v.name: idx for (v, _), idx in zip(kernel_axes, cell)}
+            tiles: Dict[str, Any] = {}
+
+            def run(ops, extra):
+                for op in ops:
+                    _ref_op(op, globals_, tiles, {**env0, **extra}, jnp)
+
+            run(phases.pre, {})
+            if pipe is not None:
+                for k in range(pipe.extent):
+                    run(pipe.body, {pipe.var.name: k})
+            run(phases.post, {})
+        outs = [globals_[p.name] for p in out_params]
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+    info = LoweredInfo(
+        grid=tuple(e for _, e in kernel_axes),
+        dimension_semantics=("reference",),
+        vmem=module.vmem,
+        inference=module.inference,
+        cost=module.cost,
+        num_stages=1,
+        n_windows_in=len(module.in_windows),
+        n_windows_out=len(module.out_windows),
+    )
+    return CompiledKernel(
+        program, fn, info, arg_params, out_params, backend="reference"
+    )
+
+
+def _ref_op(op: TileOp, globals_: Dict, tiles: Dict, env: Dict, jnp):
+    import jax
+
+    def ev(e: Expr, extra=None, load_fn=no_loads):
+        en = dict(env)
+        if extra:
+            en.update(extra)
+        return evaluate(e, en, load_fn)
+
+    def get(buf: TileBuffer):
+        if buf.scope == GLOBAL:
+            return globals_[buf.name]
+        if buf.name not in tiles:
+            tiles[buf.name] = jnp.zeros(buf.shape, jnp.dtype(buf.dtype))
+        return tiles[buf.name]
+
+    def put(buf: TileBuffer, val):
+        val = jnp.broadcast_to(val, buf.shape).astype(jnp.dtype(buf.dtype))
+        if buf.scope == GLOBAL:
+            globals_[buf.name] = val
+        else:
+            tiles[buf.name] = val
+
+    def region_read(region: ResolvedRegion):
+        base = get(region.buffer)
+        starts = [jnp.asarray(ev(s), jnp.int32) for s in region.starts]
+        val = jax.lax.dynamic_slice(base, starts, region.sizes)
+        keep = tuple(i for i, c in enumerate(region.collapsed) if not c)
+        return val.reshape(tuple(region.sizes[i] for i in keep))
+
+    def region_write(region: ResolvedRegion, val):
+        base = get(region.buffer)
+        starts = [jnp.asarray(ev(s), jnp.int32) for s in region.starts]
+        upd = val.reshape(region.sizes).astype(base.dtype)
+        out = jax.lax.dynamic_update_slice(base, upd, starts)
+        if region.buffer.scope == GLOBAL:
+            globals_[region.buffer.name] = out
+        else:
+            tiles[region.buffer.name] = out
+
+    if isinstance(op, CopyOp):
+        region_write(op.dst, region_read(op.src).astype(jnp.dtype(op.dst.buffer.dtype)))
+    elif isinstance(op, FillOp):
+        put(op.buffer, jnp.full(op.buffer.shape, ev(op.value), jnp.dtype(op.buffer.dtype)))
+    elif isinstance(op, GemmOp):
+        a, b = get(op.a), get(op.b)
+        if op.transpose_a:
+            a = jnp.swapaxes(a, -1, -2)
+        if op.transpose_b:
+            b = jnp.swapaxes(b, -1, -2)
+        acc = get(op.c)
+        prod = jax.lax.dot_general(
+            a, b, (((a.ndim - 1,), (b.ndim - 2,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        put(op.c, acc + prod.astype(acc.dtype))
+    elif isinstance(op, ReduceOp):
+        src = get(op.src)
+        fns = {
+            "sum": jnp.sum,
+            "max": jnp.max,
+            "min": jnp.min,
+            "prod": jnp.prod,
+            "absmax": lambda x, axis: jnp.max(jnp.abs(x), axis=axis),
+        }
+        val = fns[op.kind](src, axis=op.axis)
+        if not op.clear:
+            comb = {
+                "sum": jnp.add,
+                "max": jnp.maximum,
+                "min": jnp.minimum,
+                "prod": jnp.multiply,
+                "absmax": jnp.maximum,
+            }[op.kind]
+            val = comb(get(op.dst), val.astype(get(op.dst).dtype))
+        put(op.dst, val)
+    elif isinstance(op, CumsumOp):
+        src = get(op.src)
+        if op.reverse:
+            src = jnp.flip(src, axis=op.axis)
+        val = jnp.cumsum(src, axis=op.axis)
+        if op.reverse:
+            val = jnp.flip(val, axis=op.axis)
+        put(op.dst, val)
+    elif isinstance(op, ParallelOp):
+        import jax.lax as lax
+
+        nax = len(op.axes)
+        iotas = {}
+        for i, (v, e) in enumerate(zip(op.axes, op.extents)):
+            shape = [1] * nax
+            shape[i] = e
+            iotas[v.name] = lax.broadcasted_iota(jnp.int32, tuple(shape), i)
+
+        def load_fn(buffer, idx_values, idx_exprs):
+            base = get(buffer)
+            return base[tuple(jnp.asarray(v) for v in idx_values)]
+
+        for buf, idx_exprs, val_expr in op.stores:
+            val = ev(val_expr, extra=iotas, load_fn=load_fn)
+            idx_vals = tuple(jnp.asarray(ev(e, extra=iotas, load_fn=load_fn)) for e in idx_exprs)
+            direct = (
+                len(idx_exprs) == nax
+                and all(
+                    isinstance(e, VarExpr) and e.name == op.axes[i].name
+                    for i, e in enumerate(idx_exprs)
+                )
+                and tuple(buf.shape) == op.extents
+            )
+            if direct:
+                put(buf, jnp.broadcast_to(val, op.extents))
+            else:
+                cur = get(buf)
+                put(buf, cur.at[idx_vals].set(jnp.asarray(val).astype(cur.dtype)))
+    elif isinstance(op, CustomOp):
+        put(op.output, op.fn(*[get(b) for b in op.inputs]))
+    elif isinstance(op, AtomicOp):
+        base = get(op.dst.buffer)
+        starts = [jnp.asarray(ev(s), jnp.int32) for s in op.dst.starts]
+        cur = jax.lax.dynamic_slice(base, starts, op.dst.sizes)
+        val = get(op.src).reshape(op.dst.sizes).astype(cur.dtype)
+        comb = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op.kind]
+        globals_[op.dst.buffer.name] = jax.lax.dynamic_update_slice(
+            base, comb(cur, val), starts
+        )
+    elif isinstance(op, SerialOp):
+        for i in range(op.extent):
+            for o in op.body:
+                _ref_op(o, globals_, tiles, {**env, op.var.name: i}, jnp)
+    else:
+        raise LoweringError(f"reference: unhandled op {op!r}")

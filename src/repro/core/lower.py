@@ -1,1087 +1,62 @@
-"""Lowering: TileProgram -> Pallas TPU kernel (and a reference interpreter).
+"""Compatibility shim — the monolithic lowering moved (DESIGN.md §1).
 
-The central translation (DESIGN.md §2): a ``T.Pipelined`` loop over K with
-global->shared ``T.copy`` ops becomes the **Pallas grid pipeline** — the
-copies turn into BlockSpec-managed windows whose index maps depend on the
-reduction grid axis, so the hardware DMA double-buffers them and overlaps
-with compute exactly like cp.async/TMA rings on GPUs.  Fragment buffers
-become VMEM scratch accumulators persisting across the ``arbitrary`` axis.
+This module used to hold the whole compiler; it is now split into
 
-Two backends:
+* :mod:`repro.core.lowering`  — the pass pipeline producing a
+  :class:`~repro.core.lowering.LoweredModule` analysis artifact
+  (``split_phases``, ``collect_windows``, layout inference, ``plan_grid``,
+  ``plan_vmem``, cost estimation), memoized per (program fingerprint,
+  schedule).
+* :mod:`repro.core.backends`  — the pluggable backend registry; ``pallas``
+  and ``reference`` are built in, third parties add targets with
+  :func:`repro.core.backends.register_backend`.
+* :mod:`repro.core.compiler`  — the ``compile()`` entry point dispatching
+  through the registry, with kernel-level caching.
 
-* ``pallas``    — emits ``pl.pallas_call`` (TPU target; ``interpret=True``
-                  executes the same kernel body on CPU for validation).
-* ``reference`` — a direct trace interpreter over jnp arrays (tiny shapes
-                  only); an independent oracle for the lowering itself.
+Importing the old names from here keeps working; new code should import
+from the packages above.
 """
-from __future__ import annotations
-
-import dataclasses
-import functools
-import math
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
-
-from .buffer import FRAGMENT, GLOBAL, SHARED, TileBuffer, dtype_bits
-from .errors import LoweringError
-from .expr import (
-    BinExpr,
-    ConstExpr,
-    Expr,
-    VarExpr,
-    evaluate,
-    linear_decompose,
-    static_eval,
+from .backends import available_backends, get_backend, register_backend  # noqa: F401
+from .compiler import clear_compile_cache, compile  # noqa: F401
+from .lowering import (  # noqa: F401
+    LOOP,
+    POST,
+    PRE,
+    CompiledKernel,
+    KernelCost,
+    LoweredInfo,
+    LoweredModule,
+    Phases,
+    Window,
+    analyze,
+    collect_windows,
+    estimate_cost,
+    make_index_map,
+    split_phases,
 )
-from .infer import InferenceResult, infer_layouts
-from .program import TileProgram
-from .schedule import Schedule, VmemPlan, plan_vmem, swizzle_decode, validate_swizzle
-from .tile_ops import (
-    AtomicOp,
-    CopyOp,
-    CumsumOp,
-    CustomOp,
-    FillOp,
-    GemmOp,
-    ParallelOp,
-    PipelinedOp,
-    ReduceOp,
-    ResolvedRegion,
-    SerialOp,
-    TileOp,
-)
-
-PRE, LOOP, POST = "pre", "loop", "post"
-
-
-# ---------------------------------------------------------------------------
-# Cost info recorded at lowering time (feeds autotune + benchmarks + roofline)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class KernelCost:
-    flops: int
-    hbm_bytes: int
-    grid: Tuple[int, ...]
-    vmem_bytes: int
-
-    def compute_seconds(self, peak_flops: float = 197e12) -> float:
-        return self.flops / peak_flops
-
-    def memory_seconds(self, hbm_bw: float = 819e9) -> float:
-        return self.hbm_bytes / hbm_bw
-
-    @property
-    def arithmetic_intensity(self) -> float:
-        return self.flops / max(self.hbm_bytes, 1)
-
-    def bound(self, peak_flops: float = 197e12, hbm_bw: float = 819e9) -> str:
-        return (
-            "compute" if self.compute_seconds(peak_flops) >= self.memory_seconds(hbm_bw)
-            else "memory"
-        )
-
-
-# ---------------------------------------------------------------------------
-# Phase classification
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class Phases:
-    pre: List[TileOp]
-    pipeline: Optional[PipelinedOp]
-    post: List[TileOp]
-
-
-def split_phases(program: TileProgram) -> Phases:
-    pre: List[TileOp] = []
-    pipe: Optional[PipelinedOp] = None
-    post: List[TileOp] = []
-    for op in program.ops:
-        if isinstance(op, PipelinedOp):
-            if pipe is not None:
-                raise LoweringError(
-                    f"{program.name}: multiple T.Pipelined loops at kernel top "
-                    "level; fuse them or split the kernel (one grid pipeline "
-                    "per Pallas kernel)."
-                )
-            pipe = op
-        elif pipe is None:
-            pre.append(op)
-        else:
-            post.append(op)
-    return Phases(pre, pipe, post)
-
-
-# ---------------------------------------------------------------------------
-# Window extraction (copies that become BlockSpecs)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class Window:
-    """One BlockSpec-managed operand window."""
-
-    param: TileBuffer  # the global buffer
-    onchip: Optional[TileBuffer]  # dst for inputs; src for outputs (may be None for atomics)
-    region: ResolvedRegion  # region on the global side
-    phase: str
-    is_output: bool
-    aliased: bool = False  # in-out (atomic RMW)
-
-    @property
-    def block_shape(self) -> Tuple[int, ...]:
-        return tuple(self.region.sizes)
-
-
-def _is_onchip(buf: TileBuffer) -> bool:
-    return buf.scope in (SHARED, FRAGMENT)
-
-
-def collect_windows(program: TileProgram, phases: Phases):
-    """Find all global<->onchip copies; returns (in_windows, out_windows,
-    window_backed: dst name -> window idx, store_ops)."""
-    in_windows: List[Window] = []
-    out_windows: List[Window] = []
-    fed_by: Dict[str, Window] = {}
-    stores: List[Tuple[TileOp, str, Window]] = []  # (op, phase, out window)
-
-    def scan(ops: List[TileOp], phase: str):
-        for op in ops:
-            if isinstance(op, SerialOp):
-                scan(op.body, phase)
-            elif isinstance(op, CopyOp):
-                s, d = op.src.buffer, op.dst.buffer
-                if s.scope == GLOBAL and _is_onchip(d):
-                    if d.name in fed_by:
-                        raise LoweringError(
-                            f"{program.name}: buffer {d.name} fed by two "
-                            "global copies; each shared tile must have one "
-                            "producer copy."
-                        )
-                    if any(c for c in op.dst.collapsed) or op.dst.tile_shape != tuple(
-                        op.dst.buffer.shape
-                    ):
-                        raise LoweringError(
-                            f"{program.name}: global->onchip copy must fill the "
-                            f"whole destination tile ({op})"
-                        )
-                    w = Window(s, d, op.src, phase, is_output=False)
-                    in_windows.append(w)
-                    fed_by[d.name] = w
-                elif _is_onchip(s) and d.scope == GLOBAL:
-                    w = _merge_out_window(out_windows, Window(d, s, op.dst, phase, True))
-                    stores.append((op, phase, w))
-                elif s.scope == GLOBAL and d.scope == GLOBAL:
-                    raise LoweringError(
-                        f"{program.name}: global->global copy; stage through "
-                        "a shared tile."
-                    )
-            elif isinstance(op, AtomicOp):
-                if op.dst.buffer.scope != GLOBAL:
-                    continue
-                w = _merge_out_window(
-                    out_windows, Window(op.dst.buffer, None, op.dst, phase, True, aliased=True)
-                )
-                w.aliased = True
-                stores.append((op, phase, w))
-
-    scan(phases.pre, PRE)
-    if phases.pipeline is not None:
-        scan(phases.pipeline.body, LOOP)
-    scan(phases.post, POST)
-    return in_windows, out_windows, fed_by, stores
-
-
-def _merge_out_window(out_windows: List[Window], w: Window) -> Window:
-    for existing in out_windows:
-        if existing.param is w.param:
-            if existing.block_shape != w.block_shape or not _same_starts(
-                existing.region, w.region
-            ):
-                raise LoweringError(
-                    f"two stores to {w.param.name} with different windows; "
-                    "unify the destination regions."
-                )
-            return existing
-    out_windows.append(w)
-    return w
-
-
-def _same_starts(a: ResolvedRegion, b: ResolvedRegion) -> bool:
-    return [repr(s) for s in a.starts] == [repr(s) for s in b.starts]
-
-
-# ---------------------------------------------------------------------------
-# Index-map derivation
-# ---------------------------------------------------------------------------
-
-
-def make_index_map(
-    region: ResolvedRegion,
-    env_builder: Callable[..., Dict[str, Any]],
-):
-    """Build a Pallas ``index_map(*grid_ids) -> block indices``.
-
-    Affine starts with size-divisible coefficients fold statically; otherwise
-    we fall back to a runtime floordiv (correct when the region is aligned —
-    the TileLang contract for unmasked copies).
-    """
-    starts, sizes = region.starts, region.sizes
-
-    def fold(e: Expr, size: int):
-        if size == 1:
-            return ("expr", e)
-        dec = linear_decompose(e)
-        if dec is not None and all(v % size == 0 for v in dec.values()):
-            folded = {k: v // size for k, v in dec.items()}
-            return ("affine", folded)
-        return ("div", e)
-
-    plans = [fold(e, s) for e, s in zip(starts, sizes)]
-
-    def index_map(*grid_ids):
-        env = env_builder(*grid_ids)
-
-        def ev(e: Expr):
-            return evaluate(e, env, load_fn=_no_loads)
-
-        out = []
-        for (kind, payload), size in zip(plans, sizes):
-            if kind == "expr":
-                out.append(ev(payload))
-            elif kind == "affine":
-                acc = payload.get("", 0)
-                for name, coeff in payload.items():
-                    if name == "":
-                        continue
-                    if coeff:
-                        acc = acc + coeff * env[name]
-                out.append(acc)
-            else:
-                out.append(ev(payload) // size)
-        return tuple(out)
-
-    return index_map
-
-
-def _no_loads(buffer, idx_values, idx_exprs):
-    raise LoweringError("Buffer loads are not allowed in index expressions")
-
-
-# ---------------------------------------------------------------------------
-# Compiled kernel object
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class LoweredInfo:
-    grid: Tuple[int, ...]
-    dimension_semantics: Tuple[str, ...]
-    vmem: VmemPlan
-    inference: InferenceResult
-    cost: KernelCost
-    num_stages: int
-    n_windows_in: int
-    n_windows_out: int
-
-
-class CompiledKernel:
-    """Callable wrapper: ``kernel(*input_arrays) -> output(s)``.
-
-    Inputs are the program's read-only global params (in declaration order)
-    followed by any in-out (atomic) params; outputs are the written globals
-    in declaration order.
-    """
-
-    def __init__(self, program: TileProgram, fn: Callable, info: LoweredInfo,
-                 arg_params: List[TileBuffer], out_params: List[TileBuffer]):
-        self.program = program
-        self._fn = fn
-        self.info = info
-        self.arg_params = arg_params
-        self.out_params = out_params
-        self.__name__ = program.name
-
-    def __call__(self, *arrays):
-        if len(arrays) != len(self.arg_params):
-            raise LoweringError(
-                f"{self.program.name}: expected {len(self.arg_params)} arrays "
-                f"({[p.name for p in self.arg_params]}), got {len(arrays)}"
-            )
-        for arr, p in zip(arrays, self.arg_params):
-            if tuple(arr.shape) != p.shape:
-                raise LoweringError(
-                    f"{self.program.name}: arg {p.name} shape {arr.shape} != "
-                    f"declared {p.shape}"
-                )
-        out = self._fn(*arrays)
-        return out
-
-
-# ---------------------------------------------------------------------------
-# The Pallas lowering
-# ---------------------------------------------------------------------------
-
-
-def compile(  # noqa: A001 — mirrors tilelang.compile
-    program: TileProgram,
-    schedule: Optional[Schedule] = None,
-    backend: str = "pallas",
-) -> CompiledKernel:
-    schedule = schedule or Schedule()
-    if backend == "reference":
-        return _compile_reference(program, schedule)
-    if backend != "pallas":
-        raise LoweringError(f"Unknown backend {backend!r}")
-    return _compile_pallas(program, schedule)
-
-
-def _grid_layout(program: TileProgram, phases: Phases, schedule: Schedule):
-    """Returns (grid, env_builder, kdim, dimension_semantics).
-
-    Kernel axes are reversed so the first-declared axis (``bx``) is the
-    fastest-varying parallel dimension (CUDA blockIdx.x convention), and the
-    pipelined axis is innermost overall so accumulators stay resident.
-    """
-    kernel_axes = program.grid_axes  # declaration order
-    n = len(kernel_axes)
-    swz = schedule.grid_swizzle
-    if swz is None:
-        swz = program.annotations.swizzle
-
-    pipe = phases.pipeline
-    kext = pipe.extent if pipe is not None else None
-    kname = pipe.var.name if pipe is not None else None
-
-    if swz is not None and n == 2:
-        (v0, e0), (v1, e1) = kernel_axes
-        # pallas-minor ordering: v1 (by) slower, v0 (bx) faster in raster;
-        # flatten to one axis and decode with panel swizzling.  Clamp the
-        # panel height to a divisor of the row extent (traced decode needs
-        # uniform panels).
-        factor = min(swz, e1)
-        if e1 % factor != 0:
-            factor = math.gcd(e1, factor) or 1
-        validate_swizzle(e1, e0, factor)
-        grid = (e1 * e0,) + ((kext,) if kext else ())
-        sem = ("arbitrary",) * len(grid)
-
-        def env_builder(*gids):
-            flat = gids[0]
-            i1, i0 = swizzle_decode(flat, e1, e0, factor)
-            env = {v1.name: i1, v0.name: i0}
-            if kname is not None:
-                env[kname] = gids[1]
-            return env
-
-        kdim = 1 if kext else None
-        return grid, env_builder, kdim, sem
-
-    grid = tuple(e for _, e in reversed(kernel_axes)) + ((kext,) if kext else ())
-    sem = ("parallel",) * n + (("arbitrary",) if kext else ())
-
-    def env_builder(*gids):
-        env = {}
-        for i, (v, _) in enumerate(kernel_axes):
-            env[v.name] = gids[n - 1 - i]
-        if kname is not None:
-            env[kname] = gids[n]
-        return env
-
-    kdim = n if kext else None
-    return grid, env_builder, kdim, sem
-
-
-def _compile_pallas(program: TileProgram, schedule: Schedule) -> CompiledKernel:
-    import jax
-    import jax.numpy as jnp
-    from jax.experimental import pallas as pl
-    from jax.experimental.pallas import tpu as pltpu
-
-    inference = infer_layouts(program)
-    phases = split_phases(program)
-    in_windows, out_windows, fed_by, _stores = collect_windows(program, phases)
-    grid, env_builder, kdim, dim_sem = _grid_layout(program, phases, schedule)
-    if schedule.dimension_semantics is not None:
-        dim_sem = schedule.dimension_semantics
-
-    pipe = phases.pipeline
-    num_stages = (
-        schedule.num_stages
-        if schedule.num_stages is not None
-        else (pipe.num_stages if pipe is not None else 1)
-    )
-
-    # ---- VMEM plan -------------------------------------------------------
-    pipelined_inputs = {
-        w.onchip.name: max(2, num_stages)
-        for w in in_windows
-        if w.phase == LOOP and w.onchip is not None
-    }
-    vmem = plan_vmem(program, schedule, pipelined_inputs)
-
-    # ---- scratch: every onchip buffer not window-backed ---------------------
-    scratch_bufs: List[TileBuffer] = [
-        b for b in program.allocs if b.name not in fed_by
-    ]
-    scratch_pos = {b.name: i for i, b in enumerate(scratch_bufs)}
-
-    # ---- params/ordering ---------------------------------------------------
-    written = {id(p) for p in program.written_globals()}
-    aliased_params = [w.param for w in out_windows if w.aliased]
-    arg_params = [p for p in program.params if id(p) not in written]
-    arg_params += [p for p in aliased_params]  # in-out params passed as inputs
-    out_params = [p for p in program.params if id(p) in written]
-
-    # operand list: one per input window (+ aliased outputs appended last)
-    window_param_idx: List[int] = []
-    param_pos = {id(p): i for i, p in enumerate(arg_params)}
-    for w in in_windows:
-        if id(w.param) not in param_pos:
-            # a written global read back through a window — unsupported
-            raise LoweringError(
-                f"{program.name}: {w.param.name} is both written and read "
-                "through separate windows; use T.atomic or split kernels."
-            )
-        window_param_idx.append(param_pos[id(w.param)])
-    alias_operand_idx: Dict[int, int] = {}
-    n_in_ops = len(in_windows)
-    for j, w in enumerate(out_windows):
-        if w.aliased:
-            alias_operand_idx[n_in_ops + len(alias_operand_idx)] = j
-
-    # ---- specs ----------------------------------------------------------------
-    in_specs = [
-        pl.BlockSpec(w.block_shape, make_index_map(w.region, env_builder))
-        for w in in_windows
-    ]
-    alias_in_specs = [
-        pl.BlockSpec(w.block_shape, make_index_map(w.region, env_builder))
-        for w in out_windows
-        if w.aliased
-    ]
-    out_specs = [
-        pl.BlockSpec(w.block_shape, make_index_map(w.region, env_builder))
-        for w in out_windows
-    ]
-    out_shape = [
-        jax.ShapeDtypeStruct(w.param.shape, jnp.dtype(w.param.dtype))
-        for w in out_windows
-    ]
-    scratch_shapes = [
-        pltpu.VMEM(b.shape, jnp.dtype(b.dtype)) for b in scratch_bufs
-    ]
-    input_output_aliases = {
-        n_in_ops + i: j for i, j in enumerate(alias_operand_idx.values())
-    }
-
-    window_of: Dict[str, int] = {
-        w.onchip.name: i for i, w in enumerate(in_windows) if w.onchip is not None
-    }
-    out_window_of: Dict[int, int] = {id(w.param): j for j, w in enumerate(out_windows)}
-
-    kext = pipe.extent if pipe is not None else None
-
-    # ---- kernel body ------------------------------------------------------
-    def body(*refs):
-        n_in_total = n_in_ops + len(alias_in_specs)
-        in_refs = refs[:n_in_total]
-        out_refs = refs[n_in_total : n_in_total + len(out_windows)]
-        scr_refs = refs[n_in_total + len(out_windows) :]
-
-        grid_ids = tuple(pl.program_id(d) for d in range(len(grid)))
-        env_scalars = env_builder(*grid_ids)
-        kval = grid_ids[kdim] if kdim is not None else None
-
-        values: Dict[str, Any] = {}
-        dirty: set = set()
-
-        def squeeze(arr, region: ResolvedRegion):
-            keep = tuple(
-                i for i, c in enumerate(region.collapsed) if not c
-            )
-            if len(keep) == arr.ndim:
-                return arr
-            return arr.reshape(tuple(arr.shape[i] for i in keep))
-
-        def get(buf: TileBuffer):
-            if buf.name in values:
-                return values[buf.name]
-            if buf.name in window_of:
-                w = in_windows[window_of[buf.name]]
-                val = squeeze(in_refs[window_of[buf.name]][...], w.region)
-                val = val.astype(jnp.dtype(buf.dtype))
-                values[buf.name] = val
-                return val
-            pos = scratch_pos[buf.name]
-            val = scr_refs[pos][...]
-            values[buf.name] = val
-            return val
-
-        def put(buf: TileBuffer, val):
-            if buf.name in window_of:
-                raise LoweringError(
-                    f"{program.name}: write to window-backed tile {buf.name}"
-                )
-            val = val.astype(jnp.dtype(buf.dtype))
-            val = jnp.broadcast_to(val, buf.shape)
-            values[buf.name] = val
-            if buf.name in scratch_pos:
-                dirty.add(buf.name)
-
-        def gput(buf: TileBuffer, new, phase: str):
-            """Phase-guarded value update.
-
-            PRE ops must only take effect at k==0 and POST ops at k==last —
-            the body re-executes every grid step, and unguarded PRE/POST
-            writes would corrupt accumulators carried across the reduction
-            axis.  Guards are functional selects (Mosaic-friendly), not
-            control flow."""
-            g = guard(phase)
-            if g is None:
-                put(buf, new)
-                return
-            new = jnp.broadcast_to(
-                jnp.asarray(new).astype(jnp.dtype(buf.dtype)), buf.shape
-            )
-            put(buf, jnp.where(g, new, get(buf).astype(new.dtype)))
-
-        def scalar_env():
-            return dict(env_scalars)
-
-        def eval_expr(e: Expr, extra: Dict[str, Any], load_fn):
-            env = scalar_env()
-            env.update(extra)
-            return evaluate(e, env, load_fn)
-
-        def guard(phase: str):
-            """Functional guard for value ops outside the loop phase."""
-            if kval is None:
-                return None
-            if phase == PRE:
-                return kval == 0
-            if phase == POST:
-                return kval == kext - 1
-            return None
-
-        def run_fill(op: FillOp, phase: str, extra):
-            fillval = eval_expr(op.value, extra, _no_loads)
-            tile = jnp.full(op.buffer.shape, fillval, dtype=jnp.dtype(op.buffer.dtype))
-            gput(op.buffer, tile, phase)
-
-        def region_value(region: ResolvedRegion, extra):
-            """Read a region of an on-chip buffer as a tile value."""
-            base = get(region.buffer)
-            starts = [eval_expr(s, extra, _no_loads) for s in region.starts]
-            if all(isinstance(s, (int, np.integer)) and s == 0 for s in starts) and tuple(
-                region.sizes
-            ) == tuple(region.buffer.shape):
-                val = base
-            else:
-                import jax.lax as lax
-
-                val = lax.dynamic_slice(base, [jnp.asarray(s, jnp.int32) for s in starts], region.sizes)
-            return squeeze(val, region)
-
-        def run_copy(op: CopyOp, phase: str, extra):
-            s, d = op.src.buffer, op.dst.buffer
-            if s.scope == GLOBAL and _is_onchip(d):
-                val = get(d)  # window read; already cast
-                values[d.name] = val
-                return
-            if _is_onchip(s) and d.scope == GLOBAL:
-                j = out_window_of[id(d)]
-                w = out_windows[j]
-                val = region_value(op.src, extra).astype(jnp.dtype(d.dtype))
-                block = val.reshape(w.block_shape)
-                g = guard(phase)
-                if g is None:
-                    out_refs[j][...] = block
-                else:
-                    @pl.when(g)
-                    def _():
-                        out_refs[j][...] = block
-                return
-            # on-chip -> on-chip
-            val = region_value(op.src, extra)
-            if tuple(op.dst.tile_shape) == tuple(d.shape) and not any(op.dst.collapsed):
-                gput(d, val, phase)
-            else:
-                import jax.lax as lax
-
-                starts = [eval_expr(x, extra, _no_loads) for x in op.dst.starts]
-                cur = get(d)
-                upd = val.reshape(tuple(op.dst.sizes)).astype(cur.dtype)
-                gput(
-                    d,
-                    lax.dynamic_update_slice(
-                        cur, upd, [jnp.asarray(x, jnp.int32) for x in starts]
-                    ),
-                    phase,
-                )
-
-        def run_gemm(op: GemmOp, phase: str, extra):
-            a, b = get(op.a), get(op.b)
-            if op.transpose_a:
-                a = a.T if a.ndim == 2 else jnp.swapaxes(a, -1, -2)
-            if op.transpose_b:
-                b = b.T if b.ndim == 2 else jnp.swapaxes(b, -1, -2)
-            acc = get(op.c)
-            prod = jax.lax.dot_general(
-                a,
-                b,
-                dimension_numbers=(((a.ndim - 1,), (b.ndim - 2,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
-            gput(op.c, acc + prod.astype(acc.dtype), phase)
-
-        def run_reduce(op: ReduceOp, phase: str, extra):
-            src = get(op.src)
-            if op.kind == "absmax":
-                val = jnp.max(jnp.abs(src), axis=op.axis)
-            elif op.kind == "sum":
-                val = jnp.sum(src, axis=op.axis)
-            elif op.kind == "max":
-                val = jnp.max(src, axis=op.axis)
-            elif op.kind == "min":
-                val = jnp.min(src, axis=op.axis)
-            elif op.kind == "prod":
-                val = jnp.prod(src, axis=op.axis)
-            else:
-                raise LoweringError(f"Unknown reduce kind {op.kind}")
-            if not op.clear:
-                cur = get(op.dst)
-                comb = {
-                    "sum": jnp.add,
-                    "max": jnp.maximum,
-                    "min": jnp.minimum,
-                    "prod": jnp.multiply,
-                    "absmax": jnp.maximum,
-                }[op.kind]
-                val = comb(cur, val.astype(cur.dtype))
-            gput(op.dst, val, phase)
-
-        def run_cumsum(op: CumsumOp, phase: str, extra):
-            src = get(op.src)
-            if op.reverse:
-                src = jnp.flip(src, axis=op.axis)
-            val = jnp.cumsum(src, axis=op.axis)
-            if op.reverse:
-                val = jnp.flip(val, axis=op.axis)
-            gput(op.dst, val, phase)
-
-        def run_parallel(op: ParallelOp, phase: str, extra):
-            nax = len(op.axes)
-            axis_names = [a.name for a in op.axes]
-            iotas = {}
-            for i, (v, e) in enumerate(zip(op.axes, op.extents)):
-                shape = [1] * nax
-                shape[i] = e
-                iotas[v.name] = jax.lax.broadcasted_iota(jnp.int32, tuple(shape), i)
-
-            def structured_load(buffer, idx_exprs):
-                """TPU-friendly load patterns over the parallel box.
-
-                * all-direct indices -> the whole tile (pure vector op)
-                * ``ax // c`` on an axis -> jnp.repeat along that axis (the
-                  vectorized sub-byte unpack idiom; the TPU analogue of PTX
-                  lop3 byte-extraction in the paper's dequant kernels)
-                Returns None when the pattern doesn't apply.
-                """
-                if len(idx_exprs) != buffer.ndim or len(idx_exprs) != nax:
-                    return None
-                plan = []
-                for i, e in enumerate(idx_exprs):
-                    if (
-                        isinstance(e, VarExpr)
-                        and e.name == axis_names[i]
-                        and buffer.shape[i] == op.extents[i]
-                    ):
-                        plan.append(("id", 1))
-                    elif (
-                        isinstance(e, BinExpr)
-                        and e.op == "floordiv"
-                        and isinstance(e.lhs, VarExpr)
-                        and e.lhs.name == axis_names[i]
-                        and isinstance(e.rhs, ConstExpr)
-                        and buffer.shape[i] * int(e.rhs.value) == op.extents[i]
-                    ):
-                        plan.append(("repeat", int(e.rhs.value)))
-                    else:
-                        return None
-                val = get(buffer)
-                for ax, (kind, c) in enumerate(plan):
-                    if kind == "repeat":
-                        val = jnp.repeat(val, c, axis=ax)
-                return val
-
-            def load_fn(buffer, idx_values, idx_exprs):
-                fast = structured_load(buffer, idx_exprs)
-                if fast is not None:
-                    return fast
-                base = get(buffer)
-                idx = tuple(jnp.asarray(v) for v in idx_values)
-                return base[idx]
-
-            for buf, idx_exprs, val_expr in op.stores:
-                senv = scalar_env()
-                senv.update(extra)
-                senv.update(iotas)
-                val = evaluate(val_expr, senv, load_fn)
-                direct = (
-                    len(idx_exprs) == nax
-                    and all(
-                        isinstance(e, VarExpr) and e.name == axis_names[i]
-                        for i, e in enumerate(idx_exprs)
-                    )
-                    and tuple(buf.shape) == op.extents
-                )
-                if direct:
-                    new = jnp.broadcast_to(val, op.extents)
-                else:
-                    cur0 = get(buf)
-                    idx_vals = tuple(
-                        jnp.asarray(evaluate(e, senv, load_fn)) for e in idx_exprs
-                    )
-                    new = cur0.at[idx_vals].set(jnp.asarray(val).astype(cur0.dtype))
-                gput(buf, new, phase)
-
-        def run_custom(op: CustomOp, phase: str, extra):
-            vals = [get(b) for b in op.inputs]
-            out = op.fn(*vals)
-            if tuple(out.shape) != tuple(op.output.shape):
-                raise LoweringError(
-                    f"custom op {op.name}: produced {out.shape}, expected "
-                    f"{op.output.shape}"
-                )
-            gput(op.output, out, phase)
-
-        def run_atomic(op: AtomicOp, phase: str, extra):
-            j = out_window_of[id(op.dst.buffer)]
-            val = get(op.src).astype(jnp.dtype(op.dst.buffer.dtype))
-            block = val.reshape(out_windows[j].block_shape)
-            comb = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op.kind]
-            g = guard(phase)
-            if g is None:
-                out_refs[j][...] = comb(out_refs[j][...], block)
-            else:
-                @pl.when(g)
-                def _():
-                    out_refs[j][...] = comb(out_refs[j][...], block)
-
-        def run_ops(ops: List[TileOp], phase: str, extra):
-            for op in ops:
-                if isinstance(op, CopyOp):
-                    run_copy(op, phase, extra)
-                elif isinstance(op, GemmOp):
-                    run_gemm(op, phase, extra)
-                elif isinstance(op, FillOp):
-                    run_fill(op, phase, extra)
-                elif isinstance(op, ReduceOp):
-                    run_reduce(op, phase, extra)
-                elif isinstance(op, CumsumOp):
-                    run_cumsum(op, phase, extra)
-                elif isinstance(op, ParallelOp):
-                    run_parallel(op, phase, extra)
-                elif isinstance(op, CustomOp):
-                    run_custom(op, phase, extra)
-                elif isinstance(op, AtomicOp):
-                    run_atomic(op, phase, extra)
-                elif isinstance(op, SerialOp):
-                    for i in range(op.extent):
-                        e2 = dict(extra)
-                        e2[op.var.name] = i
-                        run_ops(op.body, phase, e2)
-                elif isinstance(op, PipelinedOp):
-                    raise LoweringError("nested T.Pipelined is unsupported")
-                else:
-                    raise LoweringError(f"Unhandled op {op!r}")
-
-        run_ops(phases.pre, PRE, {})
-        if pipe is not None:
-            run_ops(pipe.body, LOOP, {})
-        run_ops(phases.post, POST, {})
-
-        # write back dirty scratch accumulators
-        for name in dirty:
-            scr_refs[scratch_pos[name]][...] = values[name].astype(
-                scr_refs[scratch_pos[name]].dtype
-            )
-
-    # ---- cost accounting -----------------------------------------------------
-    cost = _estimate_cost(program, phases, grid, in_windows, out_windows, vmem)
-
-    compiler_params = pltpu.CompilerParams(dimension_semantics=dim_sem)
-    call = pl.pallas_call(
-        body,
-        grid=grid,
-        in_specs=in_specs + alias_in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        scratch_shapes=scratch_shapes,
-        input_output_aliases=input_output_aliases,
-        interpret=schedule.interpret,
-        compiler_params=compiler_params,
-        name=program.name,
-    )
-
-    n_aliased = len(alias_in_specs)
-
-    def fn(*arrays):
-        operands = [arrays[i] for i in window_param_idx]
-        operands += list(arrays[len(arrays) - n_aliased :]) if n_aliased else []
-        res = call(*operands)
-        return res[0] if len(out_windows) == 1 else tuple(res)
-
-    info = LoweredInfo(
-        grid=grid,
-        dimension_semantics=tuple(dim_sem),
-        vmem=vmem,
-        inference=inference,
-        cost=cost,
-        num_stages=num_stages,
-        n_windows_in=len(in_windows),
-        n_windows_out=len(out_windows),
-    )
-    return CompiledKernel(program, fn, info, arg_params, out_params)
-
-
-def _estimate_cost(program, phases, grid, in_windows, out_windows, vmem) -> KernelCost:
-    total_steps = int(np.prod(grid))
-    pipe = phases.pipeline
-    cells = total_steps // (pipe.extent if pipe is not None else 1)
-
-    flops = 0
-
-    def op_flops(op: TileOp) -> int:
-        if isinstance(op, GemmOp):
-            return 2 * op.m * op.n * op.k
-        if isinstance(op, ParallelOp):
-            return int(np.prod(op.extents)) * max(1, len(op.stores)) * 2
-        if isinstance(op, (ReduceOp,)):
-            return op.src.size
-        if isinstance(op, CumsumOp):
-            return op.src.size
-        if isinstance(op, SerialOp):
-            return op.extent * sum(op_flops(o) for o in op.body)
-        return 0
-
-    for op in phases.pre + phases.post:
-        flops += cells * op_flops(op)
-    if pipe is not None:
-        for op in pipe.body:
-            flops += total_steps * op_flops(op)
-
-    hbm = 0
-    for w in in_windows:
-        steps = total_steps if w.phase == LOOP else cells
-        hbm += steps * int(np.prod(w.block_shape)) * dtype_bits(w.param.dtype) // 8
-    for w in out_windows:
-        steps = total_steps if w.phase == LOOP else cells
-        hbm += steps * int(np.prod(w.block_shape)) * dtype_bits(w.param.dtype) // 8
-
-    return KernelCost(flops=flops, hbm_bytes=hbm, grid=tuple(grid), vmem_bytes=vmem.total_bytes)
-
-
-# ---------------------------------------------------------------------------
-# Reference interpreter backend (tiny shapes; independent oracle)
-# ---------------------------------------------------------------------------
-
-
-def _compile_reference(program: TileProgram, schedule: Schedule) -> CompiledKernel:
-    import itertools
-
-    import jax
-    import jax.numpy as jnp
-
-    inference = infer_layouts(program)
-    phases = split_phases(program)
-    in_windows, out_windows, fed_by, _ = collect_windows(program, phases)
-    pipe = phases.pipeline
-
-    written = {id(p) for p in program.written_globals()}
-    aliased = [w.param for w in out_windows if w.aliased]
-    arg_params = [p for p in program.params if id(p) not in written] + aliased
-    out_params = [p for p in program.params if id(p) in written]
-
-    kernel_axes = program.grid_axes
-
-    def fn(*arrays):
-        globals_: Dict[str, Any] = {}
-        for p, a in zip(arg_params, arrays):
-            globals_[p.name] = jnp.asarray(a)
-        for p in out_params:
-            if p.name not in globals_:
-                globals_[p.name] = jnp.zeros(p.shape, jnp.dtype(p.dtype))
-
-        for cell in itertools.product(*[range(e) for _, e in kernel_axes]):
-            env0 = {v.name: idx for (v, _), idx in zip(kernel_axes, cell)}
-            tiles: Dict[str, Any] = {}
-
-            def run(ops, extra):
-                for op in ops:
-                    _ref_op(op, globals_, tiles, {**env0, **extra}, jnp)
-
-            run(phases.pre, {})
-            if pipe is not None:
-                for k in range(pipe.extent):
-                    run(pipe.body, {pipe.var.name: k})
-            run(phases.post, {})
-        outs = [globals_[p.name] for p in out_params]
-        return outs[0] if len(outs) == 1 else tuple(outs)
-
-    info = LoweredInfo(
-        grid=tuple(e for _, e in kernel_axes),
-        dimension_semantics=("reference",),
-        vmem=plan_vmem(program, schedule, {}),
-        inference=inference,
-        cost=_estimate_cost(
-            program,
-            phases,
-            tuple(e for _, e in kernel_axes) + ((pipe.extent,) if pipe else ()),
-            in_windows,
-            out_windows,
-            plan_vmem(program, schedule, {}),
-        ),
-        num_stages=1,
-        n_windows_in=len(in_windows),
-        n_windows_out=len(out_windows),
-    )
-    return CompiledKernel(program, fn, info, arg_params, out_params)
-
-
-def _ref_op(op: TileOp, globals_: Dict, tiles: Dict, env: Dict, jnp):
-    import jax
-
-    def ev(e: Expr, extra=None, load_fn=_no_loads):
-        en = dict(env)
-        if extra:
-            en.update(extra)
-        return evaluate(e, en, load_fn)
-
-    def get(buf: TileBuffer):
-        if buf.scope == GLOBAL:
-            return globals_[buf.name]
-        if buf.name not in tiles:
-            tiles[buf.name] = jnp.zeros(buf.shape, jnp.dtype(buf.dtype))
-        return tiles[buf.name]
-
-    def put(buf: TileBuffer, val):
-        val = jnp.broadcast_to(val, buf.shape).astype(jnp.dtype(buf.dtype))
-        if buf.scope == GLOBAL:
-            globals_[buf.name] = val
-        else:
-            tiles[buf.name] = val
-
-    def region_read(region: ResolvedRegion):
-        base = get(region.buffer)
-        starts = [jnp.asarray(ev(s), jnp.int32) for s in region.starts]
-        val = jax.lax.dynamic_slice(base, starts, region.sizes)
-        keep = tuple(i for i, c in enumerate(region.collapsed) if not c)
-        return val.reshape(tuple(region.sizes[i] for i in keep))
-
-    def region_write(region: ResolvedRegion, val):
-        base = get(region.buffer)
-        starts = [jnp.asarray(ev(s), jnp.int32) for s in region.starts]
-        upd = val.reshape(region.sizes).astype(base.dtype)
-        out = jax.lax.dynamic_update_slice(base, upd, starts)
-        if region.buffer.scope == GLOBAL:
-            globals_[region.buffer.name] = out
-        else:
-            tiles[region.buffer.name] = out
-
-    if isinstance(op, CopyOp):
-        region_write(op.dst, region_read(op.src).astype(jnp.dtype(op.dst.buffer.dtype)))
-    elif isinstance(op, FillOp):
-        put(op.buffer, jnp.full(op.buffer.shape, ev(op.value), jnp.dtype(op.buffer.dtype)))
-    elif isinstance(op, GemmOp):
-        a, b = get(op.a), get(op.b)
-        if op.transpose_a:
-            a = jnp.swapaxes(a, -1, -2)
-        if op.transpose_b:
-            b = jnp.swapaxes(b, -1, -2)
-        acc = get(op.c)
-        prod = jax.lax.dot_general(
-            a, b, (((a.ndim - 1,), (b.ndim - 2,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-        put(op.c, acc + prod.astype(acc.dtype))
-    elif isinstance(op, ReduceOp):
-        src = get(op.src)
-        fns = {
-            "sum": jnp.sum,
-            "max": jnp.max,
-            "min": jnp.min,
-            "prod": jnp.prod,
-            "absmax": lambda x, axis: jnp.max(jnp.abs(x), axis=axis),
-        }
-        val = fns[op.kind](src, axis=op.axis)
-        if not op.clear:
-            comb = {
-                "sum": jnp.add,
-                "max": jnp.maximum,
-                "min": jnp.minimum,
-                "prod": jnp.multiply,
-                "absmax": jnp.maximum,
-            }[op.kind]
-            val = comb(get(op.dst), val.astype(get(op.dst).dtype))
-        put(op.dst, val)
-    elif isinstance(op, CumsumOp):
-        src = get(op.src)
-        if op.reverse:
-            src = jnp.flip(src, axis=op.axis)
-        val = jnp.cumsum(src, axis=op.axis)
-        if op.reverse:
-            val = jnp.flip(val, axis=op.axis)
-        put(op.dst, val)
-    elif isinstance(op, ParallelOp):
-        import jax.lax as lax
-
-        nax = len(op.axes)
-        iotas = {}
-        for i, (v, e) in enumerate(zip(op.axes, op.extents)):
-            shape = [1] * nax
-            shape[i] = e
-            iotas[v.name] = lax.broadcasted_iota(jnp.int32, tuple(shape), i)
-
-        def load_fn(buffer, idx_values, idx_exprs):
-            base = get(buffer)
-            return base[tuple(jnp.asarray(v) for v in idx_values)]
-
-        for buf, idx_exprs, val_expr in op.stores:
-            val = ev(val_expr, extra=iotas, load_fn=load_fn)
-            idx_vals = tuple(jnp.asarray(ev(e, extra=iotas, load_fn=load_fn)) for e in idx_exprs)
-            direct = (
-                len(idx_exprs) == nax
-                and all(
-                    isinstance(e, VarExpr) and e.name == op.axes[i].name
-                    for i, e in enumerate(idx_exprs)
-                )
-                and tuple(buf.shape) == op.extents
-            )
-            if direct:
-                put(buf, jnp.broadcast_to(val, op.extents))
-            else:
-                cur = get(buf)
-                put(buf, cur.at[idx_vals].set(jnp.asarray(val).astype(cur.dtype)))
-    elif isinstance(op, CustomOp):
-        put(op.output, op.fn(*[get(b) for b in op.inputs]))
-    elif isinstance(op, AtomicOp):
-        base = get(op.dst.buffer)
-        starts = [jnp.asarray(ev(s), jnp.int32) for s in op.dst.starts]
-        cur = jax.lax.dynamic_slice(base, starts, op.dst.sizes)
-        val = get(op.src).reshape(op.dst.sizes).astype(cur.dtype)
-        comb = {"add": jnp.add, "max": jnp.maximum, "min": jnp.minimum}[op.kind]
-        globals_[op.dst.buffer.name] = jax.lax.dynamic_update_slice(
-            base, comb(cur, val), starts
-        )
-    elif isinstance(op, SerialOp):
-        for i in range(op.extent):
-            for o in op.body:
-                _ref_op(o, globals_, tiles, {**env, op.var.name: i}, jnp)
-    else:
-        raise LoweringError(f"reference: unhandled op {op!r}")
+from .lowering.indexing import no_loads as _no_loads  # noqa: F401
+from .lowering.windows import _is_onchip, _merge_out_window, _same_starts  # noqa: F401
+
+# Pre-split private names kept for callers that reached into the module.
+_estimate_cost = estimate_cost
+
+__all__ = [
+    "compile",
+    "CompiledKernel",
+    "KernelCost",
+    "LoweredInfo",
+    "LoweredModule",
+    "Phases",
+    "Window",
+    "PRE",
+    "LOOP",
+    "POST",
+    "split_phases",
+    "collect_windows",
+    "make_index_map",
+    "analyze",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "clear_compile_cache",
+]

@@ -1,0 +1,60 @@
+"""Index-map derivation shared by the grid plan and the Pallas backend."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+from ..errors import LoweringError
+from ..expr import Expr, evaluate, linear_decompose
+from ..tile_ops import ResolvedRegion
+
+
+def make_index_map(
+    region: ResolvedRegion,
+    env_builder: Callable[..., Dict[str, Any]],
+):
+    """Build a Pallas ``index_map(*grid_ids) -> block indices``.
+
+    Affine starts with size-divisible coefficients fold statically; otherwise
+    we fall back to a runtime floordiv (correct when the region is aligned —
+    the TileLang contract for unmasked copies).
+    """
+    starts, sizes = region.starts, region.sizes
+
+    def fold(e: Expr, size: int):
+        if size == 1:
+            return ("expr", e)
+        dec = linear_decompose(e)
+        if dec is not None and all(v % size == 0 for v in dec.values()):
+            folded = {k: v // size for k, v in dec.items()}
+            return ("affine", folded)
+        return ("div", e)
+
+    plans = [fold(e, s) for e, s in zip(starts, sizes)]
+
+    def index_map(*grid_ids):
+        env = env_builder(*grid_ids)
+
+        def ev(e: Expr):
+            return evaluate(e, env, load_fn=no_loads)
+
+        out = []
+        for (kind, payload), size in zip(plans, sizes):
+            if kind == "expr":
+                out.append(ev(payload))
+            elif kind == "affine":
+                acc = payload.get("", 0)
+                for name, coeff in payload.items():
+                    if name == "":
+                        continue
+                    if coeff:
+                        acc = acc + coeff * env[name]
+                out.append(acc)
+            else:
+                out.append(ev(payload) // size)
+        return tuple(out)
+
+    return index_map
+
+
+def no_loads(buffer, idx_values, idx_exprs):
+    raise LoweringError("Buffer loads are not allowed in index expressions")

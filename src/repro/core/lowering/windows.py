@@ -1,0 +1,110 @@
+"""Window extraction pass: copies that become BlockSpec-managed operands.
+
+Every ``global -> onchip`` copy becomes an input window and every
+``onchip -> global`` copy (or global atomic) an output window.  Windows are
+target-neutral: the Pallas backend turns them into ``pl.BlockSpec``s, the
+reference backend into dynamic slices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from ..buffer import FRAGMENT, GLOBAL, SHARED, TileBuffer
+from ..errors import LoweringError
+from ..tile_ops import AtomicOp, CopyOp, ResolvedRegion, SerialOp, TileOp
+from .phases import LOOP, POST, PRE, Phases
+
+
+@dataclasses.dataclass
+class Window:
+    """One BlockSpec-managed operand window."""
+
+    param: TileBuffer  # the global buffer
+    onchip: Optional[TileBuffer]  # dst for inputs; src for outputs (may be None for atomics)
+    region: ResolvedRegion  # region on the global side
+    phase: str
+    is_output: bool
+    aliased: bool = False  # in-out (atomic RMW)
+
+    @property
+    def block_shape(self) -> Tuple[int, ...]:
+        return tuple(self.region.sizes)
+
+
+def _is_onchip(buf: TileBuffer) -> bool:
+    return buf.scope in (SHARED, FRAGMENT)
+
+
+def collect_windows(program, phases: Phases):
+    """Find all global<->onchip copies; returns (in_windows, out_windows,
+    window_backed: dst name -> window idx, store_ops)."""
+    in_windows: List[Window] = []
+    out_windows: List[Window] = []
+    fed_by: Dict[str, Window] = {}
+    stores: List[Tuple[TileOp, str, Window]] = []  # (op, phase, out window)
+
+    def scan(ops: List[TileOp], phase: str):
+        for op in ops:
+            if isinstance(op, SerialOp):
+                scan(op.body, phase)
+            elif isinstance(op, CopyOp):
+                s, d = op.src.buffer, op.dst.buffer
+                if s.scope == GLOBAL and _is_onchip(d):
+                    if d.name in fed_by:
+                        raise LoweringError(
+                            f"{program.name}: buffer {d.name} fed by two "
+                            "global copies; each shared tile must have one "
+                            "producer copy."
+                        )
+                    if any(c for c in op.dst.collapsed) or op.dst.tile_shape != tuple(
+                        op.dst.buffer.shape
+                    ):
+                        raise LoweringError(
+                            f"{program.name}: global->onchip copy must fill the "
+                            f"whole destination tile ({op})"
+                        )
+                    w = Window(s, d, op.src, phase, is_output=False)
+                    in_windows.append(w)
+                    fed_by[d.name] = w
+                elif _is_onchip(s) and d.scope == GLOBAL:
+                    w = _merge_out_window(out_windows, Window(d, s, op.dst, phase, True))
+                    stores.append((op, phase, w))
+                elif s.scope == GLOBAL and d.scope == GLOBAL:
+                    raise LoweringError(
+                        f"{program.name}: global->global copy; stage through "
+                        "a shared tile."
+                    )
+            elif isinstance(op, AtomicOp):
+                if op.dst.buffer.scope != GLOBAL:
+                    continue
+                w = _merge_out_window(
+                    out_windows, Window(op.dst.buffer, None, op.dst, phase, True, aliased=True)
+                )
+                w.aliased = True
+                stores.append((op, phase, w))
+
+    scan(phases.pre, PRE)
+    if phases.pipeline is not None:
+        scan(phases.pipeline.body, LOOP)
+    scan(phases.post, POST)
+    return in_windows, out_windows, fed_by, stores
+
+
+def _merge_out_window(out_windows: List[Window], w: Window) -> Window:
+    for existing in out_windows:
+        if existing.param is w.param:
+            if existing.block_shape != w.block_shape or not _same_starts(
+                existing.region, w.region
+            ):
+                raise LoweringError(
+                    f"two stores to {w.param.name} with different windows; "
+                    "unify the destination regions."
+                )
+            return existing
+    out_windows.append(w)
+    return w
+
+
+def _same_starts(a: ResolvedRegion, b: ResolvedRegion) -> bool:
+    return [repr(s) for s in a.starts] == [repr(s) for s in b.starts]

@@ -97,12 +97,21 @@ def physical_tile_shape(shape: Tuple[int, ...], dtype: str) -> Tuple[int, ...]:
     return tuple(s)
 
 
-def plan_vmem(program, schedule: Schedule, pipelined_inputs: Dict[str, int]) -> VmemPlan:
+def plan_vmem(
+    program,
+    schedule: Schedule,
+    pipelined_inputs: Dict[str, int],
+    check: bool = True,
+) -> VmemPlan:
     """Compute the on-chip footprint of a traced program.
 
     ``pipelined_inputs`` maps buffer name -> multi-buffering depth for shared
     buffers fed by global copies inside a T.Pipelined loop (the grid
     pipeline double/multi-buffers those windows).
+
+    ``check=False`` returns the (possibly over-budget) plan instead of
+    raising — the pass pipeline uses this so the budget stays a *backend*
+    feasibility concern (the reference interpreter has no VMEM).
     """
     plans: List[BufferPlan] = []
     total = 0
@@ -119,7 +128,7 @@ def plan_vmem(program, schedule: Schedule, pipelined_inputs: Dict[str, int]) -> 
         )
         total += nbytes
     plan = VmemPlan(plans, total, schedule.vmem_limit)
-    if not plan.ok:
+    if check and not plan.ok:
         raise ScheduleError(
             f"{program.name}: VMEM budget exceeded —\n{plan.summary()}\n"
             "Reduce block shapes or num_stages."

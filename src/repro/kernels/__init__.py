@@ -6,6 +6,21 @@ from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program, tune_matmul
 from .mla import mla_program
 
+
+def parity_programs():
+    """Yield ``(name, TileProgram)`` for every kernel at tiny shapes.
+
+    One entry per ``PARITY_CASES`` item in each kernel module; the
+    backend-parity suite (tests/test_pipeline.py) compiles each program with
+    both ``target="pallas"`` (interpret mode) and ``target="reference"`` and
+    asserts numerical agreement.
+    """
+    from . import dequant_matmul, flash_attention, linear_attention, matmul, mla
+
+    for mod in (matmul, flash_attention, mla, dequant_matmul, linear_attention):
+        yield from mod.parity_programs()
+
+
 __all__ = [
     "ops",
     "ref",
@@ -16,4 +31,5 @@ __all__ = [
     "dequant_matmul_program",
     "chunk_state_program",
     "chunk_scan_program",
+    "parity_programs",
 ]

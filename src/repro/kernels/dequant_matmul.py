@@ -122,3 +122,23 @@ def dequant_matmul_program(
     fn.__name__ = f"dequant_matmul_{fmt}"
     fn.__annotations__ = {k: v for k, v in params.items()}
     return T.prim_func(fn)
+
+
+# Tiny-shape configs for the pallas-vs-reference parity suite
+# (tests/test_pipeline.py); int4 exercises the vectorized sub-byte unpack,
+# int8 the straight cast path.
+PARITY_CASES = [
+    (
+        "dequant_matmul_int4",
+        dict(M=16, N=16, K=32, fmt="int4", block_M=16, block_N=16, block_K=16),
+    ),
+    (
+        "dequant_matmul_int8",
+        dict(M=16, N=16, K=32, fmt="int8", block_M=16, block_N=16, block_K=16),
+    ),
+]
+
+
+def parity_programs():
+    for name, cfg in PARITY_CASES:
+        yield name, dequant_matmul_program(**cfg)

@@ -106,3 +106,25 @@ def flash_attention_program(
             T.copy(acc_o, Output[bz, by, bx * block_M, 0])
 
     return FlashAttn
+
+
+# Tiny-shape configs for the pallas-vs-reference parity suite
+# (tests/test_pipeline.py); covers GQA (heads != kv_heads) and the causal
+# masked-elementwise path.
+PARITY_CASES = [
+    (
+        "flash_attention_gqa",
+        dict(batch=1, heads=2, kv_heads=1, seq_q=16, seq_kv=32, head_dim=16,
+             block_M=16, block_N=16),
+    ),
+    (
+        "flash_attention_causal",
+        dict(batch=1, heads=1, kv_heads=1, seq_q=32, seq_kv=32, head_dim=16,
+             causal=True, block_M=16, block_N=16),
+    ),
+]
+
+
+def parity_programs():
+    for name, cfg in PARITY_CASES:
+        yield name, flash_attention_program(**cfg)

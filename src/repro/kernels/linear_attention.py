@@ -108,3 +108,18 @@ def chunk_scan_program(
             T.copy(y_acc, Y[bz, bc, 0, 0])
 
     return ChunkScan
+
+
+# Tiny-shape configs for the pallas-vs-reference parity suite
+# (tests/test_pipeline.py).
+PARITY_CASES = [
+    ("chunk_state", (chunk_state_program,
+                     dict(batch=1, nchunks=2, chunk_l=16, dstate=16, headdim=16))),
+    ("chunk_scan", (chunk_scan_program,
+                    dict(batch=1, nchunks=2, chunk_l=16, dstate=16, headdim=16))),
+]
+
+
+def parity_programs():
+    for name, (factory, cfg) in PARITY_CASES:
+        yield name, factory(**cfg)

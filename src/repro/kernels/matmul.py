@@ -52,6 +52,22 @@ def matmul_program(
     return Matmul
 
 
+# Tiny-shape configs exercised by the pallas-vs-reference parity suite
+# (tests/test_pipeline.py); the swizzled case covers the flattened grid path.
+PARITY_CASES = [
+    ("matmul_f32", dict(M=32, N=32, K=32, block_M=16, block_N=16, block_K=16)),
+    (
+        "matmul_swizzled",
+        dict(M=32, N=32, K=32, block_M=16, block_N=16, block_K=16, swizzle=2),
+    ),
+]
+
+
+def parity_programs():
+    for name, cfg in PARITY_CASES:
+        yield name, matmul_program(**cfg)
+
+
 def default_configs(M: int, N: int, K: int):
     """Candidate schedules for the cost-model autotuner."""
     bms = [b for b in (256, 128, 64, 32) if M % b == 0]

@@ -108,3 +108,19 @@ def mla_program(
             T.copy(acc_o, Output[bx, by * VALID_BLOCK_H : (by + 1) * VALID_BLOCK_H, :])
 
     return FlashMLA
+
+
+# Tiny-shape configs for the pallas-vs-reference parity suite
+# (tests/test_pipeline.py).
+PARITY_CASES = [
+    (
+        "mla",
+        dict(batch=1, heads=4, kv_head_num=1, seqlen_kv=32, dim=16, pe_dim=8,
+             block_N=16, block_H=2),
+    ),
+]
+
+
+def parity_programs():
+    for name, cfg in PARITY_CASES:
+        yield name, mla_program(**cfg)

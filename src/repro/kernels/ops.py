@@ -14,7 +14,9 @@ Backend selection (``kernel_backend``):
 Compiled tile kernels are cached per (kernel, static config) — the TPU
 realization of the paper's "dynamic parameter simplification" for kernel
 libraries: a library entry recompiles per shape bucket and reuses the cached
-schedule.
+schedule.  The local dict below only skips *re-tracing* the program factory;
+the compile itself is additionally memoized inside repro.core.compiler on
+(program fingerprint, schedule, target), shared with autotune and serving.
 """
 from __future__ import annotations
 

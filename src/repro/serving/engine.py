@@ -12,6 +12,7 @@ and SSM archs hold O(1) state.
 from __future__ import annotations
 
 import collections
+import copy
 import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence
@@ -24,6 +25,31 @@ from repro.models import lm
 from repro.models.config import ModelConfig
 
 from .sampling import sample
+
+# One jit'd decode step per model configuration, shared by every engine
+# instance (and so by every request): constructing a fresh ``jax.jit``
+# wrapper per engine discards XLA's trace cache and recompiles the step for
+# each new engine even when the config is identical.  Keyed on the config's
+# dataclass repr (deterministic over field values); the closure captures a
+# deep copy so later mutation of the caller's config object cannot change
+# what a cached entry computes.  LRU-bounded so config sweeps don't pin an
+# XLA executable per visited config for process lifetime.
+_STEP_FNS: "collections.OrderedDict[str, object]" = collections.OrderedDict()
+_STEP_FNS_MAX = 8
+
+
+def _decode_step_fn(cfg: ModelConfig):
+    key = repr(cfg)
+    fn = _STEP_FNS.get(key)
+    if fn is None:
+        snap = copy.deepcopy(cfg)
+        fn = jax.jit(lambda p, c, t, pos: lm.decode_step(p, snap, c, t, pos))
+        _STEP_FNS[key] = fn
+        while len(_STEP_FNS) > _STEP_FNS_MAX:
+            _STEP_FNS.popitem(last=False)
+    else:
+        _STEP_FNS.move_to_end(key)
+    return fn
 
 
 @dataclasses.dataclass
@@ -59,9 +85,7 @@ class ServingEngine:
         self._uid = itertools.count()
         self._key = jax.random.PRNGKey(serve_cfg.seed)
         self._token_buf = np.zeros((b,), np.int32)
-        self._step = jax.jit(
-            lambda p, c, t, pos: lm.decode_step(p, cfg, c, t, pos)
-        )
+        self._step = _decode_step_fn(cfg)
         self.completed: List[Request] = []
         self.steps_run = 0
 

@@ -16,8 +16,14 @@ from repro.launch import cells as C
 
 def abstract_mesh(multi_pod=False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        sizes, names = (2, 16, 16), ("pod", "data", "model")
+    else:
+        sizes, names = (16, 16), ("data", "model")
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        # older JAX (<0.5): AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, sizes)))
 
 
 def _axis_size(mesh, ax):

@@ -1,0 +1,251 @@
+"""Tests for the pass-based lowering pipeline and the backend registry.
+
+Two halves:
+
+* unit tests for each pass over a hand-built ``TileProgram`` — every pass
+  is a plain function over the :class:`LoweredModule` artifact, so they can
+  be run (and asserted on) individually;
+* the backend-parity suite: every kernel in ``repro.kernels`` compiled with
+  both ``target="pallas"`` (interpret mode) and ``target="reference"`` on
+  tiny shapes must agree numerically.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    LoweringError,
+    Schedule,
+    TileProgram,
+    analyze,
+    available_backends,
+    compile as tl_compile,
+    get_backend,
+    program_fingerprint,
+    register_backend,
+)
+from repro.core import lang as T
+from repro.core.lowering import (
+    LOOP,
+    PRE,
+    POST,
+    LoweredModule,
+    PIPELINE,
+    run_pipeline,
+    schedule_key,
+)
+from repro.core.lowering.pipeline import (
+    pass_collect_windows,
+    pass_estimate_cost,
+    pass_plan_grid,
+    pass_plan_params,
+    pass_plan_stages,
+    pass_plan_vmem,
+    pass_split_phases,
+)
+from repro.kernels import parity_programs
+
+
+def small_gemm_program(bm=16, bn=16, bk=16, kext=2):
+    """Hand-built pipelined GEMM used by the per-pass unit tests."""
+    M, N, K = 2 * bm, 2 * bn, kext * bk
+
+    @T.prim_func
+    def SmallGemm(
+        A: T.Tensor((M, K), "float32"),
+        B: T.Tensor((K, N), "float32"),
+        C: T.Tensor((M, N), "float32"),
+    ):
+        with T.Kernel(N // bn, M // bm) as (bx, by):
+            A_s = T.alloc_shared((bm, bk))
+            B_s = T.alloc_shared((bk, bn))
+            C_l = T.alloc_fragment((bm, bn))
+            T.clear(C_l)
+            for k in T.Pipelined(kext, num_stages=2):
+                T.copy(A[by * bm, k * bk], A_s)
+                T.copy(B[k * bk, bx * bn], B_s)
+                T.gemm(A_s, B_s, C_l)
+            T.copy(C_l, C[by * bm, bx * bn])
+
+    return SmallGemm
+
+
+# ---------------------------------------------------------------------------
+# Per-pass unit tests
+# ---------------------------------------------------------------------------
+
+
+class TestPasses:
+    def _module(self, *passes, schedule=None):
+        m = LoweredModule(small_gemm_program(), schedule or Schedule())
+        for p in passes:
+            p(m)
+        return m
+
+    def test_split_phases(self):
+        m = self._module(pass_split_phases)
+        assert len(m.phases.pre) == 1  # the clear
+        assert m.phases.pipeline is not None and m.phases.pipeline.extent == 2
+        assert len(m.phases.post) == 1  # the store copy
+
+    def test_collect_windows(self):
+        m = self._module(pass_split_phases, pass_collect_windows)
+        assert len(m.in_windows) == 2 and len(m.out_windows) == 1
+        assert all(w.phase == LOOP for w in m.in_windows)
+        assert m.out_windows[0].phase == POST
+        assert set(m.fed_by) == {w.onchip.name for w in m.in_windows}
+
+    def test_plan_grid_orders_axes(self):
+        m = self._module(pass_split_phases, pass_collect_windows, pass_plan_grid)
+        # (by, bx) reversed + the pipelined axis innermost
+        assert m.grid == (2, 2, 2)
+        assert m.grid_plan.dimension_semantics == ("parallel", "parallel", "arbitrary")
+        assert m.grid_plan.kdim == 2
+        env = m.grid_plan.env_builder(1, 0, 1)
+        assert env["bx"] == 0 and env["by"] == 1
+
+    def test_plan_stages_schedule_override(self):
+        m = self._module(pass_split_phases, pass_plan_stages)
+        assert m.num_stages == 2  # from T.Pipelined
+        m2 = self._module(
+            pass_split_phases, pass_plan_stages, schedule=Schedule(num_stages=3)
+        )
+        assert m2.num_stages == 3
+
+    def test_plan_vmem_multibuffers_loop_windows(self):
+        m = self._module(
+            pass_split_phases,
+            pass_collect_windows,
+            pass_plan_stages,
+            pass_plan_vmem,
+        )
+        copies = {b.name: b.copies for b in m.vmem.buffers}
+        for w in m.in_windows:
+            assert copies[w.onchip.name] == 2  # double-buffered
+        # the accumulator is single-copy scratch
+        frag = [b for b in m.vmem.buffers if b.scope == "fragment"]
+        assert frag and all(b.copies == 1 for b in frag)
+
+    def test_plan_params(self):
+        m = self._module(
+            pass_split_phases, pass_collect_windows, pass_plan_params
+        )
+        assert [p.name for p in m.arg_params] == ["A", "B"]
+        assert [p.name for p in m.out_params] == ["C"]
+        assert m.window_param_idx == [0, 1]
+        # the fragment accumulator is scratch (not window-backed)
+        assert [b.name for b in m.scratch_bufs] == [m.phases.pre[0].buffer.name]
+
+    def test_estimate_cost(self):
+        m = self._module(
+            pass_split_phases,
+            pass_collect_windows,
+            pass_plan_grid,
+            pass_plan_stages,
+            pass_plan_vmem,
+            pass_plan_params,
+            pass_estimate_cost,
+        )
+        # 2*M*N*K flops for the full problem
+        assert m.cost.flops == 2 * 32 * 32 * 32
+        assert m.cost.hbm_bytes > 0
+        assert m.cost.grid == (2, 2, 2)
+
+    def test_run_pipeline_fills_everything(self):
+        m = run_pipeline(small_gemm_program(), Schedule())
+        for field in ("phases", "inference", "grid_plan", "vmem", "cost"):
+            assert getattr(m, field) is not None, field
+        assert PIPELINE[0][0] == "split_phases" and PIPELINE[-1][0] == "estimate_cost"
+
+
+class TestFingerprintAndCache:
+    def test_fingerprint_stable_across_retrace(self):
+        assert program_fingerprint(small_gemm_program()) == program_fingerprint(
+            small_gemm_program()
+        )
+
+    def test_fingerprint_distinguishes_structure(self):
+        assert program_fingerprint(small_gemm_program(bk=16)) != program_fingerprint(
+            small_gemm_program(bk=8, kext=4)
+        )
+
+    def test_schedule_key_excludes_notes(self):
+        a, b = Schedule(), Schedule()
+        b.notes["advisory"] = 1
+        assert schedule_key(a) == schedule_key(b)
+        assert schedule_key(Schedule(num_stages=3)) != schedule_key(a)
+
+    def test_analysis_cache_shared_across_retrace(self):
+        sched = Schedule(interpret=True)
+        assert analyze(small_gemm_program(), sched) is analyze(
+            small_gemm_program(), sched
+        )
+
+    def test_compile_cache_returns_same_kernel(self):
+        sched = Schedule(interpret=True)
+        k1 = tl_compile(small_gemm_program(), sched)
+        k2 = tl_compile(small_gemm_program(), sched)
+        assert k1 is k2
+        # a different target is a different cache entry
+        k3 = tl_compile(small_gemm_program(), sched, target="reference")
+        assert k3 is not k1 and k3.backend == "reference"
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"pallas", "reference"} <= set(available_backends())
+
+    def test_aliases(self):
+        assert get_backend("ref") is get_backend("reference")
+        assert get_backend("pallas_tpu") is get_backend("pallas")
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(LoweringError, match="Unknown backend"):
+            tl_compile(small_gemm_program(), target="cuda")
+
+    def test_register_third_party_backend(self):
+        calls = {}
+
+        @register_backend("_test_counting")
+        def emit(module):
+            calls["module"] = module
+            return get_backend("reference")(module)
+
+        try:
+            kern = tl_compile(small_gemm_program(), target="_test_counting")
+            assert calls["module"].program is kern.program
+            a = np.ones((32, 32), np.float32)
+            np.testing.assert_allclose(np.asarray(kern(a, a)), a @ a, rtol=1e-5)
+        finally:
+            from repro.core.backends import _REGISTRY
+
+            _REGISTRY.pop("_test_counting", None)
+
+
+# ---------------------------------------------------------------------------
+# Backend parity: every kernel, pallas(interpret) vs reference
+# ---------------------------------------------------------------------------
+
+_CASES = dict(parity_programs())
+
+
+def _make_input(param, rng):
+    if param.dtype.startswith(("int", "uint")):
+        return rng.integers(-4, 4, size=param.shape).astype(param.dtype)
+    return rng.standard_normal(param.shape).astype(param.dtype)
+
+
+@pytest.mark.parametrize("name", sorted(_CASES))
+def test_backend_parity(name, rng):
+    prog = _CASES[name]
+    pk = tl_compile(prog, Schedule(interpret=True), target="pallas")
+    rk = tl_compile(prog, target="reference")
+    assert pk.backend == "pallas" and rk.backend == "reference"
+    assert [p.name for p in pk.arg_params] == [p.name for p in rk.arg_params]
+    args = [_make_input(p, rng) for p in pk.arg_params]
+    pout, rout = pk(*args), rk(*args)
+    if not isinstance(pout, tuple):
+        pout, rout = (pout,), (rout,)
+    for p, r in zip(pout, rout):
+        np.testing.assert_allclose(
+            np.asarray(p), np.asarray(r), rtol=1e-4, atol=2e-3
+        )

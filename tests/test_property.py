@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import Schedule, compile as tl_compile
 from repro.core import lang as T

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI: run the test suite on CPU.
+#
+# Kernels execute through the interpreter backends — Pallas interpret mode
+# (the same kernel body the TPU runs, executed by XLA:CPU) and the reference
+# trace interpreter — so no accelerator is needed.  Mirrors ROADMAP.md's
+# "Tier-1 verify" line; used by .github/workflows/ci.yml.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
