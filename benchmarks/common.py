@@ -44,6 +44,14 @@ def kernel_row(name: str, program, extra: str = "", schedule=None) -> Row:
     return Row(name, total * 1e6, derived)
 
 
+def blocks_half(slots: int, max_len: int, page_size: int) -> int:
+    """Pool sized at half the contiguous footprint, rounded down (min 1) —
+    bench_serving's oversubscription setting."""
+    from repro.serving.paged_cache import blocks_for
+
+    return max(1, slots * blocks_for(max_len, page_size) // 2)
+
+
 def check(fn: Callable[[], bool], label: str):
     ok = fn()
     status = "ok" if ok else "FAIL"

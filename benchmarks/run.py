@@ -18,6 +18,7 @@ from . import (
     bench_linear_attention,
     bench_loc,
     bench_mla,
+    bench_serving,
 )
 
 TABLES = {
@@ -26,6 +27,7 @@ TABLES = {
     "linear_attention": bench_linear_attention,
     "dequant": bench_dequant,
     "mla": bench_mla,
+    "serving": bench_serving,
     "loc": bench_loc,
 }
 

@@ -12,7 +12,7 @@
 from . import program as lang  # the "T" namespace:  from repro.core import lang as T
 from .autotune import autotune, grid_configs
 from .backends import available_backends, get_backend, register_backend
-from .buffer import FRAGMENT, GLOBAL, SHARED, Region, TileBuffer
+from .buffer import FRAGMENT, GLOBAL, SCALAR, SHARED, Region, TileBuffer
 from .compiler import clear_compile_cache, compile
 from .errors import (
     LayoutError,
@@ -31,7 +31,7 @@ from .lowering import (
     analyze,
     program_fingerprint,
 )
-from .program import TileProgram, Tensor, prim_func
+from .program import ScalarTensor, TileProgram, Tensor, prim_func
 from .schedule import Schedule, plan_vmem
 
 __all__ = [
@@ -40,6 +40,7 @@ __all__ = [
     "grid_configs",
     "FRAGMENT",
     "GLOBAL",
+    "SCALAR",
     "SHARED",
     "Region",
     "TileBuffer",
@@ -71,6 +72,7 @@ __all__ = [
     "register_backend",
     "TileProgram",
     "Tensor",
+    "ScalarTensor",
     "prim_func",
     "Schedule",
     "plan_vmem",

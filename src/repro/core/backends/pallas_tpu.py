@@ -16,7 +16,7 @@ from typing import Any, Dict, List
 
 import numpy as np
 
-from ..buffer import GLOBAL, TileBuffer
+from ..buffer import GLOBAL, SCALAR, TileBuffer
 from ..errors import LoweringError, ScheduleError
 from ..expr import BinExpr, ConstExpr, Expr, VarExpr, evaluate
 from ..lowering.indexing import make_index_map, no_loads
@@ -91,21 +91,37 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
     aliased_js = [j for j, w in enumerate(out_windows) if w.aliased]
     n_in_ops = len(in_windows)
 
+    # ---- scalar-prefetch operands ----------------------------------------
+    # T.ScalarTensor params ride ahead of the grid walk in SMEM
+    # (PrefetchScalarGridSpec); every index map then receives their refs as
+    # trailing args so window starts may load them (block-table gathers).
+    scalar_params = module.scalar_params
+    n_scalars = len(scalar_params)
+    if n_scalars and aliased_js:
+        raise LoweringError(
+            f"{program.name}: scalar-prefetch params cannot be combined with "
+            "T.atomic_* in-out windows on the Pallas backend."
+        )
+    scalar_pos = {p.name: i for i, p in enumerate(scalar_params)}
+    arg_pos = {id(p): i for i, p in enumerate(arg_params)}
+    scalar_arg_idx = [arg_pos[id(p)] for p in scalar_params]
+
+    def _index_map(region):
+        return make_index_map(region, env_builder, scalar_params or None)
+
     # ---- specs -----------------------------------------------------------
     in_specs = [
-        pl.BlockSpec(w.block_shape, make_index_map(w.region, env_builder))
-        for w in in_windows
+        pl.BlockSpec(w.block_shape, _index_map(w.region)) for w in in_windows
     ]
     alias_in_specs = [
         pl.BlockSpec(
             out_windows[j].block_shape,
-            make_index_map(out_windows[j].region, env_builder),
+            _index_map(out_windows[j].region),
         )
         for j in aliased_js
     ]
     out_specs = [
-        pl.BlockSpec(w.block_shape, make_index_map(w.region, env_builder))
-        for w in out_windows
+        pl.BlockSpec(w.block_shape, _index_map(w.region)) for w in out_windows
     ]
     out_shape = [
         jax.ShapeDtypeStruct(w.param.shape, jnp.dtype(w.param.dtype))
@@ -120,6 +136,8 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
 
     # ---- kernel body ------------------------------------------------------
     def body(*refs):
+        scalar_refs = refs[:n_scalars]
+        refs = refs[n_scalars:]
         n_in_total = n_in_ops + len(alias_in_specs)
         in_refs = refs[:n_in_total]
         out_refs = refs[n_in_total : n_in_total + len(out_windows)]
@@ -143,6 +161,10 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
         def get(buf: TileBuffer):
             if buf.name in values:
                 return values[buf.name]
+            if buf.scope == SCALAR:
+                val = scalar_refs[scalar_pos[buf.name]][...]
+                values[buf.name] = val
+                return val
             if buf.name in window_of:
                 w = in_windows[window_of[buf.name]]
                 val = squeeze(in_refs[window_of[buf.name]][...], w.region)
@@ -445,23 +467,43 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
             )
 
     compiler_params = _compiler_params_cls(pltpu)(dimension_semantics=dim_sem)
-    call = pl.pallas_call(
-        body,
-        grid=grid,
-        in_specs=in_specs + alias_in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        scratch_shapes=scratch_shapes,
-        input_output_aliases=input_output_aliases,
-        interpret=schedule.interpret,
-        compiler_params=compiler_params,
-        name=program.name,
-    )
+    if n_scalars:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=n_scalars,
+            grid=grid,
+            in_specs=in_specs + alias_in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch_shapes,
+        )
+        call = pl.pallas_call(
+            body,
+            grid_spec=grid_spec,
+            out_shape=out_shape,
+            interpret=schedule.interpret,
+            compiler_params=compiler_params,
+            name=program.name,
+        )
+    else:
+        call = pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=in_specs + alias_in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            input_output_aliases=input_output_aliases,
+            interpret=schedule.interpret,
+            compiler_params=compiler_params,
+            name=program.name,
+        )
 
     n_aliased = len(alias_in_specs)
 
     def fn(*arrays):
-        operands = [arrays[i] for i in window_param_idx]
+        # scalar-prefetch operands lead (PrefetchScalarGridSpec convention),
+        # then one array per input window, then aliased in-out operands.
+        operands = [arrays[i] for i in scalar_arg_idx]
+        operands += [arrays[i] for i in window_param_idx]
         operands += list(arrays[len(arrays) - n_aliased :]) if n_aliased else []
         res = call(*operands)
         return res[0] if len(out_windows) == 1 else tuple(res)

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
-from ..buffer import GLOBAL, TileBuffer
+from ..buffer import GLOBAL, SCALAR, TileBuffer
 from ..errors import LoweringError
 from ..expr import Expr, VarExpr, evaluate
 from ..lowering.indexing import no_loads
@@ -84,14 +84,21 @@ def emit_reference(module: LoweredModule) -> CompiledKernel:
 def _ref_op(op: TileOp, globals_: Dict, tiles: Dict, env: Dict, jnp):
     import jax
 
-    def ev(e: Expr, extra=None, load_fn=no_loads):
+    def scalar_load(buffer, idx_values, idx_exprs):
+        """Index-expression loads: only scalar-prefetch params are legal."""
+        if buffer.scope != SCALAR:
+            return no_loads(buffer, idx_values, idx_exprs)
+        base = globals_[buffer.name]
+        return base[tuple(jnp.asarray(v) for v in idx_values)]
+
+    def ev(e: Expr, extra=None, load_fn=None):
         en = dict(env)
         if extra:
             en.update(extra)
-        return evaluate(e, en, load_fn)
+        return evaluate(e, en, load_fn if load_fn is not None else scalar_load)
 
     def get(buf: TileBuffer):
-        if buf.scope == GLOBAL:
+        if buf.scope in (GLOBAL, SCALAR):
             return globals_[buf.name]
         if buf.name not in tiles:
             tiles[buf.name] = jnp.zeros(buf.shape, jnp.dtype(buf.dtype))

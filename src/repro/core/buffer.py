@@ -32,8 +32,13 @@ from .expr import ConstExpr, Expr, LoadExpr, static_eval, wrap
 GLOBAL = "global"
 SHARED = "shared"
 FRAGMENT = "fragment"
+# Scalar-prefetch params (T.ScalarTensor): small integer tensors placed in
+# SMEM ahead of the grid walk so *index expressions* — BlockSpec index maps
+# included — may read them.  This is how data-dependent gathers (paged
+# attention block tables) stay inside the declarative window model.
+SCALAR = "scalar"
 
-_SCOPES = (GLOBAL, SHARED, FRAGMENT)
+_SCOPES = (GLOBAL, SHARED, FRAGMENT, SCALAR)
 
 _counter = itertools.count()
 
@@ -160,6 +165,24 @@ class TileBuffer:
         from . import program  # circular-safe: resolved at call time
 
         idx = self._normalize_idx(idx)
+        if self.scope == SCALAR:
+            # Scalar-prefetch buffers are read element-wise wherever an index
+            # expression is legal: copy-region starts (-> data-dependent
+            # BlockSpec index maps) and T.Parallel bodies alike.
+            exprs = []
+            for i in idx:
+                if isinstance(i, slice):
+                    raise TraceError(
+                        f"{self.name}: scalar-prefetch buffers must be indexed "
+                        "element-wise (no slices)."
+                    )
+                exprs.append(wrap(i))
+            if len(exprs) != self.ndim:
+                raise TraceError(
+                    f"{self.name}: scalar-prefetch load needs all {self.ndim} "
+                    f"indices, got {len(exprs)}"
+                )
+            return LoadExpr(self, tuple(exprs))
         ctx = program.current_parallel_context()
         if ctx is not None and self.scope != GLOBAL:
             # Elementwise scalar load

@@ -28,7 +28,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .buffer import FRAGMENT, GLOBAL, SHARED, TileBuffer
+from .buffer import FRAGMENT, GLOBAL, SCALAR, SHARED, TileBuffer
 from .errors import LayoutError
 from .expr import VarExpr, linear_decompose
 from .layout import (
@@ -150,7 +150,9 @@ def infer_layouts(program) -> InferenceResult:
     user = dict(program.annotations.layouts)
 
     def assign(buf: TileBuffer, make):
-        if buf.scope == GLOBAL or buf.name in layouts:
+        # GLOBAL operands live in HBM; SCALAR operands live in SMEM and are
+        # read element-wise — neither gets a VMEM tile layout.
+        if buf.scope in (GLOBAL, SCALAR) or buf.name in layouts:
             return
         if buf.name in user:
             layouts[buf.name] = user[buf.name]

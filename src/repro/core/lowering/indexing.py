@@ -1,24 +1,32 @@
 """Index-map derivation shared by the grid plan and the Pallas backend."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, List, Optional
 
+from ..buffer import SCALAR
 from ..errors import LoweringError
 from ..expr import Expr, evaluate, linear_decompose
-from ..tile_ops import ResolvedRegion
 
 
 def make_index_map(
-    region: ResolvedRegion,
+    region,
     env_builder: Callable[..., Dict[str, Any]],
+    scalar_params: Optional[List] = None,
 ):
     """Build a Pallas ``index_map(*grid_ids) -> block indices``.
 
     Affine starts with size-divisible coefficients fold statically; otherwise
     we fall back to a runtime floordiv (correct when the region is aligned —
     the TileLang contract for unmasked copies).
+
+    ``scalar_params`` (when non-empty) is the declaration-ordered list of
+    scalar-prefetch buffers: the index map then accepts their SMEM refs as
+    trailing arguments (the ``PrefetchScalarGridSpec`` convention) and
+    resolves ``LoadExpr`` starts against them — the data-dependent gather of
+    paged attention block tables.
     """
     starts, sizes = region.starts, region.sizes
+    scalar_names = [p.name for p in (scalar_params or [])]
 
     def fold(e: Expr, size: int):
         if size == 1:
@@ -31,11 +39,28 @@ def make_index_map(
 
     plans = [fold(e, s) for e, s in zip(starts, sizes)]
 
-    def index_map(*grid_ids):
+    def index_map(*args):
+        if scalar_names:
+            n = len(scalar_names)
+            grid_ids, scalar_refs = args[:-n], args[-n:]
+            by_name = dict(zip(scalar_names, scalar_refs))
+
+            def load_fn(buffer, idx_values, idx_exprs):
+                ref = by_name.get(buffer.name)
+                if ref is None or buffer.scope != SCALAR:
+                    raise LoweringError(
+                        f"index expression loads {buffer.name}, which is not "
+                        "a scalar-prefetch param"
+                    )
+                return ref[tuple(idx_values)]
+
+        else:
+            grid_ids = args
+            load_fn = no_loads
         env = env_builder(*grid_ids)
 
         def ev(e: Expr):
-            return evaluate(e, env, load_fn=no_loads)
+            return evaluate(e, env, load_fn=load_fn)
 
         out = []
         for (kind, payload), size in zip(plans, sizes):

@@ -68,6 +68,8 @@ class LoweredModule:
     scratch_pos: Dict[str, int] = dataclasses.field(default_factory=dict)
     arg_params: List[TileBuffer] = dataclasses.field(default_factory=list)
     out_params: List[TileBuffer] = dataclasses.field(default_factory=list)
+    # scalar-prefetch params (declaration order); a subset of arg_params
+    scalar_params: List[TileBuffer] = dataclasses.field(default_factory=list)
     # operand index into arg_params per input window; None when the window
     # reads a written global (only the Pallas backend rejects that).
     window_param_idx: List[Optional[int]] = dataclasses.field(default_factory=list)

@@ -89,6 +89,7 @@ def pass_plan_params(m: LoweredModule) -> None:
 
     param_pos = {id(p): i for i, p in enumerate(m.arg_params)}
     m.window_param_idx = [param_pos.get(id(w.param)) for w in m.in_windows]
+    m.scalar_params = program.scalar_params()
 
 
 def pass_estimate_cost(m: LoweredModule) -> None:

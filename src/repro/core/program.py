@@ -20,7 +20,15 @@ import inspect
 import itertools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-from .buffer import FRAGMENT, GLOBAL, SHARED, Region, TileBuffer, canonical_dtype
+from .buffer import (
+    FRAGMENT,
+    GLOBAL,
+    SCALAR,
+    SHARED,
+    Region,
+    TileBuffer,
+    canonical_dtype,
+)
 from .errors import TraceError
 from .expr import (
     BinExpr,
@@ -126,6 +134,25 @@ class Tensor:
 Buffer = Tensor  # alias familiar from TVM-style frontends
 
 
+class ScalarTensor(Tensor):
+    """Annotation for a scalar-prefetch parameter: a small integer tensor
+    (block tables, sequence lengths) whose *elements* may appear in index
+    expressions — including the starts of global->shared ``T.copy`` regions,
+    which is how a kernel gathers non-contiguous tiles (paged KV pages).
+
+    On the Pallas backend these become ``PrefetchScalarGridSpec`` scalar
+    operands living in SMEM; the reference interpreter reads them as plain
+    arrays.  Only integer dtypes are allowed.
+    """
+
+    def __init__(self, shape: Sequence[Union[int, Any]], dtype: str = "int32"):
+        super().__init__(shape, dtype)
+        if not self.dtype.startswith(("int", "uint")):
+            raise TraceError(
+                f"T.ScalarTensor must have an integer dtype, got {self.dtype!r}"
+            )
+
+
 # ---------------------------------------------------------------------------
 # The traced program
 # ---------------------------------------------------------------------------
@@ -189,10 +216,44 @@ class TileProgram:
     def pipelined_ops(self) -> List[PipelinedOp]:
         return [op for op in self._walk() if isinstance(op, PipelinedOp)]
 
+    def scalar_params(self) -> List[TileBuffer]:
+        """Scalar-prefetch params (T.ScalarTensor), in declaration order."""
+        return [p for p in self.params if p.scope == SCALAR]
+
+    def scalar_reads(self) -> List[TileBuffer]:
+        """Scalar-prefetch buffers read anywhere (index exprs or bodies)."""
+        from .expr import loads_in
+        from .tile_ops import AtomicOp, CopyOp, FillOp, ParallelOp
+
+        seen, out = set(), []
+
+        def note(e):
+            for ld in loads_in(e):
+                b = ld.buffer
+                if b.scope == SCALAR and id(b) not in seen:
+                    seen.add(id(b))
+                    out.append(b)
+
+        for op in self._walk():
+            if isinstance(op, CopyOp):
+                for e in (*op.src.starts, *op.dst.starts):
+                    note(e)
+            elif isinstance(op, FillOp):
+                note(op.value)
+            elif isinstance(op, AtomicOp):
+                for e in op.dst.starts:
+                    note(e)
+            elif isinstance(op, ParallelOp):
+                for _, idx, val in op.stores:
+                    for e in (*idx, val):
+                        note(e)
+        return out
+
     def _validate(self):
         if not self.grid_axes:
             raise TraceError(f"{self.name}: no T.Kernel context was entered.")
         reads = {id(b) for b in self.read_globals()}
+        reads |= {id(b) for b in self.scalar_reads()}
         writes = {id(b) for b in self.written_globals()}
         for p in self.params:
             if id(p) not in reads and id(p) not in writes:
@@ -225,7 +286,8 @@ def prim_func(fn: Callable) -> TileProgram:
                 f"{fn.__name__}: parameter {pname!r} must be annotated with "
                 f"T.Tensor(shape, dtype); got {ann!r}"
             )
-        buf = TileBuffer(ann.shape, ann.dtype, GLOBAL, name=pname)
+        scope = SCALAR if isinstance(ann, ScalarTensor) else GLOBAL
+        buf = TileBuffer(ann.shape, ann.dtype, scope, name=pname)
         params.append(buf)
         kwargs[pname] = buf
 
@@ -354,6 +416,10 @@ class _ParallelRecorder:
             raise TraceError(
                 f"Elementwise store to global buffer {buffer.name}; stage "
                 "through shared/fragment and T.copy instead."
+            )
+        if buffer.scope == SCALAR:
+            raise TraceError(
+                f"Scalar-prefetch buffer {buffer.name} is read-only."
             )
         self.op.stores.append((buffer, idx, value))
 

@@ -1,10 +1,29 @@
 # Tile-DSL kernels (paper §5 workloads) + jit'd wrappers + jnp oracles.
-from . import ops, ref
+from . import (
+    dequant_matmul,
+    flash_attention,
+    linear_attention,
+    matmul,
+    mla,
+    ops,
+    paged_attention,
+    ref,
+)
 from .dequant_matmul import dequant_matmul_program
 from .flash_attention import flash_attention_program
 from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program, tune_matmul
 from .mla import mla_program
+from .paged_attention import paged_attention_program
+
+_PARITY_MODULES = (
+    matmul,
+    flash_attention,
+    mla,
+    paged_attention,
+    dequant_matmul,
+    linear_attention,
+)
 
 
 def parity_programs():
@@ -15,10 +34,23 @@ def parity_programs():
     both ``target="pallas"`` (interpret mode) and ``target="reference"`` and
     asserts numerical agreement.
     """
-    from . import dequant_matmul, flash_attention, linear_attention, matmul, mla
-
-    for mod in (matmul, flash_attention, mla, dequant_matmul, linear_attention):
+    for mod in _PARITY_MODULES:
         yield from mod.parity_programs()
+
+
+def parity_inputs(name, program, rng):
+    """Inputs for one parity case, or ``None`` for the generic random fill.
+
+    Kernel modules whose params carry semantic constraints (paged
+    attention's block tables must hold valid page ids) define a
+    ``parity_inputs(name, program, rng)`` hook; everything else gets
+    unconstrained random tensors from the parity suite itself.
+    """
+    for mod in _PARITY_MODULES:
+        hook = getattr(mod, "parity_inputs", None)
+        if hook is not None and name in dict(mod.PARITY_CASES):
+            return hook(name, program, rng)
+    return None
 
 
 __all__ = [
@@ -28,8 +60,10 @@ __all__ = [
     "tune_matmul",
     "flash_attention_program",
     "mla_program",
+    "paged_attention_program",
     "dequant_matmul_program",
     "chunk_state_program",
     "chunk_scan_program",
     "parity_programs",
+    "parity_inputs",
 ]

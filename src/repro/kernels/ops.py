@@ -35,6 +35,7 @@ from .flash_attention import flash_attention_program
 from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program
 from .mla import mla_program
+from .paged_attention import paged_attention_program
 
 _DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
 _CACHE: dict = {}
@@ -114,7 +115,8 @@ def attention(q, k, v, *, causal: bool = False, sm_scale=None,
         or xla_kw.get("logit_soft_cap") is not None
     ):
         return ref.attention(q, k, v, causal=causal, sm_scale=sm_scale, **xla_kw)
-    key = ("fa", b, hq, hkv, sq, sk, d, causal, str(q.dtype), bm, bn, num_stages)
+    key = ("fa", b, hq, hkv, sq, sk, d, causal, str(q.dtype), bm, bn,
+           num_stages, sm_scale)
     kern = _cached(
         key,
         lambda: flash_attention_program(
@@ -123,6 +125,35 @@ def attention(q, k, v, *, causal: bool = False, sm_scale=None,
         ),
     )
     return kern(q, k, v)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                    sm_scale=None, window: Optional[int] = None,
+                    logit_soft_cap=None, backend: Optional[str] = None,
+                    num_stages: int = 2):
+    """Single-token decode attention over a paged KV pool (see
+    kernels/paged_attention.py for shapes).  The Pallas path gathers pages
+    through the block table via scalar prefetch; the XLA path is
+    ref.paged_attention (used by the serving engine on CPU hosts)."""
+    be = _resolve(backend)
+    if be == "xla" or logit_soft_cap is not None:
+        return ref.paged_attention(
+            q, k_pages, v_pages, block_tables, seq_lens, sm_scale=sm_scale,
+            window=window, logit_soft_cap=logit_soft_cap,
+        )
+    b, hq, d = q.shape
+    hkv, num_pages, page_size, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    key = ("paged", b, hq, hkv, num_pages, page_size, max_pages, d, window,
+           str(q.dtype), num_stages, sm_scale)
+    kern = _cached(
+        key,
+        lambda: paged_attention_program(
+            b, hq, hkv, d, page_size, max_pages, num_pages, window,
+            str(q.dtype), "float32", num_stages, sm_scale,
+        ),
+    )
+    return kern(block_tables, seq_lens, q, k_pages, v_pages)
 
 
 def mla(q, q_pe, kv, k_pe, *, sm_scale=None, backend: Optional[str] = None,
@@ -136,7 +167,8 @@ def mla(q, q_pe, kv, k_pe, *, sm_scale=None, backend: Optional[str] = None,
     bn = block_n or _pick_block(s)
     group = h // hkv
     bh = min(block_h, group)
-    key = ("mla", b, h, hkv, s, d, pe, str(q.dtype), bn, bh, num_stages)
+    key = ("mla", b, h, hkv, s, d, pe, str(q.dtype), bn, bh, num_stages,
+           sm_scale)
     kern = _cached(
         key,
         lambda: mla_program(

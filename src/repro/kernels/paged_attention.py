@@ -1,0 +1,164 @@
+"""Paged-attention decode in the tile DSL (vLLM-style KV paging).
+
+Single-token decode attention over a **paged KV cache**: keys/values live in
+a pool of fixed-size pages (``(kv_heads, num_pages, page_size, head_dim)``)
+and each decode slot owns a *block table* mapping its logical KV blocks to
+physical pages.  The kernel grid runs over (kv_head, slot) with the KV-block
+axis pipelined; each step's K/V windows are gathered **through the block
+table** — a ``T.ScalarTensor`` scalar-prefetch param whose elements appear
+in the copy-region starts, so the Pallas lowering turns the gather into a
+``PrefetchScalarGridSpec`` index map and the DMA pipeline double-buffers
+non-contiguous pages exactly like contiguous ones (TileLoom's "plan
+dataflow over non-contiguous tiles" as a one-line index change).
+
+Softmax is the same online-rescaling loop as flash_attention.py; ragged
+sequence lengths (every slot at its own position) and sliding windows are
+masked per element against the ``Lens`` scalar tensor.  Entries of the
+block table beyond a slot's live length must still hold *valid* page ids
+(the pool DMAs them regardless; masking kills their contribution) — the
+serving engine pads tables with page 0.
+"""
+
+import math
+from typing import Optional
+
+from repro.core import TileProgram
+from repro.core import lang as T
+
+
+def paged_attention_program(
+    slots: int,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    page_size: int,
+    max_pages: int,
+    num_pages: int,
+    window: Optional[int] = None,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+) -> TileProgram:
+    if heads % kv_heads:
+        raise ValueError("GQA requires heads % kv_heads == 0")
+    group = heads // kv_heads
+    scale = (sm_scale if sm_scale is not None else 1.0 / math.sqrt(head_dim)) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def PagedAttn(
+        Tables: T.ScalarTensor((slots, max_pages), "int32"),
+        Lens: T.ScalarTensor((slots,), "int32"),
+        Q: T.Tensor((slots, heads, head_dim), dtype),
+        KPages: T.Tensor((kv_heads, num_pages, page_size, head_dim), dtype),
+        VPages: T.Tensor((kv_heads, num_pages, page_size, head_dim), dtype),
+        Output: T.Tensor((slots, heads, head_dim), dtype),
+    ):
+        with T.Kernel(kv_heads, slots) as (bh, bz):
+            Q_shared = T.alloc_shared((group, head_dim), dtype)
+            K_shared = T.alloc_shared((page_size, head_dim), dtype)
+            V_shared = T.alloc_shared((page_size, head_dim), dtype)
+            acc_s = T.alloc_fragment((group, page_size), accum_dtype)
+            acc_o = T.alloc_fragment((group, head_dim), accum_dtype)
+            scores_max = T.alloc_fragment((group,), accum_dtype)
+            scores_max_prev = T.alloc_fragment((group,), accum_dtype)
+            scores_scale = T.alloc_fragment((group,), accum_dtype)
+            scores_sum = T.alloc_fragment((group,), accum_dtype)
+            logsum = T.alloc_fragment((group,), accum_dtype)
+
+            T.copy(Q[bz, bh * group, 0], Q_shared)
+            T.fill(acc_o, 0.0)
+            T.fill(logsum, 0.0)
+            T.fill(scores_max, -T.infinity(accum_dtype))
+
+            for k in T.Pipelined(max_pages, num_stages=num_stages):
+                # the paged gather: page index loaded from the block table
+                T.copy(KPages[bh, Tables[bz, k], 0, 0], K_shared)
+                T.copy(VPages[bh, Tables[bz, k], 0, 0], V_shared)
+                T.clear(acc_s)
+                T.gemm(Q_shared, K_shared, acc_s, transpose_B=True)
+                # ragged mask: this slot's live KV positions are
+                # [max(0, len-window), len) — everything else (tail of the
+                # last page, table padding) contributes nothing.
+                for i, j in T.Parallel(group, page_size):
+                    valid = (k * page_size + j) < Lens[bz]
+                    if window is not None:
+                        valid = valid & (
+                            (k * page_size + j) >= (Lens[bz] - window)
+                        )
+                    acc_s[i, j] = T.if_then_else(
+                        valid, acc_s[i, j], -T.infinity(accum_dtype)
+                    )
+                T.copy(scores_max, scores_max_prev)
+                T.reduce_max(acc_s, scores_max, dim=1, clear=False)
+                # Clamp before differencing: fully-masked pages leave the
+                # running max at -inf and (-inf) - (-inf) = nan.
+                neg_clamp = -1048576.0  # -2^20; exp2 underflows long before
+                for i in T.Parallel(group):
+                    scores_scale[i] = T.exp2(
+                        T.maximum(scores_max_prev[i], neg_clamp) * scale
+                        - T.maximum(scores_max[i], neg_clamp) * scale
+                    )
+                for i, j in T.Parallel(group, page_size):
+                    acc_s[i, j] = T.exp2(
+                        acc_s[i, j] * scale
+                        - T.maximum(scores_max[i], neg_clamp) * scale
+                    )
+                T.reduce_sum(acc_s, scores_sum, dim=1)
+                for i in T.Parallel(group):
+                    logsum[i] = logsum[i] * scores_scale[i] + scores_sum[i]
+                for i, j in T.Parallel(group, head_dim):
+                    acc_o[i, j] = acc_o[i, j] * scores_scale[i]
+                T.gemm(acc_s, V_shared, acc_o)
+
+            # empty slots (len 0) divide by the floor and emit zeros, not nan
+            for i, j in T.Parallel(group, head_dim):
+                acc_o[i, j] = acc_o[i, j] / T.maximum(logsum[i], 1e-30)
+            T.copy(acc_o, Output[bz, bh * group, 0])
+
+    return PagedAttn
+
+
+# Tiny-shape configs for the pallas-vs-reference parity suite
+# (tests/test_pipeline.py); covers GQA + MQA head groupings, a sliding
+# window, and the ragged case (block tables of different live lengths per
+# slot — exercised through the input override below).
+PARITY_CASES = [
+    (
+        "paged_attention_mqa",
+        dict(slots=2, heads=2, kv_heads=1, head_dim=16, page_size=16,
+             max_pages=2, num_pages=4),
+    ),
+    (
+        "paged_attention_gqa_ragged",
+        dict(slots=3, heads=4, kv_heads=2, head_dim=16, page_size=16,
+             max_pages=2, num_pages=8),
+    ),
+    (
+        "paged_attention_windowed",
+        dict(slots=2, heads=2, kv_heads=2, head_dim=16, page_size=16,
+             max_pages=2, num_pages=4, window=12),
+    ),
+]
+
+
+def parity_programs():
+    for name, cfg in PARITY_CASES:
+        yield name, paged_attention_program(**cfg)
+
+
+def parity_inputs(name, program, rng):
+    """Valid inputs for the parity suite: block tables must hold live page
+    ids and lens must be in range — random bytes won't do.  Tables are drawn
+    without replacement (each physical page owned by one slot) and lens are
+    ragged: every slot at a different fill level, including a partial page.
+    """
+    cfg = dict(PARITY_CASES)[name]
+    slots, mp, np_ = cfg["slots"], cfg["max_pages"], cfg["num_pages"]
+    pages = rng.permutation(np_)[: slots * mp].reshape(slots, mp).astype("int32")
+    max_len = mp * cfg["page_size"]
+    lens = (rng.integers(1, max_len + 1, size=slots)).astype("int32")
+    args = [pages, lens]
+    for p in program.input_params()[2:]:
+        args.append(rng.standard_normal(p.shape).astype(p.dtype))
+    return args

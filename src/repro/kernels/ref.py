@@ -190,6 +190,62 @@ def attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged attention (vLLM-style): single-token decode over a paged KV pool.
+# The oracle for kernels/paged_attention.py and the XLA execution path the
+# serving engine uses on CPU hosts.
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(
+    q: jax.Array,  # (B, Hq, D) one query token per slot
+    k_pages: jax.Array,  # (Hkv, P, page_size, D) physical page pool
+    v_pages: jax.Array,  # (Hkv, P, page_size, D)
+    block_tables: jax.Array,  # (B, max_pages) int32 physical page ids
+    seq_lens: jax.Array,  # (B,) int32 live length per slot (0 = empty)
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
+    out_dtype=None,
+) -> jax.Array:
+    b, hq, d = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(d)
+    # gather each slot's pages: (Hkv, B, max_pages, page_size, D) -> (B, Hkv, S, D)
+    def gathered(pages):
+        g = pages[:, block_tables]
+        g = jnp.moveaxis(g, 0, 1)
+        return g.reshape(b, hkv, -1, d)
+
+    k = gathered(k_pages).astype(jnp.float32)
+    v = gathered(v_pages).astype(jnp.float32)
+    s_total = k.shape[2]
+    qg = q.reshape(b, hkv, group, d).astype(jnp.float32)
+    # scale first, then cap — the same order as attention()'s _attn_block,
+    # so paged and contiguous decode stay token-identical for capped models
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg, k) * sm_scale
+    if logit_soft_cap is not None:
+        scores = logit_soft_cap * jnp.tanh(scores / logit_soft_cap)
+    ki = jnp.arange(s_total, dtype=jnp.int32)
+    lens = jnp.asarray(seq_lens, jnp.int32)
+    mask = ki[None, :] < lens[:, None]  # (B, S)
+    if window is not None:
+        mask = mask & (ki[None, :] >= (lens[:, None] - window))
+    mask4 = mask[:, None, None, :]
+    # masked, empty-row-safe softmax (slots with len 0 emit zeros)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask4, scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * mask4
+    den = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    p = e / den
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v)
+    return out.reshape(b, hq, d).astype(out_dtype or q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Multi-head Latent Attention (paper Fig. 14/18): queries attend to a shared
 # latent KV (dim) + rotary part (pe_dim); V is the latent itself.
 # ---------------------------------------------------------------------------

@@ -28,6 +28,12 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache", choices=["paged", "contiguous"], default="paged",
+                    help="KV layout (paged = block pool + block tables)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks; below slots*max_pages "
+                         "oversubscribes memory and exercises preemption")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -41,7 +47,9 @@ def main(argv=None):
         cfg, params,
         ServeConfig(slots=args.slots, max_len=args.max_len,
                     max_new_tokens=args.max_new,
-                    temperature=args.temperature, seed=args.seed),
+                    temperature=args.temperature, seed=args.seed,
+                    cache=args.cache, page_size=args.page_size,
+                    num_blocks=args.num_blocks),
     )
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -52,9 +60,16 @@ def main(argv=None):
     done = engine.run()
     dt = time.time() - t0
     total_tokens = sum(len(r.output) for r in done)
+    extra = ""
+    if engine.pool is not None:
+        extra = (
+            f", {engine.cache_mode} cache: peak {engine.peak_kv_blocks()} "
+            f"blocks, {engine.preemptions} preemptions"
+        )
     print(
         f"served {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
-        f"({total_tokens/max(dt,1e-9):.1f} tok/s, {engine.steps_run} engine steps)"
+        f"({total_tokens/max(dt,1e-9):.1f} tok/s, {engine.steps_run} engine steps"
+        f"{extra})"
     )
     for r in done[:3]:
         print(f"  req {r.uid}: prompt {r.prompt[:4]}... -> {r.output[:8]}...")

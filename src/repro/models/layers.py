@@ -182,6 +182,57 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window=None):
     }
 
 
+def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, page_size: int):
+    """Page pool for one layer: ``(kv_heads, num_blocks, page_size, head_dim)``.
+
+    Unlike the contiguous cache there is no per-layer ring sizing — sliding
+    windows are enforced by the attention mask over gathered pages, so every
+    layer shares one pool geometry.  (Layer *stacking* still requires
+    uniform windows: the scanned decode body bakes the window statically.)"""
+    shape = (cfg.num_kv_heads, num_blocks, page_size, cfg.head_dim)
+    return {
+        "k_pages": jnp.zeros(shape, cfg.dtype),
+        "v_pages": jnp.zeros(shape, cfg.dtype),
+    }
+
+
+def attention_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables,
+                           window=None, rope_fraction=1.0):
+    """One-token decode against a paged KV pool.
+
+    ``tables`` is the (B, max_pages) int32 block table (padded with page 0);
+    ``pos`` is the absolute position per slot.  The new K/V land in the page
+    holding position ``pos`` (scattered per slot through the table), then the
+    query attends over the gathered pages with a ragged length mask."""
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)  # (b, 1, ...)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posv = posb[:, None]
+    q = apply_rope(q, posv, cfg.rope_theta, rope_fraction)
+    k = apply_rope(k, posv, cfg.rope_theta, rope_fraction)
+    page_size = cache["k_pages"].shape[2]
+    logical = posb // page_size
+    offset = posb % page_size
+    phys = jnp.take_along_axis(tables, logical[:, None], axis=1)[:, 0]
+    # (b, 1, hkv, hd) -> (hkv, b, hd) scatter rows into their pages
+    kdt = cache["k_pages"].dtype
+    knew = cache["k_pages"].at[:, phys, offset].set(
+        k[:, 0].transpose(1, 0, 2).astype(kdt)
+    )
+    vnew = cache["v_pages"].at[:, phys, offset].set(
+        v[:, 0].transpose(1, 0, 2).astype(kdt)
+    )
+    out = ops.paged_attention(
+        q[:, 0], knew, vnew, tables, posb + 1, window=window,
+        logit_soft_cap=cfg.logit_soft_cap,
+        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+    )
+    out = out.reshape(b, 1, h * hd)
+    proj = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
+    return proj, {"k_pages": knew, "v_pages": vnew}
+
+
 def attention_decode(params, x, cfg: ModelConfig, cache, pos, window=None,
                      rope_fraction=1.0):
     """One-token decode.  ``pos`` is the absolute position — a scalar (lockstep

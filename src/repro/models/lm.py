@@ -265,29 +265,76 @@ def loss_fn(params, cfg: ModelConfig, tokens, labels, prefix_embeds=None,
 
 @jax.tree_util.register_pytree_node_class
 class Cache:
-    """Decode cache with static layout metadata (aux data, not leaves)."""
+    """Decode cache with static layout metadata (aux data, not leaves).
 
-    def __init__(self, prefix, rest, stacked: bool, max_len: int):
+    Two layouts behind one interface (``decode_step`` accepts either):
+
+    * ``"contiguous"`` — per-slot strips of ``max_len`` (ring buffers for
+      sliding-window layers), the lockstep/simple-batching layout;
+    * ``"paged"`` — per-layer page pools plus a ``tables`` leaf, the
+      (B, max_pages) int32 block table mapping each slot's logical KV
+      blocks to physical pages (serving/paged_cache.py owns the host-side
+      allocation; the engine refreshes ``tables`` via :meth:`with_tables`).
+    """
+
+    def __init__(self, prefix, rest, stacked: bool, max_len: int,
+                 layout: str = "contiguous", page_size: int = 0, tables=None):
         self.prefix = prefix
         self.rest = rest
         self.stacked = stacked
         self.max_len = max_len
+        self.layout = layout
+        self.page_size = page_size
+        self.tables = tables
 
     def tree_flatten(self):
-        return (self.prefix, self.rest), (self.stacked, self.max_len)
+        return (
+            (self.prefix, self.rest, self.tables),
+            (self.stacked, self.max_len, self.layout, self.page_size),
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], children[1], aux[0], aux[1])
+        return cls(children[0], children[1], aux[0], aux[1], aux[2], aux[3],
+                   tables=children[2])
+
+    def with_tables(self, tables) -> "Cache":
+        """Same cache contents under refreshed block tables."""
+        return Cache(self.prefix, self.rest, self.stacked, self.max_len,
+                     self.layout, self.page_size, tables)
+
+    def kv_bytes(self) -> int:
+        """Bytes held by attention KV state (pages or strips)."""
+        total = 0
+        for leaf in jax.tree.leaves((self.prefix, self.rest)):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               layout: str = "contiguous", page_size: int = 16,
+               num_blocks: Optional[int] = None) -> Cache:
     wlist = static_windows(cfg)
+    if layout not in ("contiguous", "paged"):
+        raise ValueError(f"unknown cache layout {layout!r}")
+    if layout == "paged" and cfg.attention == "mla":
+        raise NotImplementedError(
+            "paged KV is implemented for GQA/MQA attention; MLA latent "
+            "paging is future work — use layout='contiguous'."
+        )
+    max_pages = -(-max_len // page_size) if layout == "paged" else 0
+    if layout == "paged" and num_blocks is None:
+        num_blocks = batch * max_pages
 
     def one(layer_idx: int) -> Dict:
         c: Dict[str, Any] = {}
         if cfg.attention == "gqa":
-            c["kv"] = L.init_kv_cache(cfg, batch, max_len, window=wlist[layer_idx])
+            if layout == "paged":
+                c["kv"] = L.init_paged_kv_cache(cfg, num_blocks, page_size)
+            else:
+                c["kv"] = L.init_kv_cache(
+                    cfg, batch, max_len, window=wlist[layer_idx]
+                )
         elif cfg.attention == "mla":
             c["mla"] = L.init_mla_cache(cfg, batch, max_len)
         if cfg.family in ("ssm", "hybrid"):
@@ -297,23 +344,33 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
     n_prefix = cfg.moe.first_dense_layers if cfg.moe else 0
     prefix = [one(i) for i in range(n_prefix)]
     rest = [one(i) for i in range(n_prefix, cfg.num_layers)]
+    tables = (
+        jnp.zeros((batch, max_pages), jnp.int32) if layout == "paged" else None
+    )
     homogeneous = len({w for w in wlist[n_prefix:]}) <= 1
     if homogeneous and len(rest) > 1:
         rest_t = jax.tree.map(lambda *xs: jnp.stack(xs), *rest)
-        return Cache(prefix, rest_t, True, max_len)
-    return Cache(prefix, rest, False, max_len)
+        return Cache(prefix, rest_t, True, max_len, layout, page_size, tables)
+    return Cache(prefix, rest, False, max_len, layout, page_size, tables)
 
 
-def _block_decode(p, x, cfg: ModelConfig, cache, pos, window):
-    """``window`` must be a static python value here (ring layout)."""
+def _block_decode(p, x, cfg: ModelConfig, cache, pos, window,
+                  layout="contiguous", tables=None):
+    """``window`` must be a static python value here (ring layout / mask)."""
     h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
     new_cache: Dict[str, Any] = {}
     delta = jnp.zeros_like(x)
     if cfg.attention == "gqa":
-        delta, kv = L.attention_decode(
-            p["attn"], h, cfg, cache["kv"], pos, window=window,
-            rope_fraction=rope_fraction(cfg),
-        )
+        if layout == "paged":
+            delta, kv = L.attention_decode_paged(
+                p["attn"], h, cfg, cache["kv"], pos, tables, window=window,
+                rope_fraction=rope_fraction(cfg),
+            )
+        else:
+            delta, kv = L.attention_decode(
+                p["attn"], h, cfg, cache["kv"], pos, window=window,
+                rope_fraction=rope_fraction(cfg),
+            )
         new_cache["kv"] = kv
     elif cfg.attention == "mla":
         delta, mc = L.mla_decode(p["attn"], h, cfg, cache["mla"], pos)
@@ -343,9 +400,11 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
     wlist = static_windows(cfg)
     n_prefix = len(params["prefix_layers"])
+    layout, tables = cache.layout, cache.tables
     new_prefix = []
     for i, p in enumerate(params["prefix_layers"]):
-        x, c = _block_decode(p, x, cfg, cache.prefix[i], pos, wlist[i])
+        x, c = _block_decode(p, x, cfg, cache.prefix[i], pos, wlist[i],
+                             layout, tables)
         new_prefix.append(c)
 
     if cache.stacked:
@@ -353,7 +412,7 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
 
         def body(x, inp):
             p, c = inp
-            x, cnew = _block_decode(p, x, cfg, c, pos, wcommon)
+            x, cnew = _block_decode(p, x, cfg, c, pos, wcommon, layout, tables)
             return x, cnew
 
         x, new_rest = jax.lax.scan(
@@ -363,14 +422,16 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
         new_rest = []
         layer_list = _unstack(params["layers"], cfg.num_layers - n_prefix)
         for j, (p, c) in enumerate(zip(layer_list, cache.rest)):
-            x, cnew = _block_decode(p, x, cfg, c, pos, wlist[n_prefix + j])
+            x, cnew = _block_decode(p, x, cfg, c, pos, wlist[n_prefix + j],
+                                    layout, tables)
             new_rest.append(cnew)
 
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(params["embed"], x, cfg)[:, 0]
     if cfg.logit_soft_cap:
         logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
-    return logits, Cache(new_prefix, new_rest, cache.stacked, cache.max_len)
+    return logits, Cache(new_prefix, new_rest, cache.stacked, cache.max_len,
+                         layout, cache.page_size, tables)
 
 
 def _unstack(tree, n):

@@ -1,13 +1,29 @@
-"""Batched serving engine with continuous batching.
+"""Batched serving engine: continuous batching over a paged KV cache.
 
 The engine owns a fixed number of decode *slots* (static shapes — the jit'd
 step never retraces).  Requests are admitted into free slots, prefilled by
 streaming their prompt through the decode step at their own positions
-(per-slot ``pos`` vector — see layers.attention_decode), and generate until
+(per-slot ``pos`` vector — see layers.attention_decode*), and generate until
 EOS / max_tokens, at which point the slot is recycled for the next queued
-request.  This is vLLM-style continuous batching with a contiguous
-(per-slot) KV cache; ring buffers bound the cache for sliding-window layers
-and SSM archs hold O(1) state.
+request.
+
+KV memory comes in two layouts behind one ``decode_step`` interface
+(``ServeConfig.cache``):
+
+* ``"paged"`` (default) — vLLM-style block pool: KV lives in fixed-size
+  pages; each slot owns a block table (serving/paged_cache.py).  The
+  scheduler is real: **admission** requires enough free blocks for the
+  request's resident tokens, **preemption** evicts the lowest-priority
+  (then youngest) request back to the queue when the pool is exhausted
+  (recompute-style resume: its prompt *and* generated tokens replay through
+  prefill), and completion **recycles blocks immediately** at EOS.
+* ``"contiguous"`` — the legacy per-slot ``max_len`` strip (ring buffers
+  for sliding-window layers); preallocates ``slots × max_len`` regardless
+  of real prompt lengths.  Kept as the comparison baseline and as the
+  fallback for MLA archs (latent paging is future work).
+
+Both layouts produce identical outputs for identical requests — asserted in
+tests/test_serving.py.
 """
 from __future__ import annotations
 
@@ -24,6 +40,7 @@ import numpy as np
 from repro.models import lm
 from repro.models.config import ModelConfig
 
+from .paged_cache import BlockPool, PoolExhausted, SlotTables, blocks_for
 from .sampling import sample
 
 # One jit'd decode step per model configuration, shared by every engine
@@ -33,7 +50,9 @@ from .sampling import sample
 # dataclass repr (deterministic over field values); the closure captures a
 # deep copy so later mutation of the caller's config object cannot change
 # what a cached entry computes.  LRU-bounded so config sweeps don't pin an
-# XLA executable per visited config for process lifetime.
+# XLA executable per visited config for process lifetime.  Both cache
+# layouts share one entry: the layout lives in the cache pytree's treedef,
+# so jax.jit keeps one trace per layout under the same wrapper.
 _STEP_FNS: "collections.OrderedDict[str, object]" = collections.OrderedDict()
 _STEP_FNS_MAX = 8
 
@@ -55,11 +74,17 @@ def _decode_step_fn(cfg: ModelConfig):
 @dataclasses.dataclass
 class ServeConfig:
     slots: int = 8  # decode batch width
-    max_len: int = 1024  # per-slot cache length
+    max_len: int = 1024  # per-request logical cache length
     max_new_tokens: int = 128
     eos_id: int = -1  # -1: never stops early
     temperature: float = 0.0
     seed: int = 0
+    cache: str = "paged"  # "paged" | "contiguous"
+    page_size: int = 16  # tokens per KV block (paged mode)
+    # pool size in blocks; None = slots * ceil(max_len / page_size), i.e.
+    # parity with the contiguous footprint.  Size it below that to actually
+    # oversubscribe memory (that's the point of paging).
+    num_blocks: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -67,9 +92,12 @@ class Request:
     uid: int
     prompt: List[int]
     max_new_tokens: Optional[int] = None
+    priority: int = 0  # higher survives preemption longer
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    preemptions: int = 0
+    error: Optional[str] = None  # set when the request can never be served
 
 
 class ServingEngine:
@@ -78,50 +106,179 @@ class ServingEngine:
         self.params = params
         self.scfg = serve_cfg
         b = serve_cfg.slots
-        self.cache = lm.init_cache(cfg, b, serve_cfg.max_len)
+        mode = serve_cfg.cache
+        if mode not in ("paged", "contiguous"):
+            raise ValueError(f"unknown cache mode {mode!r}")
+        if mode == "paged" and cfg.attention == "mla":
+            mode = "contiguous"  # MLA latent paging not implemented
+        self.cache_mode = mode
+
+        if mode == "paged":
+            ps = serve_cfg.page_size
+            self.max_pages = blocks_for(serve_cfg.max_len, ps)
+            nb = serve_cfg.num_blocks or b * self.max_pages
+            # physical page 0 is reserved (padding/garbage page), so the
+            # device pool holds nb + 1 pages and the allocator hands out
+            # ids 1..nb.
+            self.pool = BlockPool(nb, ps, base=1)
+            self.tables = SlotTables(self.pool, b, self.max_pages)
+            self.cache = lm.init_cache(
+                cfg, b, serve_cfg.max_len, layout="paged", page_size=ps,
+                num_blocks=nb + 1,
+            )
+        else:
+            self.pool = None
+            self.tables = None
+            self.cache = lm.init_cache(cfg, b, serve_cfg.max_len)
+
         self.pos = np.zeros((b,), np.int32)  # next write position per slot
         self.slot_req: List[Optional[Request]] = [None] * b
         self.queue: collections.deque[Request] = collections.deque()
         self._uid = itertools.count()
+        self._admit_seq = itertools.count()
         self._key = jax.random.PRNGKey(serve_cfg.seed)
-        self._token_buf = np.zeros((b,), np.int32)
         self._step = _decode_step_fn(cfg)
         self.completed: List[Request] = []
         self.steps_run = 0
+        self.preemptions = 0
 
     # ------------------------------------------------------------------
-    def submit(self, prompt: Sequence[int], max_new_tokens=None) -> Request:
-        req = Request(next(self._uid), list(prompt), max_new_tokens)
+    def submit(self, prompt: Sequence[int], max_new_tokens=None,
+               priority: int = 0) -> Request:
+        req = Request(next(self._uid), list(prompt), max_new_tokens,
+                      priority=priority)
         self.queue.append(req)
         return req
 
+    # -- scheduler ------------------------------------------------------
+    def _resident_tokens(self, req: Request) -> int:
+        """Tokens the request must hold to make forward progress: its full
+        replay (prompt + already-generated) plus the next write."""
+        return len(req.prompt) + len(req.output) + 1
+
     def _admit(self):
+        """FIFO admission into free slots; paged mode additionally gates on
+        free-block count, allocating the request's replay footprint up front
+        (no head-of-line skipping — deterministic order)."""
         for s in range(self.scfg.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.popleft()
-                self.slot_req[s] = req
-                self.pos[s] = 0
-                req._cursor = 0  # type: ignore[attr-defined]
+            if self.slot_req[s] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            if self.pool is not None:
+                need = blocks_for(self._resident_tokens(req), self.pool.page_size)
+                if need > min(self.pool.num_blocks, self.max_pages):
+                    # can never fit — pool too small, or prompt beyond the
+                    # per-slot table (max_len): fail fast instead of wedging
+                    # the queue head forever (or crashing ensure_capacity).
+                    self.queue.popleft()
+                    req.error = (
+                        f"needs {need} KV blocks; pool holds "
+                        f"{self.pool.num_blocks}, table holds {self.max_pages}"
+                    )
+                    req.done = True
+                    self.completed.append(req)
+                    continue
+                if self.pool.free < need:
+                    break
+            self.queue.popleft()
+            self.slot_req[s] = req
+            self.pos[s] = 0
+            req._cursor = 0  # type: ignore[attr-defined]
+            req._admit_seq = next(self._admit_seq)  # type: ignore[attr-defined]
+            if self.tables is not None:
+                self.tables.ensure_capacity(
+                    s, self._resident_tokens(req), req.uid
+                )
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Preemption victim: lowest priority, then youngest admission."""
+        best = None
+        for s in range(self.scfg.slots):
+            if s == exclude or self.slot_req[s] is None:
+                continue
+            r = self.slot_req[s]
+            key = (r.priority, -r._admit_seq)  # type: ignore[attr-defined]
+            if best is None or key < best[0]:
+                best = (key, s)
+        return None if best is None else best[1]
+
+    def _preempt(self, s: int):
+        """Evict slot ``s``: blocks back to the pool, request to the front of
+        the queue (recompute resume — prompt + generated tokens replay)."""
+        req = self.slot_req[s]
+        self.tables.release_slot(s)
+        self.slot_req[s] = None
+        self.pos[s] = 0
+        req._cursor = 0  # type: ignore[attr-defined]
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.appendleft(req)
+
+    def _grow(self, s: int) -> bool:
+        """Ensure slot ``s`` can write at ``pos[s]``; preempt on exhaustion.
+        Returns False when ``s`` itself was evicted to make room."""
+        req = self.slot_req[s]
+        if blocks_for(int(self.pos[s]) + 1, self.pool.page_size) > self.pool.num_blocks:
+            # outgrew the entire pool mid-generation; no preemption can help
+            self.tables.release_slot(s)
+            self.slot_req[s] = None
+            req.error = "request outgrew the KV block pool"
+            req.done = True
+            self.completed.append(req)
+            return False
+        while True:
+            try:
+                self.tables.ensure_capacity(s, int(self.pos[s]) + 1, req.uid)
+                return True
+            except PoolExhausted:
+                victim = self._pick_victim(exclude=s)
+                if victim is None:
+                    self._preempt(s)
+                    return False
+                # don't evict someone strictly more important than s
+                v = self.slot_req[victim]
+                if (v.priority, -v._admit_seq) > (req.priority, -req._admit_seq):  # type: ignore[attr-defined]
+                    self._preempt(s)
+                    return False
+                self._preempt(victim)
+
+    def _finish(self, s: int, req: Request):
+        req.done = True
+        self.completed.append(req)
+        self.slot_req[s] = None
+        if self.tables is not None:
+            self.tables.release_slot(s)  # blocks recycle immediately at EOS
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine tick = one batched decode step.  Slots still consuming
-        their prompt feed the next prompt token (prefill-as-decode); slots in
-        generation feed their last sampled token.  Returns #active slots."""
+        """One engine tick = one batched decode step.  Slots still replaying
+        their prompt (or, after preemption, prompt + prior output) feed the
+        next replay token; slots in generation feed their last sampled token.
+        Returns #active slots."""
         self._admit()
+        if self.tables is not None:
+            for s in range(self.scfg.slots):
+                if self.slot_req[s] is not None:
+                    self._grow(s)
+            self._admit()  # preemption may have freed blocks for the queue head
         active = [s for s in range(self.scfg.slots) if self.slot_req[s] is not None]
         if not active:
             return 0
         feed = np.zeros((self.scfg.slots,), np.int32)
+        full_len: Dict[int, int] = {}
         for s in active:
             req = self.slot_req[s]
             cur = req._cursor  # type: ignore[attr-defined]
-            if cur < len(req.prompt):
-                feed[s] = req.prompt[cur]
-            else:
-                feed[s] = req.output[-1] if req.output else req.prompt[-1]
+            np_ = len(req.prompt)
+            full_len[s] = np_ + len(req.output)
+            feed[s] = (
+                req.prompt[cur] if cur < np_ else req.output[cur - np_]
+            )
+        cache = self.cache
+        if self.tables is not None:
+            cache = cache.with_tables(jnp.asarray(self.tables.tables()))
         logits, self.cache = self._step(
-            self.params, self.cache, jnp.asarray(feed), jnp.asarray(self.pos)
+            self.params, cache, jnp.asarray(feed), jnp.asarray(self.pos)
         )
         self._key, sub = jax.random.split(self._key)
         next_tok = np.asarray(
@@ -132,7 +289,7 @@ class ServingEngine:
             cur = req._cursor  # type: ignore[attr-defined]
             self.pos[s] += 1
             req._cursor = cur + 1  # type: ignore[attr-defined]
-            if cur + 1 >= len(req.prompt):  # this step produced a real token
+            if cur + 1 >= full_len[s]:  # this step produced a real token
                 tok = int(next_tok[s])
                 req.output.append(tok)
                 limit = req.max_new_tokens or self.scfg.max_new_tokens
@@ -141,9 +298,7 @@ class ServingEngine:
                     or len(req.output) >= limit
                     or self.pos[s] >= self.scfg.max_len
                 ):
-                    req.done = True
-                    self.completed.append(req)
-                    self.slot_req[s] = None
+                    self._finish(s, req)
         self.steps_run += 1
         return len(active)
 
@@ -153,3 +308,11 @@ class ServingEngine:
             if self.step() == 0 and not self.queue:
                 break
         return self.completed
+
+    # -- accounting -----------------------------------------------------
+    def kv_cache_bytes(self) -> int:
+        """Bytes held by attention KV state under the current layout."""
+        return self.cache.kv_bytes()
+
+    def peak_kv_blocks(self) -> Optional[int]:
+        return None if self.pool is None else self.pool.peak_in_use

@@ -1,0 +1,166 @@
+"""Paged KV cache bookkeeping: block pool + per-slot block tables.
+
+The vLLM insight applied to the tile model: the KV cache is a pool of
+fixed-size **blocks** (pages) of ``page_size`` tokens, and each request owns
+an ordered list of physical blocks — its *block table* — instead of a
+contiguous ``max_len`` strip.  Memory then scales with the tokens actually
+resident, not ``slots x max_len``; admission/preemption decisions reduce to
+free-block counting.
+
+Everything here is host-side (numpy/python) bookkeeping: allocation,
+per-slot tables, the padded ``(slots, max_pages)`` int32 table tensor the
+decode step consumes.  The device-side page pools live in the model cache
+pytree (``models.lm.init_cache(layout="paged")``); the gather itself is the
+``paged_attention`` kernel (or its XLA oracle) indexing pages through this
+table.
+
+Invariants (property-tested in tests/test_property.py):
+
+* a block is owned by at most one slot at a time (never double-assigned);
+* alloc/free round-trips conserve blocks (never leak);
+* table entries beyond a slot's live length hold page 0 — a *valid* page id
+  (the kernel DMAs padding pages and masks their contribution).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class PoolExhausted(Exception):
+    """No free blocks; caller should preempt or queue."""
+
+
+def blocks_for(num_tokens: int, page_size: int) -> int:
+    """Blocks needed to hold ``num_tokens`` tokens (ceil division)."""
+    return -(-num_tokens // page_size)
+
+
+class BlockPool:
+    """Fixed pool of KV blocks with owner tracking and peak accounting.
+
+    ``base`` offsets the physical ids handed out: the serving engine uses
+    ``base=1`` so physical page 0 is never allocatable — it is the padding
+    page that zeroed table rows (inactive slots, table tails) read from and
+    inactive slots harmlessly write to.
+    """
+
+    def __init__(self, num_blocks: int, page_size: int, base: int = 0):
+        if num_blocks <= 0 or page_size <= 0:
+            raise ValueError("num_blocks and page_size must be positive")
+        self.num_blocks = int(num_blocks)
+        self.page_size = int(page_size)
+        self.base = int(base)
+        # stack of free ids; reversed so .pop() hands out ascending ids first
+        self._free: List[int] = list(
+            range(base + self.num_blocks - 1, base - 1, -1)
+        )
+        self._owner: Dict[int, object] = {}
+        self.peak_in_use = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def can_fit(self, num_tokens: int) -> bool:
+        return self.free >= blocks_for(num_tokens, self.page_size)
+
+    # ------------------------------------------------------------------
+    def alloc(self, owner: object = None) -> int:
+        if not self._free:
+            raise PoolExhausted(
+                f"all {self.num_blocks} KV blocks in use"
+            )
+        blk = self._free.pop()
+        self._owner[blk] = owner
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return blk
+
+    def release(self, blocks: List[int]) -> None:
+        for blk in blocks:
+            if blk not in self._owner:
+                raise ValueError(f"double free of KV block {blk}")
+            del self._owner[blk]
+            self._free.append(blk)
+
+    def owner_of(self, block: int) -> object:
+        return self._owner.get(block)
+
+
+@dataclasses.dataclass
+class SlotTables:
+    """Per-slot block lists + the padded device table tensor.
+
+    ``tables()`` returns the ``(slots, max_pages)`` int32 array the decode
+    step consumes; unowned entries point at page 0 (valid but masked).
+    """
+
+    pool: BlockPool
+    slots: int
+    max_pages: int
+
+    def __post_init__(self):
+        self._blocks: List[List[int]] = [[] for _ in range(self.slots)]
+        self._np = np.zeros((self.slots, self.max_pages), np.int32)
+
+    # ------------------------------------------------------------------
+    def blocks(self, slot: int) -> List[int]:
+        return list(self._blocks[slot])
+
+    def num_blocks(self, slot: int) -> int:
+        return len(self._blocks[slot])
+
+    def ensure_capacity(self, slot: int, num_tokens: int, owner=None) -> int:
+        """Grow ``slot``'s table to hold ``num_tokens`` tokens.
+
+        Returns the number of blocks newly allocated.  Raises
+        :class:`PoolExhausted` (allocating nothing) when the pool cannot
+        cover the growth — the scheduler's preemption trigger.
+        """
+        need = blocks_for(num_tokens, self.pool.page_size)
+        if need > self.max_pages:
+            raise ValueError(
+                f"slot {slot}: {num_tokens} tokens need {need} blocks "
+                f"> max_pages={self.max_pages}"
+            )
+        have = len(self._blocks[slot])
+        grow = need - have
+        if grow <= 0:
+            return 0
+        if self.pool.free < grow:
+            raise PoolExhausted(
+                f"slot {slot} needs {grow} blocks, pool has {self.pool.free}"
+            )
+        for _ in range(grow):
+            blk = self.pool.alloc(owner)
+            self._blocks[slot].append(blk)
+            self._np[slot, len(self._blocks[slot]) - 1] = blk
+        return grow
+
+    def release_slot(self, slot: int) -> int:
+        """Return all of ``slot``'s blocks to the pool (EOS / preemption)."""
+        blks = self._blocks[slot]
+        n = len(blks)
+        self.pool.release(blks)
+        self._blocks[slot] = []
+        self._np[slot, :] = 0
+        return n
+
+    def tables(self) -> np.ndarray:
+        return self._np.copy()
+
+    def lookup(self, slot: int, pos: int) -> int:
+        """Physical page holding token position ``pos`` of ``slot``."""
+        page = pos // self.pool.page_size
+        if page >= len(self._blocks[slot]):
+            raise IndexError(
+                f"slot {slot} pos {pos}: logical page {page} not allocated"
+            )
+        return self._blocks[slot][page]

@@ -42,7 +42,7 @@ from repro.core.lowering.pipeline import (
     pass_plan_vmem,
     pass_split_phases,
 )
-from repro.kernels import parity_programs
+from repro.kernels import parity_inputs, parity_programs
 
 
 def small_gemm_program(bm=16, bn=16, bk=16, kext=2):
@@ -241,7 +241,9 @@ def test_backend_parity(name, rng):
     rk = tl_compile(prog, target="reference")
     assert pk.backend == "pallas" and rk.backend == "reference"
     assert [p.name for p in pk.arg_params] == [p.name for p in rk.arg_params]
-    args = [_make_input(p, rng) for p in pk.arg_params]
+    args = parity_inputs(name, prog, rng)
+    if args is None:
+        args = [_make_input(p, rng) for p in pk.arg_params]
     pout, rout = pk(*args), rk(*args)
     if not isinstance(pout, tuple):
         pout, rout = (pout,), (rout,)

@@ -10,6 +10,12 @@ from repro.core import lang as T
 from repro.core.expr import VarExpr, evaluate, linear_decompose
 from repro.core.layout import round_up, row_major, vreg_fragment
 from repro.core.schedule import physical_tile_shape, swizzle_decode
+from repro.serving.paged_cache import (
+    BlockPool,
+    PoolExhausted,
+    SlotTables,
+    blocks_for,
+)
 
 SMALL = st.integers(min_value=1, max_value=64)
 
@@ -69,6 +75,76 @@ class TestSwizzleProperties:
         pts = {swizzle_decode(f, g0, g1, factor) for f in range(g0 * g1)}
         assert len(pts) == g0 * g1
         assert all(0 <= i < g0 and 0 <= j < g1 for i, j in pts)
+
+
+class TestPagedCacheProperties:
+    """Invariants of the serving KV block allocator (serving/paged_cache.py):
+    any interleaving of allocs and frees conserves blocks (no leak) and
+    never hands the same block to two owners (no double-assign)."""
+
+    @given(
+        st.integers(1, 16),  # num_blocks
+        st.integers(1, 8),  # page_size
+        st.lists(
+            st.tuples(st.booleans(), st.integers(0, 1 << 30)), max_size=60
+        ),  # (alloc?, free-pick) op sequence
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_alloc_free_roundtrip_conserves_blocks(self, nb, ps, ops):
+        pool = BlockPool(nb, ps)
+        held = []
+        for is_alloc, pick in ops:
+            if is_alloc:
+                if pool.free:
+                    blk = pool.alloc()
+                    assert blk not in held  # never double-assigned
+                    assert 0 <= blk < nb
+                    held.append(blk)
+                else:
+                    with pytest.raises(PoolExhausted):
+                        pool.alloc()
+            elif held:
+                pool.release([held.pop(pick % len(held))])
+            # conservation holds at every step
+            assert pool.free + len(held) == nb
+            assert pool.in_use == len(held)
+        pool.release(held)
+        assert pool.free == nb and pool.in_use == 0
+        with pytest.raises(ValueError):  # everything is free now
+            pool.release([0])
+
+    @given(st.data())
+    @settings(max_examples=50, deadline=None)
+    def test_block_table_indexing(self, data):
+        """Block tables map every live position to a page the slot owns, pad
+        the tail with the reserved page 0, and never share a page between
+        slots; releasing every slot drains the pool."""
+        slots = data.draw(st.integers(1, 4))
+        ps = data.draw(st.integers(1, 8))
+        max_pages = data.draw(st.integers(1, 6))
+        pool = BlockPool(slots * max_pages, ps, base=1)
+        tables = SlotTables(pool, slots, max_pages)
+        lens = [
+            data.draw(st.integers(0, max_pages * ps), label=f"len[{s}]")
+            for s in range(slots)
+        ]
+        for s, n in enumerate(lens):
+            if n:
+                tables.ensure_capacity(s, n)
+        t = tables.tables()
+        owned = [b for s in range(slots) for b in tables.blocks(s)]
+        assert len(set(owned)) == len(owned)  # no page shared across slots
+        assert all(b >= 1 for b in owned)  # page 0 reserved
+        for s, n in enumerate(lens):
+            live = blocks_for(n, ps)
+            assert tables.num_blocks(s) == live
+            for pos in range(n):
+                phys = tables.lookup(s, pos)
+                assert phys == t[s, pos // ps] and phys >= 1
+            assert (t[s, live:] == 0).all()  # padding -> reserved page
+        for s in range(slots):
+            tables.release_slot(s)
+        assert pool.in_use == 0 and pool.free == slots * max_pages
 
 
 class TestKernelProperties:

@@ -11,4 +11,10 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q "$@"
+# DeprecationWarnings from the serving modules are errors: the scheduler is
+# the newest surface and must not rot against jax/numpy API churn.
+python -m pytest -x -q -W 'error::DeprecationWarning:repro\.serving' "$@"
+
+# Exercise the serving path end-to-end (engine + paged cache + scheduler +
+# both cache layouts asserting identical outputs) on a tiny config.
+python -m benchmarks.bench_serving --smoke
