@@ -1,21 +1,24 @@
-"""Serving-engine benchmark: contiguous vs paged KV cache.
+"""Serving-engine benchmark: cache layouts + the chunked-prefill fast path.
 
 Unlike the per-kernel tables (cost-model numbers), this drives the real
-engine end-to-end on CPU and reports measured throughput plus KV memory:
+engine end-to-end on CPU and reports measured behavior:
 
-* ``tok_per_s``   — generated tokens / wall-clock over the whole run;
-* ``kv_bytes``    — attention KV state actually allocated on device;
-* ``peak_kv_bytes`` — bytes *resident* at the high-water mark (paged mode:
-  peak blocks in use x block bytes; contiguous: the full preallocation,
-  that's the point).
+Workload 1 — *contiguous vs paged* (ISSUE-2): a skewed prompt-length mix
+(many short, a few near-``max_len``) with the paged pool sized at half the
+contiguous footprint, exercising admission gating and preemption while
+asserting both layouts emit identical tokens.  Reports ``tok_per_s``,
+``kv_bytes`` (allocated) and ``peak_kv_bytes`` (resident high-water mark).
 
-The request mix is a skewed prompt-length distribution (many short, a few
-near-``max_len``) — the regime where ``slots x max_len`` preallocation
-wastes most of its memory and paging shines.  The paged pool is sized at
-half the contiguous footprint, so the run also exercises admission gating
-and preemption while asserting both modes emit identical tokens.
+Workload 2 — *prefill-heavy: replay vs chunked* (ISSUE-3): long prompts,
+short generations — the regime where one-token-per-tick prompt replay
+drowns the engine.  Chunked prefill feeds ``prefill_chunk``-token blocks
+through one forward pass per tick under a token budget, so engine ticks
+collapse from ``prompt + gen`` to ``ceil(prompt/chunk) + gen`` per request.
+Reports engine ticks, mean TTFT (in ticks — deterministic on any host) and
+tok/s, asserting byte-identical outputs across replay/chunked and
+paged/contiguous, and a >= 8x tick reduction at the default chunk of 16.
 
-    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+    PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json]
 """
 from __future__ import annotations
 
@@ -41,13 +44,14 @@ def skewed_prompt_lengths(rng, n: int, max_len: int):
     return lens
 
 
-def _drive(cfg, params, mode: str, prompts, scfg_kw):
-    engine = ServingEngine(cfg, params, ServeConfig(cache=mode, **scfg_kw))
+def _drive(cfg, params, prompts, scfg_kw, label=None):
+    engine = ServingEngine(cfg, params, ServeConfig(**scfg_kw))
     reqs = [engine.submit(p) for p in prompts]
     t0 = time.time()
     engine.run(max_steps=100_000)
     dt = time.time() - t0
     toks = sum(len(r.output) for r in reqs)
+    ttfts = [r.ttft_ticks for r in reqs if r.ttft_ticks is not None]
     page_bytes = 0
     if engine.pool is not None:
         per_tok = engine.kv_cache_bytes() // max(
@@ -60,41 +64,37 @@ def _drive(cfg, params, mode: str, prompts, scfg_kw):
         else engine.kv_cache_bytes()
     )
     return {
-        "mode": mode,
-        "tok_per_s": toks / max(dt, 1e-9),
+        "mode": label or scfg_kw.get("cache", "paged"),
+        "tok_per_s": round(toks / max(dt, 1e-9), 2),
         "kv_bytes": engine.kv_cache_bytes(),
         "peak_kv_bytes": peak,
         "steps": engine.steps_run,
+        "ttft_ticks_mean": round(float(np.mean(ttfts)), 2) if ttfts else None,
         "preemptions": engine.preemptions,
         "outputs": [r.output for r in reqs],
     }
 
 
-def run(smoke: bool = False):
+def _layout_workload(cfg, params, smoke: bool):
     if smoke:
         slots, max_len, n_req, max_new = 2, 64, 5, 4
     else:
         slots, max_len, n_req, max_new = 4, 128, 24, 12
-    cfg = get_config("qwen2_1_5b").reduced()
-    params = lm.init(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     prompts = [
         rng.integers(0, cfg.vocab_size, size=n).tolist()
         for n in skewed_prompt_lengths(rng, n_req, max_len)
     ]
-    scfg_kw = dict(slots=slots, max_len=max_len, max_new_tokens=max_new)
+    base = dict(slots=slots, max_len=max_len, max_new_tokens=max_new)
 
     from .common import blocks_half  # late import keeps -m module runnable
 
-    rows = []
-    contig = _drive(cfg, params, "contiguous", prompts, scfg_kw)
+    contig = _drive(cfg, params, prompts, dict(base, cache="contiguous"))
     paged = _drive(
-        cfg, params, "paged", prompts,
-        dict(scfg_kw, num_blocks=blocks_half(slots, max_len, page_size=16)),
+        cfg, params, prompts,
+        dict(base, cache="paged",
+             num_blocks=blocks_half(slots, max_len, page_size=16)),
     )
-    for r in (contig, paged):
-        rows.append(r)
-
     if contig["outputs"] != paged["outputs"]:
         raise AssertionError(
             "contiguous and paged cache modes diverged on identical requests"
@@ -102,15 +102,96 @@ def run(smoke: bool = False):
     print("# serving: contiguous vs paged KV "
           f"({n_req} reqs, slots={slots}, max_len={max_len}, skewed prompts)")
     print("mode,tok_per_s,kv_bytes,peak_kv_bytes,steps,preemptions")
-    for r in rows:
+    for r in (contig, paged):
         print(
-            f"{r['mode']},{r['tok_per_s']:.1f},{r['kv_bytes']},"
+            f"{r['mode']},{r['tok_per_s']},{r['kv_bytes']},"
             f"{r['peak_kv_bytes']},{r['steps']},{r['preemptions']}"
         )
     saving = 1.0 - paged["kv_bytes"] / max(contig["kv_bytes"], 1)
     print(f"# paged pool allocates {saving:.0%} less KV memory "
           f"({paged['preemptions']} preemptions); identical outputs: ok")
     print()
+    return [contig, paged]
+
+
+def _prefill_workload(cfg, params, smoke: bool, chunk: int = 16):
+    """Prefill-heavy: slots=1 so ticks decompose per request and the
+    replay-vs-chunked tick bound is exact, not scheduling-dependent."""
+    if smoke:
+        n_req, prompt_len, max_new, max_len = 2, 32, 2, 64
+    else:
+        n_req, prompt_len, max_new, max_len = 3, 64, 4, 128
+    rng = np.random.default_rng(1)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=prompt_len).tolist()
+        for _ in range(n_req)
+    ]
+    base = dict(slots=1, max_len=max_len, max_new_tokens=max_new,
+                prefill_chunk=chunk)
+    replay = _drive(cfg, params, prompts,
+                    dict(base, cache="paged", prefill="replay"),
+                    label="replay_paged")
+    chunked = _drive(cfg, params, prompts,
+                     dict(base, cache="paged", prefill="chunked"),
+                     label="chunked_paged")
+    chunked_c = _drive(cfg, params, prompts,
+                       dict(base, cache="contiguous", prefill="chunked"),
+                       label="chunked_contiguous")
+    if not (replay["outputs"] == chunked["outputs"] == chunked_c["outputs"]):
+        raise AssertionError(
+            "prefill modes / cache layouts diverged on identical requests"
+        )
+    # tick bounds (slots=1 => requests run back to back): replay needs
+    # prompt+gen ticks per request, chunked ceil(prompt/chunk)+gen — minus
+    # one each, since the tick consuming the last prompt token also emits
+    # the first output token.
+    gen = max_new
+    replay_bound = n_req * (prompt_len + gen - 1)
+    chunked_bound = n_req * (-(-prompt_len // chunk) + gen)
+    assert replay["steps"] == replay_bound, (replay["steps"], replay_bound)
+    assert chunked["steps"] <= chunked_bound, (chunked["steps"], chunked_bound)
+    speedup = replay["steps"] / max(chunked["steps"], 1)
+    if chunk == 16 and speedup < 8.0:
+        raise AssertionError(
+            f"chunked prefill tick reduction {speedup:.1f}x < 8x at chunk=16"
+        )
+    print(f"# serving: prefill-heavy replay vs chunked "
+          f"({n_req} reqs x {prompt_len} prompt + {max_new} gen, chunk={chunk})")
+    print("mode,ticks,ttft_ticks_mean,tok_per_s")
+    for r in (replay, chunked, chunked_c):
+        print(f"{r['mode']},{r['steps']},{r['ttft_ticks_mean']},{r['tok_per_s']}")
+    print(f"# chunked prefill: {speedup:.1f}x fewer engine ticks, TTFT "
+          f"{replay['ttft_ticks_mean']:.0f} -> {chunked['ttft_ticks_mean']:.0f} "
+          "ticks; identical outputs: ok")
+    print()
+    return [replay, chunked, chunked_c]
+
+
+def derived_metrics(rows):
+    """Cross-row metrics for the BENCH_serving.json trajectory record."""
+    by_mode = {r["mode"]: r for r in rows}
+    out = {}
+    if "contiguous" in by_mode and "paged" in by_mode:
+        out["paged_kv_saving"] = round(
+            1.0 - by_mode["paged"]["kv_bytes"]
+            / max(by_mode["contiguous"]["kv_bytes"], 1), 4)
+    if "replay_paged" in by_mode and "chunked_paged" in by_mode:
+        r, c = by_mode["replay_paged"], by_mode["chunked_paged"]
+        out["prefill_tick_speedup"] = round(r["steps"] / max(c["steps"], 1), 2)
+        if r["ttft_ticks_mean"] and c["ttft_ticks_mean"]:
+            out["ttft_improvement"] = round(
+                r["ttft_ticks_mean"] / c["ttft_ticks_mean"], 2)
+    return out
+
+
+def run(smoke: bool = False):
+    cfg = get_config("qwen2_1_5b").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    rows = _layout_workload(cfg, params, smoke)
+    rows += _prefill_workload(cfg, params, smoke)
+    # outputs are asserted above; keep the JSON/return rows lean
+    for r in rows:
+        r.pop("outputs", None)
     return rows
 
 
@@ -118,8 +199,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI (CPU interpret mode)")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_serving.json (rows + derived + sha)")
     args = ap.parse_args(argv)
-    run(smoke=args.smoke)
+    rows = run(smoke=args.smoke)
+    if args.json:
+        from .run import write_json
+
+        write_json("serving", rows, derived_metrics(rows), smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -4,10 +4,20 @@ Prints ``name,us_per_call,derived`` CSV blocks (cost-model microseconds on
 TPU v5e — see common.py for why structural numbers on a CPU host) plus an
 inline correctness check per table.
 
+``--json`` additionally writes one ``BENCH_<table>.json`` per table — rows,
+cross-row derived metrics and the git sha — so the perf trajectory is
+recorded across PRs, not just printed and lost (tools/ci.sh passes it).
+
     PYTHONPATH=src python -m benchmarks.run            # all tables
     PYTHONPATH=src python -m benchmarks.run --only gemm,mla
+    PYTHONPATH=src python -m benchmarks.run --only serving --smoke --json
 """
 import argparse
+import dataclasses
+import inspect
+import json
+import pathlib
+import subprocess
 import sys
 import time
 
@@ -32,17 +42,63 @@ TABLES = {
 }
 
 
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=pathlib.Path(__file__).resolve().parent.parent, check=True,
+        ).stdout.strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def _jsonable(row):
+    if dataclasses.is_dataclass(row):
+        return dataclasses.asdict(row)
+    return row
+
+
+def write_json(name: str, rows, derived=None, out_dir=".",
+               smoke: bool = False) -> pathlib.Path:
+    """Write ``BENCH_<name>.json``: rows + derived metrics + git sha.
+
+    ``smoke`` is recorded in the payload so trajectory comparisons never
+    silently mix smoke-shape and full-shape numbers."""
+    path = pathlib.Path(out_dir) / f"BENCH_{name}.json"
+    payload = {
+        "table": name,
+        "git_sha": git_sha(),
+        "smoke": smoke,
+        "rows": [_jsonable(r) for r in rows],
+        "derived": derived or {},
+    }
+    path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+    print(f"# wrote {path}")
+    return path
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(TABLES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes where a table supports it")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<table>.json per table")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
     t0 = time.time()
     total_rows = 0
     for name in names:
         mod = TABLES[name]
-        rows = mod.run()
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
+        rows = mod.run(**kwargs)
+        if args.json:
+            derive = getattr(mod, "derived_metrics", None)
+            write_json(name, rows, derive(rows) if derive else None,
+                       smoke=bool(kwargs.get("smoke")))
         total_rows += len(rows)
     print(f"# benchmarks complete: {total_rows} rows in {time.time()-t0:.1f}s")
 

@@ -20,6 +20,7 @@ the dry-run roofline uses, applied at kernel granularity.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -51,7 +52,25 @@ class Candidate:
     reason: str = ""
 
 
-_CACHE: Dict[Tuple, "Candidate"] = {}
+# Scored candidates, LRU-bounded (same discipline as the serving engine's
+# step-fn cache): config sweeps over many shape buckets must not pin a
+# Candidate per visited config for process lifetime.
+_CACHE: "collections.OrderedDict[Tuple, Candidate]" = collections.OrderedDict()
+_CACHE_MAX = 512
+
+
+def _cache_get(key):
+    cand = _CACHE.get(key)
+    if cand is not None:
+        _CACHE.move_to_end(key)
+    return cand
+
+
+def _cache_put(key, cand) -> None:
+    _CACHE[key] = cand
+    _CACHE.move_to_end(key)
+    while len(_CACHE) > _CACHE_MAX:
+        _CACHE.popitem(last=False)
 
 
 def _score(cost, inference, num_stages) -> Tuple[float, float, float, float]:
@@ -111,8 +130,9 @@ def autotune(
             # schedule_key included: the same config can be feasible under
             # one schedule and not another (stages, vmem limit, interpret).
             key = (cache_key, schedule_key(schedule), tuple(sorted(config.items())))
-            if key in _CACHE:
-                results.append(_CACHE[key])
+            hit = _cache_get(key)
+            if hit is not None:
+                results.append(hit)
                 continue
         try:
             program = build(**config)
@@ -128,7 +148,7 @@ def autotune(
             cand = Candidate(config, float("inf"), 0, 0, 0, 0, False, str(e))
         results.append(cand)
         if key is not None:
-            _CACHE[key] = cand
+            _cache_put(key, cand)
     # Compile winners best-first — analysis is cached, so this only runs
     # backend emission.  A config can still fail *there* (some checks are
     # backend-specific, e.g. the Pallas written-and-read window rule); such
@@ -150,10 +170,11 @@ def autotune(
             if cache_key is not None:
                 # persist the demotion so later calls don't redo the
                 # failing emission before falling back
-                _CACHE[
+                _cache_put(
                     (cache_key, schedule_key(schedule),
-                     tuple(sorted(cand.config.items())))
-                ] = demoted
+                     tuple(sorted(cand.config.items()))),
+                    demoted,
+                )
     if kernel is None:
         msgs = "; ".join(c.reason[:80] for c in results[:4])
         raise ScheduleError(f"autotune: no feasible config ({msgs})")

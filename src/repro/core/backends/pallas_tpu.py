@@ -95,13 +95,11 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
     # T.ScalarTensor params ride ahead of the grid walk in SMEM
     # (PrefetchScalarGridSpec); every index map then receives their refs as
     # trailing args so window starts may load them (block-table gathers).
+    # Output windows go through the same index-map derivation, so stores may
+    # be table-directed too (the chunked-prefill kernel writing K/V pages);
+    # combined with an in-out alias the unwritten pages keep their contents.
     scalar_params = module.scalar_params
     n_scalars = len(scalar_params)
-    if n_scalars and aliased_js:
-        raise LoweringError(
-            f"{program.name}: scalar-prefetch params cannot be combined with "
-            "T.atomic_* in-out windows on the Pallas backend."
-        )
     scalar_pos = {p.name: i for i, p in enumerate(scalar_params)}
     arg_pos = {id(p): i for i, p in enumerate(arg_params)}
     scalar_arg_idx = [arg_pos[id(p)] for p in scalar_params]
@@ -130,7 +128,11 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
     scratch_shapes = [
         pltpu.VMEM(b.shape, jnp.dtype(b.dtype)) for b in scratch_bufs
     ]
-    input_output_aliases = {n_in_ops + i: j for i, j in enumerate(aliased_js)}
+    # alias operand indices are positional over *all* pallas_call inputs —
+    # scalar-prefetch operands included
+    input_output_aliases = {
+        n_scalars + n_in_ops + i: j for i, j in enumerate(aliased_js)
+    }
 
     kext = pipe.extent if pipe is not None else None
 
@@ -479,6 +481,7 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
             body,
             grid_spec=grid_spec,
             out_shape=out_shape,
+            input_output_aliases=input_output_aliases,
             interpret=schedule.interpret,
             compiler_params=compiler_params,
             name=program.name,
@@ -498,6 +501,13 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
         )
 
     n_aliased = len(alias_in_specs)
+    # pallas_call returns one array per out *window* (store order); the
+    # CompiledKernel contract is out *param* (declaration) order — the same
+    # order the reference backend produces.
+    out_perm = [
+        next(j for j, w in enumerate(out_windows) if w.param is p)
+        for p in out_params
+    ]
 
     def fn(*arrays):
         # scalar-prefetch operands lead (PrefetchScalarGridSpec convention),
@@ -506,7 +516,9 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
         operands += [arrays[i] for i in window_param_idx]
         operands += list(arrays[len(arrays) - n_aliased :]) if n_aliased else []
         res = call(*operands)
-        return res[0] if len(out_windows) == 1 else tuple(res)
+        if len(out_windows) == 1:
+            return res[0]
+        return tuple(res[j] for j in out_perm)
 
     return CompiledKernel(
         program, fn, module.info(), arg_params, out_params, backend="pallas"

@@ -47,6 +47,9 @@ def emit_reference(module: LoweredModule) -> CompiledKernel:
         for p, a in zip(arg_params, arrays):
             globals_[p.name] = jnp.asarray(a)
         for p in out_params:
+            # In-out (aliased) params are already seeded from arg_params —
+            # regions no grid cell writes must keep the caller's contents
+            # (paged-KV pool semantics); pure outputs start at zero.
             if p.name not in globals_:
                 globals_[p.name] = jnp.zeros(p.shape, jnp.dtype(p.dtype))
 

@@ -23,7 +23,11 @@ def make_index_map(
     scalar-prefetch buffers: the index map then accepts their SMEM refs as
     trailing arguments (the ``PrefetchScalarGridSpec`` convention) and
     resolves ``LoadExpr`` starts against them — the data-dependent gather of
-    paged attention block tables.
+    paged attention block tables.  The same derivation serves input *and*
+    output windows: a store whose starts load a block table becomes a
+    table-directed output BlockSpec (the chunked-prefill kernel writing the
+    chunk's K/V pages), paired with an in-out alias so unwritten pages keep
+    their previous contents.
     """
     starts, sizes = region.starts, region.sizes
     scalar_names = [p.name for p in (scalar_params or [])]

@@ -4,6 +4,18 @@ Every ``global -> onchip`` copy becomes an input window and every
 ``onchip -> global`` copy (or global atomic) an output window.  Windows are
 target-neutral: the Pallas backend turns them into ``pl.BlockSpec``s, the
 reference backend into dynamic slices.
+
+A param that is *both* read through input windows and written through a
+**table-directed** output window (the paged-KV pool of the chunked-prefill
+kernel: prior pages gathered through the block table, the chunk's pages
+written back through it) is marked ``aliased`` — the backends then treat
+it as an in-out operand (``input_output_aliases`` on Pallas), so pages no
+grid cell writes keep their previous contents.  The kernel contract is
+that the read and write page sets of one launch are disjoint; the lowering
+cannot verify this for data-dependent tables, so the aliasing is granted
+only when the store's starts actually load a scalar-prefetch buffer —
+statically-indexed read+write of one param remains a Pallas lowering
+error, as before.
 """
 from __future__ import annotations
 
@@ -88,7 +100,26 @@ def collect_windows(program, phases: Phases):
     if phases.pipeline is not None:
         scan(phases.pipeline.body, LOOP)
     scan(phases.post, POST)
+    # A written param that is also fed to input windows becomes an in-out
+    # operand — but only when the store's placement is data-dependent
+    # (scalar-load starts, the paged write path): there the caller owns the
+    # disjointness contract and unwritten regions must survive the call.
+    # Statically-indexed read+write of one param stays rejected by the
+    # Pallas backend (the overlap is the user error the old guard caught).
+    read_params = {id(w.param) for w in in_windows}
+    for w in out_windows:
+        if id(w.param) in read_params and _scalar_dependent(w.region):
+            w.aliased = True
     return in_windows, out_windows, fed_by, stores
+
+
+def _scalar_dependent(region: ResolvedRegion) -> bool:
+    from ..buffer import SCALAR
+    from ..expr import loads_in
+
+    return any(
+        ld.buffer.scope == SCALAR for s in region.starts for ld in loads_in(s)
+    )
 
 
 def _merge_out_window(out_windows: List[Window], w: Window) -> Window:

@@ -155,9 +155,8 @@ def swizzle_decode(flat, g0: int, g1: int, factor: int):
     panel = factor * g1
     group = flat // panel
     rem = flat % panel
-    # Last (possibly ragged) panel: clamp the panel height.
-    rows_here = factor if isinstance(flat, int) else None
     if isinstance(flat, int):
+        # Last (possibly ragged) panel: clamp the panel height.
         rows = min(factor, g0 - group * factor)
         i0 = group * factor + rem % rows
         i1 = rem // rows

@@ -7,6 +7,7 @@ from . import (
     mla,
     ops,
     paged_attention,
+    prefill_attention,
     ref,
 )
 from .dequant_matmul import dequant_matmul_program
@@ -15,12 +16,14 @@ from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program, tune_matmul
 from .mla import mla_program
 from .paged_attention import paged_attention_program
+from .prefill_attention import prefill_attention_program
 
 _PARITY_MODULES = (
     matmul,
     flash_attention,
     mla,
     paged_attention,
+    prefill_attention,
     dequant_matmul,
     linear_attention,
 )
@@ -61,6 +64,7 @@ __all__ = [
     "flash_attention_program",
     "mla_program",
     "paged_attention_program",
+    "prefill_attention_program",
     "dequant_matmul_program",
     "chunk_state_program",
     "chunk_scan_program",

@@ -36,6 +36,7 @@ from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program
 from .mla import mla_program
 from .paged_attention import paged_attention_program
+from .prefill_attention import prefill_attention_program
 
 _DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
 _CACHE: dict = {}
@@ -154,6 +155,82 @@ def paged_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
         ),
     )
     return kern(block_tables, seq_lens, q, k_pages, v_pages)
+
+
+def prefill_attention(q, k_new, v_new, k_pages, v_pages, block_tables,
+                      start_lens, chunk_lens, *, sm_scale=None,
+                      window: Optional[int] = None, logit_soft_cap=None,
+                      backend: Optional[str] = None, num_stages: int = 2):
+    """Chunked-prefill attention over a paged KV pool.
+
+    ``q``/``k_new``/``v_new`` are the chunk's (B, H*, C, D) projections;
+    ``start_lens`` (B,) counts prior resident tokens (the chunk's write
+    offset) and ``chunk_lens`` (B,) the live tokens within the chunk.
+    Returns ``(out, k_pages', v_pages')`` — the chunk's K/V are written into
+    the pool pages through the block table, positions past ``chunk_lens``
+    landing in the reserved garbage page 0.
+
+    The Pallas path runs the tile kernel, which performs the page writes
+    from inside the kernel via table-directed output BlockSpecs; it
+    additionally requires chunk-aligned ``start_lens`` and in-range table
+    entries (the serving engine's chunk contract).  The XLA path is the
+    ref.prefill_attention oracle plus an explicit masked scatter.
+    """
+    be = _resolve(backend)
+    b, hq, chunk, d = q.shape
+    hkv, num_pages, page_size, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    if be != "xla" and logit_soft_cap is None and chunk % page_size == 0 \
+            and chunk // page_size <= max_pages:
+        group = hq // hkv
+        key = ("prefill", b, hq, hkv, num_pages, page_size, max_pages, chunk,
+               d, window, str(q.dtype), num_stages, sm_scale)
+        kern = _cached(
+            key,
+            lambda: prefill_attention_program(
+                b, hq, hkv, d, chunk, page_size, max_pages, num_pages, window,
+                str(q.dtype), "float32", num_stages, sm_scale,
+            ),
+        )
+        # pack queries chunk-major with their GQA group: row = i*group + g
+        qp = q.reshape(b, hkv, group, chunk, d).transpose(0, 1, 3, 2, 4)
+        qp = qp.reshape(b, hkv, chunk * group, d)
+        kp, vp, out = kern(
+            block_tables, start_lens, chunk_lens, qp, k_new, v_new,
+            k_pages, v_pages,
+        )
+        out = out.reshape(b, hkv, chunk, group, d).transpose(0, 1, 3, 2, 4)
+        return out.reshape(b, hq, chunk, d), kp, vp
+
+    # ---- XLA path: masked scatter + gather through the table -------------
+    pos = start_lens[:, None].astype(jnp.int32) + jnp.arange(chunk, dtype=jnp.int32)
+    logical = jnp.clip(pos // page_size, 0, max_pages - 1)
+    phys = jnp.take_along_axis(block_tables, logical, axis=1)  # (B, C)
+    valid = jnp.arange(chunk)[None, :] < chunk_lens[:, None]
+    phys = jnp.where(valid, phys, 0)  # dead tail -> reserved garbage page
+    off = pos % page_size
+    k_pages, v_pages = jnp.asarray(k_pages), jnp.asarray(v_pages)
+    pdt = k_pages.dtype
+    kp = k_pages.at[:, phys, off].set(
+        jnp.asarray(k_new).transpose(1, 0, 2, 3).astype(pdt)
+    )
+    vp = v_pages.at[:, phys, off].set(
+        jnp.asarray(v_new).transpose(1, 0, 2, 3).astype(pdt)
+    )
+
+    def gathered(pages):
+        g = pages[:, block_tables]  # (Hkv, B, max_pages, page_size, D)
+        return jnp.moveaxis(g, 0, 1).reshape(b, hkv, -1, d)
+
+    s_total = max_pages * page_size
+    si = jnp.arange(s_total, dtype=jnp.int32)
+    ctx_pos = jnp.where(si[None, :] < start_lens[:, None], si[None, :], -1)
+    out = ref.prefill_attention(
+        q, k_new, v_new, gathered(k_pages), gathered(v_pages), ctx_pos, pos,
+        chunk_lens, sm_scale=sm_scale, window=window,
+        logit_soft_cap=logit_soft_cap,
+    )
+    return out, kp, vp
 
 
 def mla(q, q_pe, kv, k_pe, *, sm_scale=None, backend: Optional[str] = None,

@@ -1,0 +1,257 @@
+"""Chunked-prefill attention in the tile DSL (the batched prompt fast path).
+
+Processes a ``(slots, chunk)`` block of prompt tokens per launch instead of
+replaying prompts one token per decode step: causal flash attention over the
+chunk **plus** all prior KV gathered through the block table (the same
+``T.ScalarTensor`` scalar-prefetch path as the decode kernel), while
+**writing the chunk's K/V into the paged cache pages from inside the
+kernel** — the stores' region starts load the block table, so the lowering
+turns them into table-directed *output* BlockSpecs paired with an in-out
+alias (pages no grid cell writes keep their contents).  This is the output
+half of "plan dataflow over non-contiguous tiles as a one-line index
+change": producer blocks stay ``chunk`` tokens wide and the tile pipeline
+stays saturated, which is where the serving win comes from (ThunderKittens'
+large-producer-block observation applied to prefill).
+
+Grid: ``(kv_heads, chunk_pages, slots)`` with the prior-KV page axis
+pipelined.  Queries are packed chunk-major with their GQA group —
+``Q[z, h, i * group + g, :]`` is chunk position ``i`` of query head
+``h * group + g`` — so each grid cell attends a ``(page_size * group,
+head_dim)`` query tile with plain 2-D GEMMs (the decode kernel's
+``(group, head_dim)`` trick extended to a block of positions).
+
+Contract (the serving engine guarantees it; parity inputs too):
+``chunk % page_size == 0`` and every *live* slot's ``Starts`` is
+page-aligned — chunks are fed at ``chunk`` boundaries, so this holds
+whenever ``chunk`` is a multiple of the page size.  Everything else is
+self-defending: chunk pages holding no live tokens (``lens = 0`` slots
+riding in a batched engine tick, the dead tail of a partial final chunk)
+write to the reserved garbage page 0, and the table index is clamped to
+the row, so an idle slot's arbitrary ``Starts`` can neither read out of
+bounds nor clobber a live page.  Live positions past a slot's allocation
+hit table padding (page 0) harmlessly.
+"""
+
+import math
+from typing import Optional
+
+from repro.core import TileProgram
+from repro.core import lang as T
+
+
+def prefill_attention_program(
+    slots: int,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    chunk: int,
+    page_size: int,
+    max_pages: int,
+    num_pages: int,
+    window: Optional[int] = None,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+) -> TileProgram:
+    if heads % kv_heads:
+        raise ValueError("GQA requires heads % kv_heads == 0")
+    if chunk % page_size:
+        raise ValueError("chunk must be a multiple of page_size")
+    group = heads // kv_heads
+    cpp = chunk // page_size  # chunk pages: K/V pages written per slot
+    rows = page_size * group  # query rows per grid cell (chunk-major packed)
+    scale = (sm_scale if sm_scale is not None else 1.0 / math.sqrt(head_dim)) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def PrefillAttn(
+        Tables: T.ScalarTensor((slots, max_pages), "int32"),
+        Starts: T.ScalarTensor((slots,), "int32"),  # prior tokens (page-aligned)
+        Lens: T.ScalarTensor((slots,), "int32"),  # live tokens in the chunk
+        Q: T.Tensor((slots, kv_heads, chunk * group, head_dim), dtype),
+        K: T.Tensor((slots, kv_heads, chunk, head_dim), dtype),
+        V: T.Tensor((slots, kv_heads, chunk, head_dim), dtype),
+        KPages: T.Tensor((kv_heads, num_pages, page_size, head_dim), dtype),
+        VPages: T.Tensor((kv_heads, num_pages, page_size, head_dim), dtype),
+        Output: T.Tensor((slots, kv_heads, chunk * group, head_dim), dtype),
+    ):
+        with T.Kernel(kv_heads, cpp, slots) as (bh, bq, bz):
+            Q_shared = T.alloc_shared((rows, head_dim), dtype)
+            Kc_shared = T.alloc_shared((chunk, head_dim), dtype)
+            Vc_shared = T.alloc_shared((chunk, head_dim), dtype)
+            Kp_shared = T.alloc_shared((page_size, head_dim), dtype)
+            Vp_shared = T.alloc_shared((page_size, head_dim), dtype)
+            acc_s = T.alloc_fragment((rows, page_size), accum_dtype)
+            acc_c = T.alloc_fragment((rows, chunk), accum_dtype)
+            acc_o = T.alloc_fragment((rows, head_dim), accum_dtype)
+            scores_max = T.alloc_fragment((rows,), accum_dtype)
+            scores_max_prev = T.alloc_fragment((rows,), accum_dtype)
+            scores_scale = T.alloc_fragment((rows,), accum_dtype)
+            scores_sum = T.alloc_fragment((rows,), accum_dtype)
+            logsum = T.alloc_fragment((rows,), accum_dtype)
+
+            T.copy(Q[bz, bh, bq * rows, 0], Q_shared)
+            T.copy(K[bz, bh, 0, 0], Kc_shared)
+            T.copy(V[bz, bh, 0, 0], Vc_shared)
+            T.fill(acc_o, 0.0)
+            T.fill(logsum, 0.0)
+            T.fill(scores_max, -T.infinity(accum_dtype))
+
+            # Clamp before differencing running maxima: fully-masked blocks
+            # (no prior KV, tail pages) leave them at -inf and
+            # (-inf) - (-inf) = nan.
+            neg_clamp = -1048576.0  # -2^20; exp2 underflows long before
+
+            # ---- prior KV, gathered through the block table --------------
+            for kp in T.Pipelined(max_pages, num_stages=num_stages):
+                T.copy(KPages[bh, Tables[bz, kp], 0, 0], Kp_shared)
+                T.copy(VPages[bh, Tables[bz, kp], 0, 0], Vp_shared)
+                T.clear(acc_s)
+                T.gemm(Q_shared, Kp_shared, acc_s, transpose_B=True)
+                for r, j in T.Parallel(rows, page_size):
+                    # prior positions [0, Starts) are live; everything else
+                    # (the chunk's own pages, table padding) is masked.
+                    valid = (kp * page_size + j) < Starts[bz]
+                    if window is not None:
+                        valid = valid & (
+                            (Starts[bz] + bq * page_size + r // group)
+                            - (kp * page_size + j)
+                            < window
+                        )
+                    acc_s[r, j] = T.if_then_else(
+                        valid, acc_s[r, j], -T.infinity(accum_dtype)
+                    )
+                T.copy(scores_max, scores_max_prev)
+                T.reduce_max(acc_s, scores_max, dim=1, clear=False)
+                for r in T.Parallel(rows):
+                    scores_scale[r] = T.exp2(
+                        T.maximum(scores_max_prev[r], neg_clamp) * scale
+                        - T.maximum(scores_max[r], neg_clamp) * scale
+                    )
+                for r, j in T.Parallel(rows, page_size):
+                    acc_s[r, j] = T.exp2(
+                        acc_s[r, j] * scale
+                        - T.maximum(scores_max[r], neg_clamp) * scale
+                    )
+                T.reduce_sum(acc_s, scores_sum, dim=1)
+                for r in T.Parallel(rows):
+                    logsum[r] = logsum[r] * scores_scale[r] + scores_sum[r]
+                for r, j in T.Parallel(rows, head_dim):
+                    acc_o[r, j] = acc_o[r, j] * scores_scale[r]
+                T.gemm(acc_s, Vp_shared, acc_o)
+
+            # ---- the chunk itself (keys straight from the K/V inputs —
+            # never read back through the pages we are writing) ------------
+            T.clear(acc_c)
+            T.gemm(Q_shared, Kc_shared, acc_c, transpose_B=True)
+            for r, j in T.Parallel(rows, chunk):
+                valid = (j <= (bq * page_size + r // group)) & (j < Lens[bz])
+                if window is not None:
+                    valid = valid & (
+                        ((bq * page_size + r // group) - j) < window
+                    )
+                acc_c[r, j] = T.if_then_else(
+                    valid, acc_c[r, j], -T.infinity(accum_dtype)
+                )
+            T.copy(scores_max, scores_max_prev)
+            T.reduce_max(acc_c, scores_max, dim=1, clear=False)
+            for r in T.Parallel(rows):
+                scores_scale[r] = T.exp2(
+                    T.maximum(scores_max_prev[r], neg_clamp) * scale
+                    - T.maximum(scores_max[r], neg_clamp) * scale
+                )
+            for r, j in T.Parallel(rows, chunk):
+                acc_c[r, j] = T.exp2(
+                    acc_c[r, j] * scale
+                    - T.maximum(scores_max[r], neg_clamp) * scale
+                )
+            T.reduce_sum(acc_c, scores_sum, dim=1)
+            for r in T.Parallel(rows):
+                logsum[r] = logsum[r] * scores_scale[r] + scores_sum[r]
+            for r, j in T.Parallel(rows, head_dim):
+                acc_o[r, j] = acc_o[r, j] * scores_scale[r]
+            T.gemm(acc_c, Vc_shared, acc_o)
+
+            # rows past Lens are fully masked: divide by the floor, emit 0
+            for r, j in T.Parallel(rows, head_dim):
+                acc_o[r, j] = acc_o[r, j] / T.maximum(logsum[r], 1e-30)
+            T.copy(acc_o, Output[bz, bh, bq * rows, 0])
+
+            # ---- the paged write: this cell's chunk page, placed through
+            # the block table (scalar-prefetch output BlockSpec).  The write
+            # is self-defending: chunk pages with no live tokens (idle
+            # lens=0 slots riding in the batch, the dead tail of a partial
+            # final chunk) land in the reserved garbage page 0, and the
+            # table index is clamped so an idle slot's arbitrary ``Starts``
+            # can never read past its table row. ---------------------------
+            live_page = (bq * page_size) < Lens[bz]
+            tidx = T.minimum(Starts[bz] // page_size + bq, max_pages - 1)
+            dst_page = T.if_then_else(live_page, Tables[bz, tidx], 0)
+            T.copy(
+                Kc_shared[bq * page_size : bq * page_size + page_size, :],
+                KPages[bh, dst_page, 0, 0],
+            )
+            T.copy(
+                Vc_shared[bq * page_size : bq * page_size + page_size, :],
+                VPages[bh, dst_page, 0, 0],
+            )
+
+    return PrefillAttn
+
+
+# Tiny-shape configs for the pallas-vs-reference parity suite
+# (tests/test_pipeline.py): MQA grouping, a multi-page chunk under GQA, and
+# a sliding window.  Inputs come from the override below — tables must hold
+# distinct live page ids and starts must be page-aligned.
+PARITY_CASES = [
+    (
+        "prefill_attention_mqa",
+        dict(slots=2, heads=2, kv_heads=1, head_dim=16, chunk=16,
+             page_size=16, max_pages=4, num_pages=8),
+    ),
+    (
+        "prefill_attention_gqa_multipage",
+        dict(slots=2, heads=4, kv_heads=2, head_dim=16, chunk=32,
+             page_size=16, max_pages=4, num_pages=8),
+    ),
+    (
+        "prefill_attention_windowed",
+        dict(slots=2, heads=2, kv_heads=2, head_dim=16, chunk=16,
+             page_size=16, max_pages=4, num_pages=8, window=20),
+    ),
+]
+
+
+def parity_programs():
+    for name, cfg in PARITY_CASES:
+        yield name, prefill_attention_program(**cfg)
+
+
+def parity_inputs(name, program, rng):
+    """Valid inputs for the parity suite.
+
+    Every slot gets a distinct set of physical pages, a page-aligned prior
+    length leaving room for the chunk's pages, and a ragged live length
+    (including a partial chunk).
+    """
+    cfg = dict(PARITY_CASES)[name]
+    slots, mp, np_ = cfg["slots"], cfg["max_pages"], cfg["num_pages"]
+    ps, chunk = cfg["page_size"], cfg["chunk"]
+    cpp = chunk // ps
+    pages = rng.permutation(np_)[: slots * mp].reshape(slots, mp).astype("int32")
+    prior_pages = rng.integers(0, mp - cpp + 1, size=slots)
+    starts = (prior_pages * ps).astype("int32")
+    # ragged within the *last* chunk page only: fully-dead chunk pages all
+    # write the shared garbage page 0, whose final contents depend on grid
+    # walk order — backend-dependent, so parity keeps every page live (the
+    # dead-page path is covered by tests/test_prefill.py, which excludes
+    # page 0 from comparison).
+    lens = rng.integers(chunk - ps + 1, chunk + 1, size=slots).astype("int32")
+    args = [pages, starts, lens]
+    for p in program.input_params()[3:]:
+        args.append(rng.standard_normal(p.shape).astype(p.dtype))
+    # in-out page pools ride after the pure inputs (aliased operands)
+    for p in program.output_params():
+        if p.name in ("KPages", "VPages"):
+            args.append(rng.standard_normal(p.shape).astype(p.dtype))
+    return args

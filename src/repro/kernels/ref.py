@@ -246,6 +246,87 @@ def paged_attention(
 
 
 # ---------------------------------------------------------------------------
+# Chunked-prefill attention: a block of C new tokens per slot attends prior
+# context (gathered pages or a contiguous/ring strip) plus itself causally.
+# The oracle for kernels/prefill_attention.py and the XLA execution path the
+# serving engine's chunked-prefill fast path uses on CPU hosts.
+# ---------------------------------------------------------------------------
+
+
+def prefill_attention(
+    q: jax.Array,  # (B, Hq, C, D) chunk queries
+    k_new: jax.Array,  # (B, Hkv, C, D) the chunk's own keys
+    v_new: jax.Array,  # (B, Hkv, C, D)
+    k_ctx: jax.Array,  # (B, Hkv, S, D) prior context keys
+    v_ctx: jax.Array,  # (B, Hkv, S, D)
+    ctx_pos: jax.Array,  # (B, S) int32 absolute position per ctx entry; -1 = dead
+    q_pos: jax.Array,  # (B, C) int32 absolute position per query
+    chunk_lens: jax.Array,  # (B,) live tokens in the chunk (0 = inactive slot)
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Masked two-part attention: ``softmax([scores_ctx ; scores_new])``.
+
+    Context validity/causality/windowing all derive from ``ctx_pos`` so one
+    oracle serves every prior-KV layout: gathered pages (position = linear
+    gather index), contiguous strips (position = index) and ring buffers
+    (position from the ring decode formula).  Query rows past
+    ``chunk_lens`` are *not* zeroed — they still attend whatever keys their
+    causal window allows (garbage the callers discard; the kernel behaves
+    identically) — but a row with no valid key at all (an inactive slot
+    with empty context) emits zeros, not nan.
+    """
+    b, hq, c, d = q.shape
+    hkv = k_new.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, group, c, d).astype(jnp.float32)
+
+    def scores_of(k):
+        s = jnp.einsum("bhgcd,bhsd->bhgcs", qg, k.astype(jnp.float32)) * sm_scale
+        if logit_soft_cap is not None:
+            s = logit_soft_cap * jnp.tanh(s / logit_soft_cap)
+        return s
+
+    s_ctx = scores_of(k_ctx)  # (B, Hkv, G, C, S)
+    s_new = scores_of(k_new)  # (B, Hkv, G, C, C)
+    qp = jnp.asarray(q_pos, jnp.int32)
+    cp = jnp.asarray(ctx_pos, jnp.int32)
+    lens = jnp.asarray(chunk_lens, jnp.int32)
+    m_ctx = (cp[:, None, :] >= 0) & (cp[:, None, :] <= qp[:, :, None])
+    ci = jnp.arange(c, dtype=jnp.int32)
+    m_new = (ci[None, None, :] <= ci[None, :, None]) & (
+        ci[None, None, :] < lens[:, None, None]
+    )
+    if window is not None:
+        m_ctx = m_ctx & ((qp[:, :, None] - cp[:, None, :]) < window)
+        m_new = m_new & ((ci[None, :, None] - ci[None, None, :]) < window)
+    mask = jnp.concatenate(
+        [
+            jnp.broadcast_to(m_ctx, (b, c, s_ctx.shape[-1])),
+            jnp.broadcast_to(m_new, (b, c, c)),
+        ],
+        axis=-1,
+    )[:, None, None]  # (B, 1, 1, C, S+C)
+    scores = jnp.concatenate([s_ctx, s_new], axis=-1)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask, scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * mask
+    den = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    p = e / den
+    v_all = jnp.concatenate(
+        [v_ctx.astype(jnp.float32), v_new.astype(jnp.float32)], axis=2
+    )
+    out = jnp.einsum("bhgcs,bhsd->bhgcd", p, v_all)
+    return out.reshape(b, hq, c, d).astype(out_dtype or q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Multi-head Latent Attention (paper Fig. 14/18): queries attend to a shared
 # latent KV (dim) + rotary part (pe_dim); V is the latent itself.
 # ---------------------------------------------------------------------------

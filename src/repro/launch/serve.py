@@ -34,6 +34,15 @@ def main(argv=None):
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="KV pool size in blocks; below slots*max_pages "
                          "oversubscribes memory and exercises preemption")
+    ap.add_argument("--prefill", choices=["chunked", "replay"],
+                    default="chunked",
+                    help="prompt ingestion: chunked fast path (token-budget "
+                         "scheduler) or legacy one-token-per-tick replay")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per chunk-wide forward pass")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-tick token budget shared by the decode batch "
+                         "and prefill chunks (default slots+prefill_chunk)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -49,7 +58,9 @@ def main(argv=None):
                     max_new_tokens=args.max_new,
                     temperature=args.temperature, seed=args.seed,
                     cache=args.cache, page_size=args.page_size,
-                    num_blocks=args.num_blocks),
+                    num_blocks=args.num_blocks, prefill=args.prefill,
+                    prefill_chunk=args.prefill_chunk,
+                    token_budget=args.token_budget),
     )
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -66,10 +77,13 @@ def main(argv=None):
             f", {engine.cache_mode} cache: peak {engine.peak_kv_blocks()} "
             f"blocks, {engine.preemptions} preemptions"
         )
+    ttfts = [r.ttft_ticks for r in done if r.ttft_ticks is not None]
+    if ttfts:
+        extra += f", mean TTFT {sum(ttfts)/len(ttfts):.1f} ticks"
     print(
         f"served {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
         f"({total_tokens/max(dt,1e-9):.1f} tok/s, {engine.steps_run} engine steps"
-        f"{extra})"
+        f" [{engine.prefill_mode} prefill]{extra})"
     )
     for r in done[:3]:
         print(f"  req {r.uid}: prompt {r.prompt[:4]}... -> {r.output[:8]}...")

@@ -233,6 +233,89 @@ def attention_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables,
     return proj, {"k_pages": knew, "v_pages": vnew}
 
 
+def attention_prefill_paged(params, x, cfg: ModelConfig, cache, pos, tables,
+                            lens, window=None, rope_fraction=1.0):
+    """Chunk-wide prefill against a paged KV pool.
+
+    ``x`` is a (B, C, d) block of prompt tokens per slot; ``pos`` (B,) is
+    each slot's chunk start (its prior resident length), ``lens`` (B,) the
+    live tokens within the chunk (0 = slot not prefilling this tick).  The
+    chunk's K/V land in the pages holding positions [pos, pos+lens) through
+    the block table (inside the tile kernel on the Pallas path; a masked
+    scatter on XLA), and every chunk query attends prior pages plus the
+    chunk causally."""
+    b, c, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)  # (b, c, ...)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posmat = posb[:, None] + jnp.arange(c, dtype=jnp.int32)
+    q = apply_rope(q, posmat, cfg.rope_theta, rope_fraction)
+    k = apply_rope(k, posmat, cfg.rope_theta, rope_fraction)
+    out, kp, vp = ops.prefill_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), cache["k_pages"], cache["v_pages"],
+        tables, posb, jnp.asarray(lens, jnp.int32), window=window,
+        logit_soft_cap=cfg.logit_soft_cap,
+        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, c, h * hd)
+    proj = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
+    return proj, {"k_pages": kp, "v_pages": vp}
+
+
+def attention_prefill(params, x, cfg: ModelConfig, cache, pos, lens,
+                      window=None, rope_fraction=1.0):
+    """Chunk-wide prefill against the contiguous cache (ring buffers for
+    sliding-window layers).  Same contract as :func:`attention_prefill_paged`
+    with the prior context read from the per-slot strip: attention runs
+    against the strip *before* the chunk overwrites any ring entries, so
+    queries early in the chunk still see context the chunk's own tail would
+    evict."""
+    b, c, _ = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, cfg)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    lens = jnp.asarray(lens, jnp.int32)
+    posmat = posb[:, None] + jnp.arange(c, dtype=jnp.int32)
+    q = apply_rope(q, posmat, cfg.rope_theta, rope_fraction)
+    k = apply_rope(k, posmat, cfg.rope_theta, rope_fraction)
+    size = cache["k"].shape[2]
+    r = jnp.arange(size, dtype=jnp.int32)[None, :]  # (1, S)
+    if window:
+        # ring entry r holds the latest position p < pos with p % size == r
+        sm1 = posb[:, None] - 1
+        p = sm1 - ((sm1 - r) % size)
+        ctx_pos = jnp.where((posb[:, None] > 0) & (p >= 0), p, -1)
+    else:
+        ctx_pos = jnp.where(r < posb[:, None], r, -1)
+    out = ref.prefill_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), cache["k"], cache["v"], ctx_pos, posmat,
+        lens, window=window, logit_soft_cap=cfg.logit_soft_cap,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, c, h * hd)
+    proj = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
+    # Write the chunk into the strip/ring as a gather-select over cache
+    # entries (no scatter): entry r takes chunk token c(r) when live.  For
+    # rings c(r) is the *latest* chunk index mapping to r, so a chunk longer
+    # than the ring correctly keeps only its last `size` tokens.
+    rel = jnp.arange(size, dtype=jnp.int32)[None, :] - posb[:, None]  # (B,S)
+    if window:
+        base = rel % size  # ring: c == base (mod size)
+        cidx = base + ((lens[:, None] - 1 - base) // size) * size
+    else:
+        cidx = rel
+    live = (cidx >= 0) & (cidx < lens[:, None])
+    cg = jnp.clip(cidx, 0, c - 1)[:, None, :, None]  # (B,1,S,1)
+    cdt = cache["k"].dtype
+    kt = k.transpose(0, 2, 1, 3).astype(cdt)  # (B, Hkv, C, hd)
+    vt = v.transpose(0, 2, 1, 3).astype(cdt)
+    sel = live[:, None, :, None]
+    knew = jnp.where(sel, jnp.take_along_axis(kt, cg, axis=2), cache["k"])
+    vnew = jnp.where(sel, jnp.take_along_axis(vt, cg, axis=2), cache["v"])
+    return proj, {"k": knew, "v": vnew}
+
+
 def attention_decode(params, x, cfg: ModelConfig, cache, pos, window=None,
                      rope_fraction=1.0):
     """One-token decode.  ``pos`` is the absolute position — a scalar (lockstep

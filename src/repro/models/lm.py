@@ -434,5 +434,103 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
                          layout, cache.page_size, tables)
 
 
+def _block_prefill(p, x, cfg: ModelConfig, cache, pos, lens, window,
+                   layout="contiguous", tables=None):
+    """One transformer block over a (B, C) prefill chunk.  Mirrors
+    ``_block_decode`` (same cache contract) with chunk-wide attention;
+    ``window`` must be a static python value."""
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    new_cache: Dict[str, Any] = {}
+    if layout == "paged":
+        delta, kv = L.attention_prefill_paged(
+            p["attn"], h, cfg, cache["kv"], pos, tables, lens, window=window,
+            rope_fraction=rope_fraction(cfg),
+        )
+    else:
+        delta, kv = L.attention_prefill(
+            p["attn"], h, cfg, cache["kv"], pos, lens, window=window,
+            rope_fraction=rope_fraction(cfg),
+        )
+    new_cache["kv"] = kv
+    x = x + delta
+    if "moe" in p:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        out, _ = L.moe(p["moe"], h2, cfg)
+        x = x + out
+    elif "mlp" in p:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h2, cfg)
+    return x, new_cache
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill covers the attention families; SSM/hybrid state and
+    MLA latent caches still replay token by token (recurrent state has no
+    chunk-parallel write yet)."""
+    return cfg.attention == "gqa" and cfg.family not in ("ssm", "hybrid")
+
+
+def prefill_step(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
+                 unroll: int = 1):
+    """One chunked-prefill step: a (B, C) block of prompt tokens advances
+    every slot with ``lens[b] > 0`` by ``lens[b]`` positions in a single
+    forward pass (vs C batched decode steps under token replay).
+
+    ``tokens`` (B, C) int32 (dead tail arbitrary), ``pos`` (B,) chunk start
+    positions, ``lens`` (B,) live tokens per slot (0 = slot idle this step).
+    Returns ``(logits, cache)`` where ``logits`` (B, V) belong to each
+    slot's *last live* chunk token — exactly what sampling needs when a
+    chunk completes its prompt.  Works against both cache layouts through
+    the same ``Cache`` interface as ``decode_step``.
+    """
+    if not supports_chunked_prefill(cfg):
+        raise NotImplementedError(
+            f"chunked prefill supports GQA attention archs; {cfg.name} "
+            f"(attention={cfg.attention}, family={cfg.family}) replays "
+            "prompts through decode_step instead."
+        )
+    x = L.embed(params["embed"], tokens).astype(cfg.dtype)
+    wlist = static_windows(cfg)
+    n_prefix = len(params["prefix_layers"])
+    layout, tables = cache.layout, cache.tables
+    lens = jnp.asarray(lens, jnp.int32)
+    new_prefix = []
+    for i, p in enumerate(params["prefix_layers"]):
+        x, c = _block_prefill(p, x, cfg, cache.prefix[i], pos, lens, wlist[i],
+                              layout, tables)
+        new_prefix.append(c)
+
+    if cache.stacked:
+        wcommon = wlist[n_prefix] if cfg.num_layers > n_prefix else None
+
+        def body(x, inp):
+            p, c = inp
+            x, cnew = _block_prefill(p, x, cfg, c, pos, lens, wcommon,
+                                     layout, tables)
+            return x, cnew
+
+        x, new_rest = jax.lax.scan(
+            body, x, (params["layers"], cache.rest), unroll=unroll
+        )
+    else:
+        new_rest = []
+        layer_list = _unstack(params["layers"], cfg.num_layers - n_prefix)
+        for j, (p, c) in enumerate(zip(layer_list, cache.rest)):
+            x, cnew = _block_prefill(p, x, cfg, c, pos, lens,
+                                     wlist[n_prefix + j], layout, tables)
+            new_rest.append(cnew)
+
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    # each slot's last live chunk position feeds the logits (idle slots
+    # gather row 0 — garbage the engine ignores)
+    last = jnp.clip(lens - 1, 0, x.shape[1] - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = L.unembed(params["embed"], x_last, cfg)
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits, Cache(new_prefix, new_rest, cache.stacked, cache.max_len,
+                         layout, cache.page_size, tables)
+
+
 def _unstack(tree, n):
     return [jax.tree.map(lambda a, i=i: a[i], tree) for i in range(n)]

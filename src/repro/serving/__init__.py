@@ -1,4 +1,10 @@
-from .engine import Request, ServeConfig, ServingEngine
+from .engine import Request, ServeConfig, ServingEngine, plan_prefill_chunks
 from .sampling import sample
 
-__all__ = ["Request", "ServeConfig", "ServingEngine", "sample"]
+__all__ = [
+    "Request",
+    "ServeConfig",
+    "ServingEngine",
+    "plan_prefill_chunks",
+    "sample",
+]

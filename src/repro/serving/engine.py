@@ -1,11 +1,24 @@
 """Batched serving engine: continuous batching over a paged KV cache.
 
 The engine owns a fixed number of decode *slots* (static shapes — the jit'd
-step never retraces).  Requests are admitted into free slots, prefilled by
-streaming their prompt through the decode step at their own positions
-(per-slot ``pos`` vector — see layers.attention_decode*), and generate until
-EOS / max_tokens, at which point the slot is recycled for the next queued
-request.
+step never retraces).  Requests are admitted into free slots, prefilled,
+and generate until EOS / max_tokens, at which point the slot is recycled
+for the next queued request.
+
+Prefill comes in two modes (``ServeConfig.prefill``):
+
+* ``"chunked"`` (default, Sarathi-style) — each engine tick spends a fixed
+  **token budget**: every generating slot consumes one budget token for its
+  decode step, and the leftover budget feeds prompt *chunks* (up to
+  ``prefill_chunk`` tokens, oldest-admitted request first) through one
+  chunk-wide forward pass (``lm.prefill_step`` — the prefill_attention
+  kernel path).  A 1k-token prompt then costs ~``1k / prefill_chunk``
+  ticks instead of 1k full decode steps, while decode latency stays
+  bounded: no tick ever exceeds ``token_budget`` tokens.  Falls back to
+  replay for architectures without chunk-parallel cache writes (SSM /
+  hybrid state, MLA latent caches).
+* ``"replay"`` — the legacy baseline: prompts stream one token per engine
+  tick through the decode step.
 
 KV memory comes in two layouts behind one ``decode_step`` interface
 (``ServeConfig.cache``):
@@ -31,7 +44,7 @@ import collections
 import copy
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,22 +66,71 @@ from .sampling import sample
 # XLA executable per visited config for process lifetime.  Both cache
 # layouts share one entry: the layout lives in the cache pytree's treedef,
 # so jax.jit keeps one trace per layout under the same wrapper.
-_STEP_FNS: "collections.OrderedDict[str, object]" = collections.OrderedDict()
+_STEP_FNS: "collections.OrderedDict[tuple, object]" = collections.OrderedDict()
 _STEP_FNS_MAX = 8
 
 
-def _decode_step_fn(cfg: ModelConfig):
-    key = repr(cfg)
+def _cached_fn(key, build):
     fn = _STEP_FNS.get(key)
     if fn is None:
-        snap = copy.deepcopy(cfg)
-        fn = jax.jit(lambda p, c, t, pos: lm.decode_step(p, snap, c, t, pos))
+        fn = build()
         _STEP_FNS[key] = fn
         while len(_STEP_FNS) > _STEP_FNS_MAX:
             _STEP_FNS.popitem(last=False)
     else:
         _STEP_FNS.move_to_end(key)
     return fn
+
+
+def _decode_step_fn(cfg: ModelConfig):
+    def build():
+        snap = copy.deepcopy(cfg)
+        return jax.jit(lambda p, c, t, pos: lm.decode_step(p, snap, c, t, pos))
+
+    return _cached_fn(("decode", repr(cfg)), build)
+
+
+def _prefill_step_fn(cfg: ModelConfig):
+    """One jit'd chunk-wide prefill step per model config (the chunk width
+    is a trace-time shape, so differing ``prefill_chunk`` values simply
+    trace separate entries under the same wrapper)."""
+
+    def build():
+        snap = copy.deepcopy(cfg)
+        return jax.jit(
+            lambda p, c, t, pos, lens: lm.prefill_step(p, snap, c, t, pos, lens)
+        )
+
+    return _cached_fn(("prefill", repr(cfg)), build)
+
+
+def plan_prefill_chunks(
+    budget: int,
+    n_gen: int,
+    pending: Sequence[Tuple[int, int, int]],  # (slot, admit_seq, remaining)
+    chunk: int,
+) -> Dict[int, int]:
+    """Sarathi-style budget split: decode tokens are spent first (one per
+    generating slot), the leftover feeds prompt chunks oldest-admitted
+    first.  Grants are all-or-nothing per request — always ``min(chunk,
+    remaining)``, never a room-limited partial — so every chunk *starts* at
+    a multiple of ``chunk``: the page-alignment contract of the prefill
+    kernel's table-directed page writes (a room-limited partial would shift
+    every later chunk of that prompt off page boundaries).  Invariants
+    (property-tested): ``n_gen + sum(result.values()) <= max(budget,
+    n_gen)``, every grant equals ``min(chunk, remaining)``, and grants form
+    an age-ordered prefix of ``pending`` (no head-of-line skipping)."""
+    room = budget - n_gen
+    out: Dict[int, int] = {}
+    for slot, _seq, remaining in sorted(pending, key=lambda t: t[1]):
+        n = min(chunk, remaining)
+        if n <= 0:
+            continue
+        if n > room:
+            break
+        out[slot] = n
+        room -= n
+    return out
 
 
 @dataclasses.dataclass
@@ -85,6 +147,17 @@ class ServeConfig:
     # parity with the contiguous footprint.  Size it below that to actually
     # oversubscribe memory (that's the point of paging).
     num_blocks: Optional[int] = None
+    # -- prefill fast path ------------------------------------------------
+    prefill: str = "chunked"  # "chunked" | "replay"
+    # prompt tokens per chunk-wide forward pass; clamped at engine init to
+    # token_budget - slots + 1 so a chunk always fits the leftover budget
+    # (grants are all-or-nothing to keep chunk starts page-aligned)
+    prefill_chunk: int = 16
+    # per-tick token budget shared by the decode batch and prefill chunks;
+    # None = slots + prefill_chunk (one full chunk rides along with a full
+    # decode batch).  Effective budget is floored at `slots` so a full
+    # generation batch always fits.
+    token_budget: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -98,6 +171,15 @@ class Request:
     done: bool = False
     preemptions: int = 0
     error: Optional[str] = None  # set when the request can never be served
+    submit_step: int = 0  # engine tick at submission
+    first_token_step: Optional[int] = None  # tick that produced output[0]
+
+    @property
+    def ttft_ticks(self) -> Optional[int]:
+        """Engine ticks from submission to the first generated token."""
+        if self.first_token_step is None:
+            return None
+        return self.first_token_step - self.submit_step + 1
 
 
 class ServingEngine:
@@ -133,11 +215,42 @@ class ServingEngine:
 
         self.pos = np.zeros((b,), np.int32)  # next write position per slot
         self.slot_req: List[Optional[Request]] = [None] * b
+        # chunked mode: "prefill" until the replay cursor reaches the end of
+        # prompt+output, then "gen" (replay mode leaves these unused)
+        self.slot_state: List[Optional[str]] = [None] * b
         self.queue: collections.deque[Request] = collections.deque()
         self._uid = itertools.count()
         self._admit_seq = itertools.count()
         self._key = jax.random.PRNGKey(serve_cfg.seed)
         self._step = _decode_step_fn(cfg)
+        if serve_cfg.prefill not in ("chunked", "replay"):
+            raise ValueError(f"unknown prefill mode {serve_cfg.prefill!r}")
+        self.prefill_mode = (
+            "chunked"
+            if serve_cfg.prefill == "chunked" and lm.supports_chunked_prefill(cfg)
+            else "replay"
+        )
+        self._prefill = (
+            _prefill_step_fn(cfg) if self.prefill_mode == "chunked" else None
+        )
+        # effective per-tick budget: a full generation batch always fits
+        self.token_budget = max(
+            serve_cfg.token_budget or (b + serve_cfg.prefill_chunk), b
+        )
+        # effective chunk: grants are all-or-nothing (chunk starts must stay
+        # chunk-aligned — the kernel's page-write contract), so the chunk is
+        # clamped to the worst-case leftover room (budget minus a full
+        # generation batch less the prefilling slot itself).  Guarantees a
+        # prefill slot always makes progress: room = budget - n_gen >=
+        # budget - (slots-1) >= chunk.
+        self.prefill_chunk = max(
+            1, min(serve_cfg.prefill_chunk, self.token_budget - b + 1)
+        )
+        # per-tick spend, bounded like every other per-process accumulator
+        # here (a heavy-traffic engine must not grow state per tick)
+        self.tick_tokens: "collections.deque[int]" = collections.deque(
+            maxlen=4096
+        )
         self.completed: List[Request] = []
         self.steps_run = 0
         self.preemptions = 0
@@ -146,7 +259,7 @@ class ServingEngine:
     def submit(self, prompt: Sequence[int], max_new_tokens=None,
                priority: int = 0) -> Request:
         req = Request(next(self._uid), list(prompt), max_new_tokens,
-                      priority=priority)
+                      priority=priority, submit_step=self.steps_run)
         self.queue.append(req)
         return req
 
@@ -182,6 +295,7 @@ class ServingEngine:
                     break
             self.queue.popleft()
             self.slot_req[s] = req
+            self.slot_state[s] = "prefill"
             self.pos[s] = 0
             req._cursor = 0  # type: ignore[attr-defined]
             req._admit_seq = next(self._admit_seq)  # type: ignore[attr-defined]
@@ -208,6 +322,7 @@ class ServingEngine:
         req = self.slot_req[s]
         self.tables.release_slot(s)
         self.slot_req[s] = None
+        self.slot_state[s] = None
         self.pos[s] = 0
         req._cursor = 0  # type: ignore[attr-defined]
         req.preemptions += 1
@@ -222,6 +337,7 @@ class ServingEngine:
             # outgrew the entire pool mid-generation; no preemption can help
             self.tables.release_slot(s)
             self.slot_req[s] = None
+            self.slot_state[s] = None
             req.error = "request outgrew the KV block pool"
             req.done = True
             self.completed.append(req)
@@ -246,14 +362,35 @@ class ServingEngine:
         req.done = True
         self.completed.append(req)
         self.slot_req[s] = None
+        self.slot_state[s] = None
         if self.tables is not None:
             self.tables.release_slot(s)  # blocks recycle immediately at EOS
 
+    def _emit_token(self, s: int, req: Request, tok: int):
+        """Record a generated token and apply the stop conditions."""
+        req.output.append(tok)
+        if req.first_token_step is None:
+            req.first_token_step = self.steps_run
+        limit = req.max_new_tokens or self.scfg.max_new_tokens
+        if (
+            tok == self.scfg.eos_id
+            or len(req.output) >= limit
+            or self.pos[s] >= self.scfg.max_len
+        ):
+            self._finish(s, req)
+
     # ------------------------------------------------------------------
+    def _fresh_cache(self):
+        cache = self.cache
+        if self.tables is not None:
+            cache = cache.with_tables(jnp.asarray(self.tables.tables()))
+        return cache
+
     def step(self) -> int:
-        """One engine tick = one batched decode step.  Slots still replaying
-        their prompt (or, after preemption, prompt + prior output) feed the
-        next replay token; slots in generation feed their last sampled token.
+        """One engine tick.  Replay mode: one batched decode step (slots
+        still replaying their prompt feed the next replay token).  Chunked
+        mode: one decode step for the generating slots plus prompt chunks
+        for prefilling slots, together bounded by ``token_budget``.
         Returns #active slots."""
         self._admit()
         if self.tables is not None:
@@ -264,6 +401,9 @@ class ServingEngine:
         active = [s for s in range(self.scfg.slots) if self.slot_req[s] is not None]
         if not active:
             return 0
+        if self.prefill_mode == "chunked":
+            return self._step_chunked(active)
+
         feed = np.zeros((self.scfg.slots,), np.int32)
         full_len: Dict[int, int] = {}
         for s in active:
@@ -274,11 +414,9 @@ class ServingEngine:
             feed[s] = (
                 req.prompt[cur] if cur < np_ else req.output[cur - np_]
             )
-        cache = self.cache
-        if self.tables is not None:
-            cache = cache.with_tables(jnp.asarray(self.tables.tables()))
         logits, self.cache = self._step(
-            self.params, cache, jnp.asarray(feed), jnp.asarray(self.pos)
+            self.params, self._fresh_cache(), jnp.asarray(feed),
+            jnp.asarray(self.pos)
         )
         self._key, sub = jax.random.split(self._key)
         next_tok = np.asarray(
@@ -290,15 +428,75 @@ class ServingEngine:
             self.pos[s] += 1
             req._cursor = cur + 1  # type: ignore[attr-defined]
             if cur + 1 >= full_len[s]:  # this step produced a real token
-                tok = int(next_tok[s])
-                req.output.append(tok)
-                limit = req.max_new_tokens or self.scfg.max_new_tokens
-                if (
-                    tok == self.scfg.eos_id
-                    or len(req.output) >= limit
-                    or self.pos[s] >= self.scfg.max_len
-                ):
-                    self._finish(s, req)
+                self._emit_token(s, req, int(next_tok[s]))
+        self.tick_tokens.append(len(active))
+        self.steps_run += 1
+        return len(active)
+
+    def _step_chunked(self, active: List[int]) -> int:
+        """One token-budget tick: decode for generating slots + prompt
+        chunks for prefilling slots (oldest admitted first) within the
+        leftover budget."""
+        gen = [s for s in active if self.slot_state[s] == "gen"]
+        pending = []
+        for s in active:
+            if self.slot_state[s] != "prefill":
+                continue
+            req = self.slot_req[s]
+            remaining = len(req.prompt) + len(req.output) - req._cursor  # type: ignore[attr-defined]
+            pending.append((s, req._admit_seq, remaining))  # type: ignore[attr-defined]
+        chunk_lens = plan_prefill_chunks(
+            self.token_budget, len(gen), pending, self.prefill_chunk
+        )
+
+        if gen:
+            feed = np.zeros((self.scfg.slots,), np.int32)
+            for s in gen:
+                req = self.slot_req[s]
+                feed[s] = req.output[-1]
+            logits, self.cache = self._step(
+                self.params, self._fresh_cache(), jnp.asarray(feed),
+                jnp.asarray(self.pos)
+            )
+            self._key, sub = jax.random.split(self._key)
+            next_tok = np.asarray(
+                sample(logits, sub, temperature=self.scfg.temperature)
+            )
+            for s in gen:
+                req = self.slot_req[s]
+                self.pos[s] += 1
+                req._cursor += 1  # type: ignore[attr-defined]
+                self._emit_token(s, req, int(next_tok[s]))
+
+        if chunk_lens:
+            width = self.prefill_chunk
+            toks = np.zeros((self.scfg.slots, width), np.int32)
+            lens = np.zeros((self.scfg.slots,), np.int32)
+            for s, n in chunk_lens.items():
+                req = self.slot_req[s]
+                cur = req._cursor  # type: ignore[attr-defined]
+                replay = (req.prompt + req.output)[cur : cur + n]
+                toks[s, :n] = replay
+                lens[s] = n
+            plogits, self.cache = self._prefill(
+                self.params, self._fresh_cache(), jnp.asarray(toks),
+                jnp.asarray(self.pos), jnp.asarray(lens)
+            )
+            self._key, sub = jax.random.split(self._key)
+            ptok = np.asarray(
+                sample(plogits, sub, temperature=self.scfg.temperature)
+            )
+            for s, n in chunk_lens.items():
+                req = self.slot_req[s]
+                self.pos[s] += n
+                req._cursor += n  # type: ignore[attr-defined]
+                if req._cursor >= len(req.prompt) + len(req.output):  # type: ignore[attr-defined]
+                    # the chunk reached the end of the replay stream: its
+                    # last live logits produce the next real token
+                    self.slot_state[s] = "gen"
+                    self._emit_token(s, req, int(ptok[s]))
+
+        self.tick_tokens.append(len(gen) + sum(chunk_lens.values()))
         self.steps_run += 1
         return len(active)
 

@@ -147,6 +147,84 @@ class TestPagedCacheProperties:
         assert pool.in_use == 0 and pool.free == slots * max_pages
 
 
+class TestTokenBudgetProperties:
+    """Invariants of the Sarathi-style token-budget scheduler
+    (serving/engine.py::plan_prefill_chunks): one budget token per
+    generating slot is spent first, the leftover feeds prompt chunks
+    oldest-admitted first, and the per-tick total never exceeds the
+    (slot-count-floored) budget."""
+
+    @given(
+        st.integers(1, 64),  # budget
+        st.integers(0, 16),  # generating slots
+        st.lists(
+            st.tuples(
+                st.integers(0, 15),  # slot id
+                st.integers(0, 1 << 20),  # admit seq
+                st.integers(1, 4096),  # remaining replay tokens
+            ),
+            max_size=16,
+            unique_by=lambda t: t[0],
+        ),
+        st.integers(1, 64),  # chunk
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_plan_never_exceeds_budget(self, budget, n_gen, pending, chunk):
+        from repro.serving import plan_prefill_chunks
+
+        plan = plan_prefill_chunks(budget, n_gen, pending, chunk)
+        remaining = {s: r for s, _, r in pending}
+        # hard ceiling: decode spend + prefill spend <= effective budget
+        assert n_gen + sum(plan.values()) <= max(budget, n_gen)
+        # grants are all-or-nothing: exactly min(chunk, remaining), never a
+        # room-limited partial (the page-alignment contract of the prefill
+        # kernel's table-directed writes)
+        for s, n in plan.items():
+            assert n == min(chunk, remaining[s])
+        # grants form an age-ordered prefix (no head-of-line skipping)
+        by_age = sorted(pending, key=lambda t: t[1])
+        stopped = False
+        for s, _seq, _rem in by_age:
+            if s not in plan:
+                stopped = True
+            else:
+                assert not stopped
+
+    @given(
+        st.integers(1, 2),  # slots
+        st.integers(2, 24),  # token budget (pre-floor)
+        st.integers(1, 8),  # prefill chunk
+        st.lists(st.integers(1, 20), min_size=1, max_size=3),  # prompt lens
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_engine_tick_spend_bounded(self, slots, budget, chunk, plens):
+        """End-to-end: a live engine's per-tick token spend (decode batch +
+        prefill chunks) never exceeds its effective budget."""
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import lm as _lm
+        from repro.serving import ServeConfig, ServingEngine
+
+        cfg = get_config("qwen2_1_5b").reduced()
+        if "qwen" not in _TINY_PARAMS:  # init once, not per hypothesis example
+            _TINY_PARAMS["qwen"] = _lm.init(cfg, jax.random.PRNGKey(0))
+        params = _TINY_PARAMS["qwen"]
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=slots, max_len=32, max_new_tokens=2, prefill="chunked",
+            prefill_chunk=chunk, token_budget=budget))
+        rng = np.random.default_rng(0)
+        for n in plens:
+            eng.submit(rng.integers(0, cfg.vocab_size, size=n).tolist())
+        eng.run()
+        assert eng.token_budget == max(budget, slots)
+        assert eng.tick_tokens
+        assert max(eng.tick_tokens) <= eng.token_budget
+
+
+_TINY_PARAMS: dict = {}
+
+
 class TestKernelProperties:
     @given(
         st.sampled_from([32, 64, 96]),

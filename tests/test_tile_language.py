@@ -275,6 +275,35 @@ class TestSchedule:
         cols = [swizzle_decode(i, g0, g1, f)[1] for i in range(f)]
         assert len(set(cols)) == 1
 
+    @pytest.mark.parametrize("g0,g1,factor", [(6, 3, 4), (10, 2, 4), (7, 5, 3)])
+    def test_swizzle_ragged_int_path_is_permutation(self, g0, g1, factor):
+        """The python-int path clamps the last (ragged) panel when ``factor``
+        does not divide ``g0`` and must still be a bijection over the grid."""
+        seen = {swizzle_decode(f, g0, g1, factor) for f in range(g0 * g1)}
+        assert seen == {(i0, i1) for i0 in range(g0) for i1 in range(g1)}
+
+    @pytest.mark.parametrize("g0,g1,factor", [(8, 4, 2), (6, 3, 3), (16, 2, 8)])
+    def test_swizzle_traced_matches_int_when_divisible(self, g0, g1, factor):
+        """The traced path requires ``g0 % factor == 0`` (validate_swizzle's
+        precondition); under it, traced and int decodes must agree exactly —
+        the int path's ragged clamp reduces to the traced arithmetic."""
+        import jax.numpy as jnp
+
+        from repro.core.schedule import validate_swizzle
+
+        validate_swizzle(g0, g1, factor)  # precondition holds
+        for flat in range(g0 * g1):
+            ti0, ti1 = swizzle_decode(jnp.int32(flat), g0, g1, factor)
+            i0, i1 = swizzle_decode(flat, g0, g1, factor)
+            assert (int(ti0), int(ti1)) == (i0, i1)
+
+    def test_swizzle_ragged_traced_precondition_rejected(self):
+        from repro.core.errors import ScheduleError
+        from repro.core.schedule import validate_swizzle
+
+        with pytest.raises(ScheduleError, match="multiple of the factor"):
+            validate_swizzle(6, 3, 4)  # ragged panel: traced path illegal
+
     def test_swizzled_matmul_correct(self, rng):
         from repro.kernels.matmul import matmul_program
 

@@ -15,6 +15,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # the newest surface and must not rot against jax/numpy API churn.
 python -m pytest -x -q -W 'error::DeprecationWarning:repro\.serving' "$@"
 
-# Exercise the serving path end-to-end (engine + paged cache + scheduler +
-# both cache layouts asserting identical outputs) on a tiny config.
-python -m benchmarks.bench_serving --smoke
+# Exercise the serving path end-to-end on a tiny config: engine + paged
+# cache + scheduler + both cache layouts asserting identical outputs, plus
+# the chunked-prefill fast path (asserts chunked prefill finishes within
+# ceil(prompt/chunk)+gen engine ticks where replay needs prompt+gen, with
+# byte-identical tokens).  --json records the perf trajectory row.
+rm -f BENCH_serving.json  # a stale record must not satisfy the check below
+python -m benchmarks.run --only serving --smoke --json
+test -s BENCH_serving.json  # the trajectory record must actually land
