@@ -8,9 +8,22 @@ inline correctness check per table.
 cross-row derived metrics and the git sha — so the perf trajectory is
 recorded across PRs, not just printed and lost (tools/ci.sh passes it).
 
+``--compare <baseline>`` is the regression gate: fresh derived metrics are
+checked against a committed ``BENCH_<table>.json`` and the run fails when
+any metric drops more than 20% below the baseline.  Derived metrics are
+higher-is-better ratios by convention (each table's ``derived_metrics``
+documents this), so no per-metric direction table is needed.  Baselines
+are read up front (``--json`` may overwrite the same path afterwards), and
+a baseline recorded at a different ``--smoke`` setting is skipped with a
+note rather than compared against mismatched shapes.  ``<baseline>`` is a
+``BENCH_<table>.json`` file when one table is selected, else a directory
+holding one per table.
+
     PYTHONPATH=src python -m benchmarks.run            # all tables
     PYTHONPATH=src python -m benchmarks.run --only gemm,mla
     PYTHONPATH=src python -m benchmarks.run --only serving --smoke --json
+    PYTHONPATH=src python -m benchmarks.run --only serving --smoke \
+        --compare BENCH_serving.json
 """
 import argparse
 import dataclasses
@@ -77,6 +90,64 @@ def write_json(name: str, rows, derived=None, out_dir=".",
     return path
 
 
+REGRESSION_THRESHOLD = 0.2  # fail when a metric drops >20% vs baseline
+
+
+def load_baselines(arg: str, names) -> dict:
+    """Map table name -> committed baseline payload.  Read eagerly so a
+    later ``--json`` overwrite of the same path cannot corrupt the gate.
+    A missing path is a hard error: a typo'd or renamed baseline must not
+    silently disable the regression gate."""
+    p = pathlib.Path(arg)
+    if not p.exists():
+        raise SystemExit(f"--compare baseline {arg!r} does not exist")
+    if p.is_file() and len(names) > 1:
+        raise SystemExit(
+            "--compare got a single file but multiple tables are "
+            "selected; pass a directory of BENCH_<table>.json files"
+        )
+    out = {}
+    for name in names:
+        path = p if p.is_file() else p / f"BENCH_{name}.json"
+        if path.is_file():
+            out[name] = json.loads(path.read_text())
+        else:
+            print(f"# compare[{name}]: no baseline at {path}; skipping")
+    return out
+
+
+def compare_derived(name: str, current: dict, baseline: dict,
+                    smoke: bool) -> list:
+    """Regression check for one table; returns failure strings.  Every
+    derived metric is a higher-is-better ratio by convention."""
+    if bool(baseline.get("smoke")) != smoke:
+        print(f"# compare[{name}]: baseline smoke={baseline.get('smoke')} "
+              f"!= current smoke={smoke}; shapes differ, skipping gate")
+        return []
+    failures = []
+    for k, base in (baseline.get("derived") or {}).items():
+        if not isinstance(base, (int, float)):
+            continue
+        cur = current.get(k)
+        if not isinstance(cur, (int, float)):
+            # a vanished metric must not silently defeat the gate: renaming
+            # or dropping a tracked metric requires updating the baseline
+            failures.append(
+                f"{name}.{k}: missing from current run (baseline {base} @ "
+                f"{baseline.get('git_sha', '?')[:12]})"
+            )
+            continue
+        floor = base * (1.0 - REGRESSION_THRESHOLD)
+        if base > 0 and cur < floor:
+            failures.append(
+                f"{name}.{k}: {cur} < {floor:.3f} "
+                f"(baseline {base} @ {baseline.get('git_sha', '?')[:12]})"
+            )
+        else:
+            print(f"# compare[{name}]: {k} = {cur} vs baseline {base}: ok")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -85,22 +156,36 @@ def main() -> None:
                     help="reduced shapes where a table supports it")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<table>.json per table")
+    ap.add_argument("--compare", default=None, metavar="BASELINE",
+                    help="BENCH_<table>.json (or a directory of them) to "
+                         "gate derived metrics against; >20% regression "
+                         "fails the run")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(TABLES)
+    baselines = load_baselines(args.compare, names) if args.compare else {}
     t0 = time.time()
     total_rows = 0
+    failures = []
     for name in names:
         mod = TABLES[name]
         kwargs = {}
         if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
             kwargs["smoke"] = True
         rows = mod.run(**kwargs)
+        derive = getattr(mod, "derived_metrics", None)
+        derived = derive(rows) if derive else {}
+        if name in baselines:
+            failures += compare_derived(
+                name, derived, baselines[name], bool(kwargs.get("smoke"))
+            )
         if args.json:
-            derive = getattr(mod, "derived_metrics", None)
-            write_json(name, rows, derive(rows) if derive else None,
-                       smoke=bool(kwargs.get("smoke")))
+            write_json(name, rows, derived, smoke=bool(kwargs.get("smoke")))
         total_rows += len(rows)
     print(f"# benchmarks complete: {total_rows} rows in {time.time()-t0:.1f}s")
+    if failures:
+        for f in failures:
+            print(f"# REGRESSION: {f}", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Serve a small model with batched requests through the continuous-batching
-engine (per-slot positions, slot recycling).
+engine (per-slot positions, slot recycling), with the device-resident
+multi-step decode loop running 8 decode ticks per host dispatch.
 
     PYTHONPATH=src python examples/serve_llm.py
 """
@@ -13,4 +14,5 @@ if __name__ == "__main__":
         "--slots", "4",
         "--max-new", "12",
         "--prompt-len", "6",
+        "--sync-every", "8",
     ])

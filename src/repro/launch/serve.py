@@ -43,6 +43,11 @@ def main(argv=None):
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-tick token budget shared by the decode batch "
                          "and prefill chunks (default slots+prefill_chunk)")
+    ap.add_argument("--sync-every", type=int, default=1,
+                    help="decode ticks per host dispatch: >1 runs the "
+                         "device-resident jax.lax.scan loop when every "
+                         "active slot is generating (scheduler runs at "
+                         "sync boundaries only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -60,7 +65,8 @@ def main(argv=None):
                     cache=args.cache, page_size=args.page_size,
                     num_blocks=args.num_blocks, prefill=args.prefill,
                     prefill_chunk=args.prefill_chunk,
-                    token_budget=args.token_budget),
+                    token_budget=args.token_budget,
+                    sync_every=args.sync_every),
     )
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
@@ -76,6 +82,11 @@ def main(argv=None):
         extra = (
             f", {engine.cache_mode} cache: peak {engine.peak_kv_blocks()} "
             f"blocks, {engine.preemptions} preemptions"
+        )
+    if engine.sync_every > 1:
+        extra += (
+            f", {engine.decode_windows} multi-step windows "
+            f"({engine.window_fallbacks} fallbacks)"
         )
     ttfts = [r.ttft_ticks for r in done if r.ttft_ticks is not None]
     if ttfts:

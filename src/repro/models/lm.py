@@ -354,9 +354,30 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     return Cache(prefix, rest, False, max_len, layout, page_size, tables)
 
 
+def _per_slot(mask, tree_a, tree_b):
+    """Select ``tree_a`` where the (B,) ``mask`` holds, else ``tree_b``
+    (leaves are batch-major)."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(
+            mask.reshape(mask.shape + (1,) * (a.ndim - 1)), a, b
+        ),
+        tree_a, tree_b,
+    )
+
+
 def _block_decode(p, x, cfg: ModelConfig, cache, pos, window,
-                  layout="contiguous", tables=None):
-    """``window`` must be a static python value here (ring layout / mask)."""
+                  layout="contiguous", tables=None, live=None):
+    """``window`` must be a static python value here (ring layout / mask).
+
+    ``live`` (optional (B,) bool) marks the slots actually taking a step.
+    Positional caches (KV strips/pages, MLA latents) never need it — a dead
+    slot's write lands beyond its live length and is masked on read — but
+    *recurrent* SSM/conv state has no position to hide behind: without the
+    mask a parked slot's state would keep evolving every batched tick.
+    With ``live``, dead slots hold their state and a slot stepping at
+    ``pos == 0`` starts from zeroed state, so a request's outputs do not
+    depend on what previously occupied its slot.
+    """
     h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
     new_cache: Dict[str, Any] = {}
     delta = jnp.zeros_like(x)
@@ -375,13 +396,25 @@ def _block_decode(p, x, cfg: ModelConfig, cache, pos, window,
     elif cfg.attention == "mla":
         delta, mc = L.mla_decode(p["attn"], h, cfg, cache["mla"], pos)
         new_cache["mla"] = mc
-    if cfg.family == "ssm":
-        delta, sc = L.mamba2_decode(p["mamba"], h, cfg, cache["ssm"])
-        new_cache["ssm"] = sc
-    elif cfg.family == "hybrid":
-        hm = L.rmsnorm(x, p["norm_m"], cfg.norm_eps)
-        md, sc = L.mamba2_decode(p["mamba"], hm, cfg, cache["ssm"])
-        delta = 0.5 * (delta + md)
+    if cfg.family in ("ssm", "hybrid"):
+        ssm_in = cache["ssm"]
+        if live is not None:
+            posb = jnp.broadcast_to(
+                jnp.asarray(pos, jnp.int32), (x.shape[0],)
+            )
+            fresh = live & (posb == 0)
+            ssm_in = _per_slot(
+                fresh, jax.tree.map(jnp.zeros_like, ssm_in), ssm_in
+            )
+        if cfg.family == "ssm":
+            md, sc = L.mamba2_decode(p["mamba"], h, cfg, ssm_in)
+            delta = md
+        else:
+            hm = L.rmsnorm(x, p["norm_m"], cfg.norm_eps)
+            md, sc = L.mamba2_decode(p["mamba"], hm, cfg, ssm_in)
+            delta = 0.5 * (delta + md)
+        if live is not None:
+            sc = _per_slot(live, sc, cache["ssm"])
         new_cache["ssm"] = sc
     x = x + delta
     if "moe" in p:
@@ -395,8 +428,13 @@ def _block_decode(p, x, cfg: ModelConfig, cache, pos, window,
 
 
 def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
-                unroll: int = 1):
-    """One decode step: token (B,) int32, pos scalar int32 -> (logits, cache)."""
+                unroll: int = 1, live=None):
+    """One decode step: token (B,) int32, pos scalar int32 -> (logits, cache).
+
+    ``live`` (optional (B,) bool) marks slots genuinely stepping — see
+    :func:`_block_decode`; serving passes it so parked slots cannot mutate
+    recurrent state and recycled slots start from clean state.
+    """
     x = L.embed(params["embed"], token[:, None]).astype(cfg.dtype)
     wlist = static_windows(cfg)
     n_prefix = len(params["prefix_layers"])
@@ -404,7 +442,7 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
     new_prefix = []
     for i, p in enumerate(params["prefix_layers"]):
         x, c = _block_decode(p, x, cfg, cache.prefix[i], pos, wlist[i],
-                             layout, tables)
+                             layout, tables, live)
         new_prefix.append(c)
 
     if cache.stacked:
@@ -412,7 +450,8 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
 
         def body(x, inp):
             p, c = inp
-            x, cnew = _block_decode(p, x, cfg, c, pos, wcommon, layout, tables)
+            x, cnew = _block_decode(p, x, cfg, c, pos, wcommon, layout,
+                                    tables, live)
             return x, cnew
 
         x, new_rest = jax.lax.scan(
@@ -423,7 +462,7 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
         layer_list = _unstack(params["layers"], cfg.num_layers - n_prefix)
         for j, (p, c) in enumerate(zip(layer_list, cache.rest)):
             x, cnew = _block_decode(p, x, cfg, c, pos, wlist[n_prefix + j],
-                                    layout, tables)
+                                    layout, tables, live)
             new_rest.append(cnew)
 
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
@@ -432,6 +471,61 @@ def decode_step(params, cfg: ModelConfig, cache: Cache, token, pos,
         logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
     return logits, Cache(new_prefix, new_rest, cache.stacked, cache.max_len,
                          layout, cache.page_size, tables)
+
+
+def decode_loop(params, cfg: ModelConfig, cache: Cache, feed, pos, key,
+                live, remaining, *, n_steps: int, sample_fn, eos_id: int,
+                max_len: int, unroll: int = 1):
+    """Run up to ``n_steps`` decode ticks in one ``jax.lax.scan`` — the
+    device-resident decode loop.  Everything the per-tick engine round-trips
+    through the host each tick (feed build, upload, sample, download) lives
+    in the scan carry instead; the host dispatches once and drains once.
+
+    ``feed`` (B,) is each slot's last known token, ``pos`` (B,) its next
+    write position, ``live`` (B,) bool the slots generating, ``remaining``
+    (B,) each slot's token allowance.  ``sample_fn(logits, key, gate) ->
+    (tokens, key)`` folds sampling into the loop body (serving passes
+    :func:`repro.serving.sampling.sample_step`); ``gate`` is the any-slot-
+    live flag so fully-dead tail iterations leave the key untouched.
+
+    Per iteration, mirroring the per-tick engine's ``_emit_token`` exactly:
+    a live slot feeds its token, samples the next, advances ``pos`` and
+    burns one ``remaining``; it stops when the sampled token equals
+    ``eos_id``, its allowance hits zero, or ``pos`` reaches ``max_len``.
+    Greedy outputs are therefore byte-identical to per-tick stepping
+    unconditionally.  At ``temperature > 0`` the key stream matches the
+    per-tick engine's whenever the window covers the same ticks it would
+    have run; if a slot frees mid-window while work is queued, per-tick
+    admission would interleave a prefill key split before the boundary, so
+    the streams are equally-valid draws but not bit-equal — scheduling
+    deferral is visible through the PRNG, and callers needing bit-equality
+    under sampling must keep windows off or the queue empty.
+    Dead slots keep re-feeding their frozen token at their frozen ``pos``:
+    the write lands beyond their live length (masked on read, overwritten
+    on slot reuse) and recurrent state is held by the ``live`` mask inside
+    ``decode_step``, so a dead iteration is behaviorally a no-op.
+
+    Returns ``(tokens (n_steps, B), emitted (n_steps, B) bool, key, cache)``
+    — ``emitted[t, b]`` marks a token the host must deliver; rows after the
+    last live iteration are all-False.
+    """
+    def body(carry, _):
+        cache, feed, pos, key, live, remaining = carry
+        logits, cache = decode_step(params, cfg, cache, feed, pos,
+                                    unroll=unroll, live=live)
+        tok, key = sample_fn(logits, key, live.any())
+        tok = jnp.where(live, tok, feed)
+        pos = jnp.where(live, pos + 1, pos)
+        remaining = jnp.where(live, remaining - 1, remaining)
+        stop = (tok == eos_id) | (remaining <= 0) | (pos >= max_len)
+        return (cache, tok, pos, key, live & ~stop, remaining), (tok, live)
+
+    carry = (cache, jnp.asarray(feed, jnp.int32), jnp.asarray(pos, jnp.int32),
+             key, live, jnp.asarray(remaining, jnp.int32))
+    (cache, _, _, key, _, _), (toks, emitted) = jax.lax.scan(
+        body, carry, None, length=n_steps
+    )
+    return toks, emitted, key, cache
 
 
 def _block_prefill(p, x, cfg: ModelConfig, cache, pos, lens, window,

@@ -1,5 +1,5 @@
 from .engine import Request, ServeConfig, ServingEngine, plan_prefill_chunks
-from .sampling import sample
+from .sampling import sample, sample_step
 
 __all__ = [
     "Request",
@@ -7,4 +7,5 @@ __all__ = [
     "ServingEngine",
     "plan_prefill_chunks",
     "sample",
+    "sample_step",
 ]

@@ -37,6 +37,25 @@ KV memory comes in two layouts behind one ``decode_step`` interface
 
 Both layouts produce identical outputs for identical requests — asserted in
 tests/test_serving.py.
+
+The decode hot loop is **device-resident** (``ServeConfig.sync_every``):
+
+* Sampling is folded into the jit'd step (``sampling.sample_step``) — the
+  engine uploads token feeds and downloads sampled token *ids*; logits
+  never cross the device boundary.  The PRNG key is a device carry with a
+  greedy fast path that never splits it.
+* The jit'd steps **donate** the cache (``donate_argnums``): XLA updates
+  the KV pages/strips in place instead of copying the full cache every
+  tick.  The device block-table tensor is cached on the engine and
+  re-uploaded only when the scheduler actually mutates tables.
+* With ``sync_every > 1``, up to that many decode ticks run in a single
+  ``jax.lax.scan`` dispatch (``lm.decode_loop``): EOS and per-slot token
+  limits become on-device stop masks, emitted tokens land in a device
+  buffer drained once per dispatch, and the Python scheduler (admission,
+  growth, preemption) runs only at sync boundaries.  Paged slots are
+  pre-granted grow-ahead pages for the worst-case window, all-or-nothing;
+  when the pool is too tight the engine falls back to per-tick stepping
+  for that boundary, so scheduling fidelity is never traded for speed.
 """
 from __future__ import annotations
 
@@ -54,18 +73,25 @@ from repro.models import lm
 from repro.models.config import ModelConfig
 
 from .paged_cache import BlockPool, PoolExhausted, SlotTables, blocks_for
-from .sampling import sample
+from .sampling import sample_step
 
-# One jit'd decode step per model configuration, shared by every engine
-# instance (and so by every request): constructing a fresh ``jax.jit``
-# wrapper per engine discards XLA's trace cache and recompiles the step for
-# each new engine even when the config is identical.  Keyed on the config's
-# dataclass repr (deterministic over field values); the closure captures a
-# deep copy so later mutation of the caller's config object cannot change
-# what a cached entry computes.  LRU-bounded so config sweeps don't pin an
-# XLA executable per visited config for process lifetime.  Both cache
-# layouts share one entry: the layout lives in the cache pytree's treedef,
-# so jax.jit keeps one trace per layout under the same wrapper.
+# One jit'd decode step per (model configuration, sampling temperature),
+# shared by every engine instance (and so by every request): constructing a
+# fresh ``jax.jit`` wrapper per engine discards XLA's trace cache and
+# recompiles the step for each new engine even when the config is
+# identical.  Keyed on the config's dataclass repr (deterministic over
+# field values); the closure captures a deep copy so later mutation of the
+# caller's config object cannot change what a cached entry computes.
+# LRU-bounded so config sweeps don't pin an XLA executable per visited
+# config for process lifetime.  Both cache layouts share one entry: the
+# layout lives in the cache pytree's treedef, so jax.jit keeps one trace
+# per layout under the same wrapper.
+#
+# Every cached step **donates its cache argument** (``donate_argnums``):
+# the caller's cache pytree is consumed — XLA writes the new KV in place
+# instead of materializing a second full cache per tick — and the returned
+# cache is the only live reference afterwards.  The engine upholds this by
+# always replacing ``self.cache`` with the step's output.
 _STEP_FNS: "collections.OrderedDict[tuple, object]" = collections.OrderedDict()
 _STEP_FNS_MAX = 8
 
@@ -82,26 +108,69 @@ def _cached_fn(key, build):
     return fn
 
 
-def _decode_step_fn(cfg: ModelConfig):
+def _decode_step_fn(cfg: ModelConfig, temperature: float):
+    """Fused decode tick: model step + sampling in one jit'd program.
+    Returns ``(tokens, cache, key)`` — logits stay on device."""
+
     def build():
         snap = copy.deepcopy(cfg)
-        return jax.jit(lambda p, c, t, pos: lm.decode_step(p, snap, c, t, pos))
 
-    return _cached_fn(("decode", repr(cfg)), build)
+        def step(p, c, tok, pos, key, live):
+            logits, c = lm.decode_step(p, snap, c, tok, pos, live=live)
+            tok, key = sample_step(logits, key, temperature=temperature)
+            return tok, c, key
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    return _cached_fn(("decode", repr(cfg), temperature), build)
 
 
-def _prefill_step_fn(cfg: ModelConfig):
+def _prefill_step_fn(cfg: ModelConfig, temperature: float):
     """One jit'd chunk-wide prefill step per model config (the chunk width
     is a trace-time shape, so differing ``prefill_chunk`` values simply
-    trace separate entries under the same wrapper)."""
+    trace separate entries under the same wrapper).  Sampling is fused like
+    the decode step: the returned tokens are what a chunk that completes
+    its prompt emits."""
 
     def build():
         snap = copy.deepcopy(cfg)
-        return jax.jit(
-            lambda p, c, t, pos, lens: lm.prefill_step(p, snap, c, t, pos, lens)
-        )
 
-    return _cached_fn(("prefill", repr(cfg)), build)
+        def step(p, c, toks, pos, lens, key):
+            logits, c = lm.prefill_step(p, snap, c, toks, pos, lens)
+            tok, key = sample_step(logits, key, temperature=temperature)
+            return tok, c, key
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    return _cached_fn(("prefill", repr(cfg), temperature), build)
+
+
+def _decode_loop_fn(cfg: ModelConfig, temperature: float, n_steps: int,
+                    eos_id: int, max_len: int):
+    """The multi-step window: ``n_steps`` fused decode ticks in one
+    ``jax.lax.scan`` dispatch (``lm.decode_loop``), stop masks and emitted
+    tokens on device."""
+
+    def build():
+        snap = copy.deepcopy(cfg)
+
+        def sample_fn(logits, key, gate):
+            return sample_step(logits, key, temperature=temperature,
+                               gate=gate)
+
+        def loop(p, c, feed, pos, key, live, remaining):
+            return lm.decode_loop(
+                p, snap, c, feed, pos, key, live, remaining,
+                n_steps=n_steps, sample_fn=sample_fn, eos_id=eos_id,
+                max_len=max_len,
+            )
+
+        return jax.jit(loop, donate_argnums=(1,))
+
+    return _cached_fn(
+        ("decode_loop", repr(cfg), temperature, n_steps, eos_id, max_len),
+        build,
+    )
 
 
 def plan_prefill_chunks(
@@ -158,6 +227,14 @@ class ServeConfig:
     # decode batch).  Effective budget is floored at `slots` so a full
     # generation batch always fits.
     token_budget: Optional[int] = None
+    # -- device-resident decode loop --------------------------------------
+    # decode ticks per host dispatch: 1 = legacy per-tick stepping; N > 1
+    # runs up to N ticks in one jax.lax.scan when every active slot is
+    # generating (EOS / token limits become on-device stop masks, scheduling
+    # happens only at sync boundaries).  Paged slots must win an
+    # all-or-nothing grow-ahead page grant for the worst-case window, else
+    # that boundary falls back to a per-tick step.
+    sync_every: int = 1
 
 
 @dataclasses.dataclass
@@ -222,7 +299,7 @@ class ServingEngine:
         self._uid = itertools.count()
         self._admit_seq = itertools.count()
         self._key = jax.random.PRNGKey(serve_cfg.seed)
-        self._step = _decode_step_fn(cfg)
+        self._step = _decode_step_fn(cfg, serve_cfg.temperature)
         if serve_cfg.prefill not in ("chunked", "replay"):
             raise ValueError(f"unknown prefill mode {serve_cfg.prefill!r}")
         self.prefill_mode = (
@@ -231,8 +308,22 @@ class ServingEngine:
             else "replay"
         )
         self._prefill = (
-            _prefill_step_fn(cfg) if self.prefill_mode == "chunked" else None
+            _prefill_step_fn(cfg, serve_cfg.temperature)
+            if self.prefill_mode == "chunked" else None
         )
+        self.sync_every = max(1, serve_cfg.sync_every)
+        self._loop_fns: Dict[int, object] = {}  # window length -> jit'd loop
+        # the device-side block-table tensor is cached across ticks and
+        # re-uploaded only after the scheduler mutates tables (admission
+        # growth, grow-ahead grants/trims, preemption, EOS recycling)
+        self._tables_dirty = True
+        self.table_uploads = 0  # perf counter: host->device table transfers
+        self.decode_windows = 0  # multi-step dispatches taken
+        self.window_fallbacks = 0  # grow-ahead denied -> per-tick boundary
+        self.dispatches = 0  # step() calls that ran device work: a window
+        # counts once however many ticks it covers — the deterministic
+        # measure of host-round-trip amortization (the flaky-free companion
+        # to wall-clock tok/s in the bench trajectory)
         # effective per-tick budget: a full generation batch always fits
         self.token_budget = max(
             serve_cfg.token_budget or (b + serve_cfg.prefill_chunk), b
@@ -300,9 +391,10 @@ class ServingEngine:
             req._cursor = 0  # type: ignore[attr-defined]
             req._admit_seq = next(self._admit_seq)  # type: ignore[attr-defined]
             if self.tables is not None:
-                self.tables.ensure_capacity(
+                if self.tables.ensure_capacity(
                     s, self._resident_tokens(req), req.uid
-                )
+                ):
+                    self._tables_dirty = True
 
     def _pick_victim(self, exclude: int) -> Optional[int]:
         """Preemption victim: lowest priority, then youngest admission."""
@@ -321,6 +413,7 @@ class ServingEngine:
         the queue (recompute resume — prompt + generated tokens replay)."""
         req = self.slot_req[s]
         self.tables.release_slot(s)
+        self._tables_dirty = True
         self.slot_req[s] = None
         self.slot_state[s] = None
         self.pos[s] = 0
@@ -336,6 +429,7 @@ class ServingEngine:
         if blocks_for(int(self.pos[s]) + 1, self.pool.page_size) > self.pool.num_blocks:
             # outgrew the entire pool mid-generation; no preemption can help
             self.tables.release_slot(s)
+            self._tables_dirty = True
             self.slot_req[s] = None
             self.slot_state[s] = None
             req.error = "request outgrew the KV block pool"
@@ -344,7 +438,8 @@ class ServingEngine:
             return False
         while True:
             try:
-                self.tables.ensure_capacity(s, int(self.pos[s]) + 1, req.uid)
+                if self.tables.ensure_capacity(s, int(self.pos[s]) + 1, req.uid):
+                    self._tables_dirty = True
                 return True
             except PoolExhausted:
                 victim = self._pick_victim(exclude=s)
@@ -365,6 +460,7 @@ class ServingEngine:
         self.slot_state[s] = None
         if self.tables is not None:
             self.tables.release_slot(s)  # blocks recycle immediately at EOS
+            self._tables_dirty = True
 
     def _emit_token(self, s: int, req: Request, tok: int):
         """Record a generated token and apply the stop conditions."""
@@ -381,17 +477,40 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def _fresh_cache(self):
-        cache = self.cache
-        if self.tables is not None:
-            cache = cache.with_tables(jnp.asarray(self.tables.tables()))
-        return cache
+        """The cache to feed the next jit'd step.  The device block-table
+        tensor is cached across ticks (it rides inside ``self.cache`` as the
+        ``tables`` leaf, threaded through every step) and re-uploaded only
+        after a scheduler mutation — the per-tick upload the profile blamed
+        for most of the paged-vs-contiguous gap."""
+        if self.tables is not None and self._tables_dirty:
+            self.cache = self.cache.with_tables(
+                jnp.asarray(self.tables.tables())
+            )
+            self._tables_dirty = False
+            self.table_uploads += 1
+        return self.cache
+
+    def _gen_ready(self, s: int) -> bool:
+        """Slot ``s`` is in steady-state generation: its next feed is its
+        last known token and every later feed is a model output — exactly
+        the shape of work the device-resident loop can run without the
+        host."""
+        req = self.slot_req[s]
+        if self.prefill_mode == "chunked" and self.slot_state[s] != "gen":
+            return False
+        return (
+            req._cursor  # type: ignore[attr-defined]
+            == len(req.prompt) + len(req.output) - 1
+        )
 
     def step(self) -> int:
-        """One engine tick.  Replay mode: one batched decode step (slots
-        still replaying their prompt feed the next replay token).  Chunked
-        mode: one decode step for the generating slots plus prompt chunks
-        for prefilling slots, together bounded by ``token_budget``.
-        Returns #active slots."""
+        """One engine tick (one host dispatch).  Replay mode: one batched
+        decode step (slots still replaying their prompt feed the next
+        replay token).  Chunked mode: one decode step for the generating
+        slots plus prompt chunks for prefilling slots, together bounded by
+        ``token_budget``.  With ``sync_every > 1`` and every active slot
+        generating, one dispatch runs up to ``sync_every`` decode ticks on
+        device.  Returns #active slots."""
         self._admit()
         if self.tables is not None:
             for s in range(self.scfg.slots):
@@ -401,10 +520,120 @@ class ServingEngine:
         active = [s for s in range(self.scfg.slots) if self.slot_req[s] is not None]
         if not active:
             return 0
+        self.dispatches += 1
+        if self.sync_every > 1 and all(self._gen_ready(s) for s in active):
+            done = self._step_window(active)
+            if done is not None:
+                return done
+            self.window_fallbacks += 1  # pool too tight for grow-ahead
         if self.prefill_mode == "chunked":
             return self._step_chunked(active)
+        return self._step_replay(active)
 
+    # -- device-resident multi-step window ------------------------------
+    def _grant_window(self, active: List[int], n: int, rem) -> bool:
+        """All-or-nothing grow-ahead: every active slot gets pages covering
+        its worst case over the ``n``-tick window — at most ``rem[s]``
+        emitted tokens plus the frozen-position dead-iteration write, and
+        never past ``max_len`` — so a slot near its token limit doesn't
+        inflate the ask with pages it can never touch.  On any shortfall
+        the grant rolls back *exactly* — every slot trimmed to its
+        pre-grant block count and the table-dirty flag restored, so a
+        failed grant costs no table re-upload — and the boundary falls
+        back to per-tick stepping.  The grant itself never preempts, so a
+        tight pool degrades throughput, not scheduling."""
+        pre = {s: self.tables.num_blocks(s) for s in active}
+        dirty_before = self._tables_dirty
+        for s in active:
+            req = self.slot_req[s]
+            span = min(n, int(rem[s]) + 1)
+            target = min(int(self.pos[s]) + span, self.scfg.max_len)
+            try:
+                if self.tables.ensure_capacity(s, target, req.uid):
+                    self._tables_dirty = True
+            except PoolExhausted:
+                ps = self.pool.page_size
+                for t in active:
+                    self.tables.trim(t, pre[t] * ps)
+                self._tables_dirty = dirty_before
+                return False
+        return True
+
+    def _step_window(self, active: List[int]) -> Optional[int]:
+        """Up to ``sync_every`` decode ticks in one ``lax.scan`` dispatch.
+        Feed, positions, PRNG key, stop flags and emitted tokens live on
+        device (``lm.decode_loop``); the host uploads one feed vector and
+        drains one token buffer.  Returns #active slots, or ``None`` when
+        the paged pool cannot cover the worst-case window (caller falls
+        back to a per-tick step)."""
+        b = self.scfg.slots
+        feed = np.zeros((b,), np.int32)
+        live = np.zeros((b,), bool)
+        rem = np.zeros((b,), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            feed[s] = (req.prompt + req.output)[req._cursor]  # type: ignore[attr-defined]
+            live[s] = True
+            limit = req.max_new_tokens or self.scfg.max_new_tokens
+            rem[s] = limit - len(req.output)
+        # clamp the window to the slots' host-known tick spans — token
+        # allowance AND max_len headroom — by halving (not to the exact
+        # span: every distinct length is its own scan trace, so lengths are
+        # bounded to ~log2(sync_every) variants).  Guaranteed-dead tail
+        # iterations would burn full-batch decode steps and delay
+        # boundary-time admission of queued work.
+        n = self.sync_every
+        max_span = max(
+            min(int(rem[s]), self.scfg.max_len - int(self.pos[s]))
+            for s in active
+        )
+        while n // 2 >= max_span:
+            n //= 2
+        if self.tables is not None and not self._grant_window(active, n, rem):
+            return None
+        loop = self._loop_fns.get(n)
+        if loop is None:
+            loop = self._loop_fns[n] = _decode_loop_fn(
+                self.cfg, self.scfg.temperature, n, self.scfg.eos_id,
+                self.scfg.max_len,
+            )
+        toks, emitted, self._key, self.cache = loop(
+            self.params, self._fresh_cache(), jnp.asarray(feed),
+            jnp.asarray(self.pos), self._key, jnp.asarray(live),
+            jnp.asarray(rem),
+        )
+        self.decode_windows += 1
+        toks = np.asarray(toks)
+        emitted = np.asarray(emitted)
+        # drain: replay each in-window tick through the same host-side
+        # bookkeeping the per-tick path runs, so Request state, tick
+        # accounting and EOS recycling stay byte-for-byte identical
+        for t in range(n):
+            row = emitted[t]
+            if not row.any():
+                break  # every slot stopped; later rows are all-False too
+            for s in active:
+                if not row[s]:
+                    continue
+                req = self.slot_req[s]
+                self.pos[s] += 1
+                req._cursor += 1  # type: ignore[attr-defined]
+                self._emit_token(s, req, int(toks[t, s]))
+            self.tick_tokens.append(int(row.sum()))
+            self.steps_run += 1
+        if self.tables is not None:
+            # return unused grow-ahead pages so boundary-time admission /
+            # preemption sees the same pool a per-tick engine would
+            for s in active:
+                if self.slot_req[s] is not None:
+                    if self.tables.trim(s, int(self.pos[s]) + 1):
+                        self._tables_dirty = True
+        return len(active)
+
+    # -- per-tick paths -------------------------------------------------
+    def _step_replay(self, active: List[int]) -> int:
         feed = np.zeros((self.scfg.slots,), np.int32)
+        live = np.zeros((self.scfg.slots,), bool)
         full_len: Dict[int, int] = {}
         for s in active:
             req = self.slot_req[s]
@@ -414,14 +643,12 @@ class ServingEngine:
             feed[s] = (
                 req.prompt[cur] if cur < np_ else req.output[cur - np_]
             )
-        logits, self.cache = self._step(
+            live[s] = True
+        next_tok, self.cache, self._key = self._step(
             self.params, self._fresh_cache(), jnp.asarray(feed),
-            jnp.asarray(self.pos)
+            jnp.asarray(self.pos), self._key, jnp.asarray(live),
         )
-        self._key, sub = jax.random.split(self._key)
-        next_tok = np.asarray(
-            sample(logits, sub, temperature=self.scfg.temperature)
-        )
+        next_tok = np.asarray(next_tok)
         for s in active:
             req = self.slot_req[s]
             cur = req._cursor  # type: ignore[attr-defined]
@@ -451,17 +678,16 @@ class ServingEngine:
 
         if gen:
             feed = np.zeros((self.scfg.slots,), np.int32)
+            live = np.zeros((self.scfg.slots,), bool)
             for s in gen:
                 req = self.slot_req[s]
                 feed[s] = req.output[-1]
-            logits, self.cache = self._step(
+                live[s] = True
+            next_tok, self.cache, self._key = self._step(
                 self.params, self._fresh_cache(), jnp.asarray(feed),
-                jnp.asarray(self.pos)
+                jnp.asarray(self.pos), self._key, jnp.asarray(live),
             )
-            self._key, sub = jax.random.split(self._key)
-            next_tok = np.asarray(
-                sample(logits, sub, temperature=self.scfg.temperature)
-            )
+            next_tok = np.asarray(next_tok)
             for s in gen:
                 req = self.slot_req[s]
                 self.pos[s] += 1
@@ -478,14 +704,11 @@ class ServingEngine:
                 replay = (req.prompt + req.output)[cur : cur + n]
                 toks[s, :n] = replay
                 lens[s] = n
-            plogits, self.cache = self._prefill(
+            ptok, self.cache, self._key = self._prefill(
                 self.params, self._fresh_cache(), jnp.asarray(toks),
-                jnp.asarray(self.pos), jnp.asarray(lens)
+                jnp.asarray(self.pos), jnp.asarray(lens), self._key,
             )
-            self._key, sub = jax.random.split(self._key)
-            ptok = np.asarray(
-                sample(plogits, sub, temperature=self.scfg.temperature)
-            )
+            ptok = np.asarray(ptok)
             for s, n in chunk_lens.items():
                 req = self.slot_req[s]
                 self.pos[s] += n

@@ -144,6 +144,21 @@ class SlotTables:
             self._np[slot, len(self._blocks[slot]) - 1] = blk
         return grow
 
+    def trim(self, slot: int, num_tokens: int) -> int:
+        """Release ``slot``'s blocks beyond those holding ``num_tokens``
+        tokens (the multi-step engine's grow-ahead give-back: unused
+        worst-case pages return to the pool at the sync boundary).  Returns
+        the number of blocks released."""
+        need = blocks_for(num_tokens, self.pool.page_size) if num_tokens > 0 else 0
+        blks = self._blocks[slot]
+        extra = blks[need:]
+        if not extra:
+            return 0
+        self.pool.release(extra)
+        del blks[need:]
+        self._np[slot, need:] = 0
+        return len(extra)
+
     def release_slot(self, slot: int) -> int:
         """Return all of ``slot``'s blocks to the pool (EOS / preemption)."""
         blks = self._blocks[slot]

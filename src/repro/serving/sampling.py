@@ -1,7 +1,14 @@
-"""Token sampling: greedy / temperature / top-k / top-p, batched."""
+"""Token sampling: greedy / temperature / top-k / top-p, batched.
+
+:func:`sample` is the pure logits->tokens transform; :func:`sample_step`
+is the engine-facing fused form that also owns the PRNG-key carry so the
+whole thing can live *inside* the jit'd decode step (the engine never
+downloads logits — sampled token ids are the only thing that crosses the
+device boundary).
+"""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,3 +35,37 @@ def sample(
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_step(
+    logits: jax.Array,  # (B, V) f32
+    key,
+    temperature: float = 0.0,
+    top_k: Optional[int] = None,
+    top_p: Optional[float] = None,
+    gate=None,  # optional () bool: when False the key is left unadvanced
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused sampling step: ``(tokens, new_key)`` with the key split folded
+    in, so the caller can jit the model step and the sampler as one program
+    and thread the key as a device-resident carry.
+
+    Greedy fast path: at ``temperature <= 0`` the key is dead weight — no
+    ``jax.random.split`` is traced and the key passes through untouched
+    (deterministic benches pay zero PRNG cost).
+
+    ``gate`` serves the multi-step decode loop: a scan iteration where every
+    slot has already stopped must not advance the key, or the surviving key
+    stream would diverge from an engine that never ran those ticks.  (This
+    keeps ``temperature > 0`` streams bit-equal to per-tick stepping when
+    the window covers the same ticks per-tick would run; admission deferred
+    to a sync boundary can still shift the stream — see
+    ``lm.decode_loop``.)
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+    new_key, sub = jax.random.split(key)
+    if gate is not None:
+        new_key = jnp.where(gate, new_key, key)
+    tok = sample(logits, sub, temperature=temperature, top_k=top_k,
+                 top_p=top_p)
+    return tok, new_key

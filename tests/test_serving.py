@@ -9,6 +9,15 @@ Covers the ISSUE-2 acceptance surface:
 * output equivalence between contiguous and paged cache modes across
   GQA / MQA / sliding-window / hybrid configs;
 * the paged_attention kernel against its pure-JAX oracle.
+
+Plus the ISSUE-4 device-resident decode loop:
+
+* byte-identical outputs vs the per-tick engine across paged/contiguous,
+  sync_every values, EOS mid-window, slots finishing mid-window, a pool
+  too tight for the grow-ahead grant (per-tick fallback), preemption at a
+  sync boundary, temperature sampling, and hybrid (recurrent-state) archs;
+* the donation contract: the jit'd step consumes its cache argument;
+* the cached device block-table tensor: re-uploaded only on mutation.
 """
 import dataclasses
 
@@ -111,6 +120,18 @@ class TestSlotTables:
         assert st.release_slot(0) == 4
         assert pool.free == 4
         assert not st.tables().any()
+
+    def test_trim_releases_tail_only(self):
+        pool = BlockPool(6, 4, base=1)
+        st = SlotTables(pool, slots=1, max_pages=6)
+        st.ensure_capacity(0, 20)  # 5 blocks (grow-ahead grant)
+        kept = st.blocks(0)[:2]
+        assert st.trim(0, 7) == 3  # 7 tokens -> 2 blocks
+        assert st.blocks(0) == kept  # prefix untouched, order preserved
+        assert pool.free == 4
+        assert not st.tables()[0, 2:].any()
+        assert st.trim(0, 7) == 0  # idempotent
+        assert st.trim(0, 0) == 2  # trim-to-zero == full release
 
 
 # ---------------------------------------------------------------------------
@@ -236,6 +257,183 @@ class TestScheduler:
             slots=1, max_len=16, max_new_tokens=2))
         assert eng.cache_mode == "contiguous"
         assert eng.cache.layout == "contiguous"
+
+
+# ---------------------------------------------------------------------------
+# Device-resident multi-step decode loop (ISSUE-4)
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(cfg, params, prompts, **scfg_kw):
+    eng = ServingEngine(cfg, params, ServeConfig(**scfg_kw))
+    reqs = [eng.submit(p) for p in prompts]
+    eng.run()
+    assert all(r.done for r in reqs)
+    return [r.output for r in reqs], reqs, eng
+
+
+class TestMultiStepDecode:
+    """The multi-step window is an *optimization*, never a behavior change:
+    every test drives the same requests through the per-tick engine and the
+    device-resident loop and asserts byte-identical outputs."""
+
+    def _prompts(self, cfg, rng, sizes=(6, 3, 9, 2)):
+        return [rng.integers(0, cfg.vocab_size, size=n).tolist() for n in sizes]
+
+    @pytest.mark.parametrize("cache", ["paged", "contiguous"])
+    @pytest.mark.parametrize("sync", [4, 16])
+    def test_matches_per_tick(self, cache, sync, rng):
+        # max_new=5 is deliberately not a multiple of sync: slots finish
+        # mid-window and the drained tail must line up with per-tick
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = self._prompts(cfg, rng)
+        base = dict(slots=2, max_len=48, max_new_tokens=5, cache=cache,
+                    page_size=16)
+        ref, ref_reqs, _ = _run_engine(cfg, params, prompts, **base)
+        out, reqs, eng = _run_engine(cfg, params, prompts,
+                                     sync_every=sync, **base)
+        assert out == ref
+        assert eng.decode_windows > 0  # the loop actually engaged
+        assert ([r.ttft_ticks for r in reqs]
+                == [r.ttft_ticks for r in ref_reqs])
+        if cache == "paged":
+            assert eng.pool.in_use == 0  # grow-ahead pages all recycled
+
+    def test_eos_mid_window(self, rng):
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = self._prompts(cfg, rng)
+        # temperature makes the greedy-degenerate streams diverse so the
+        # chosen EOS token fires mid-generation, not on the first token
+        base = dict(slots=2, max_len=48, max_new_tokens=8, page_size=16,
+                    temperature=0.9, seed=11)
+        free, _, _ = _run_engine(cfg, params, prompts, **base)
+        eos = free[0][3]  # a token the model actually emits mid-stream
+        ref, _, _ = _run_engine(cfg, params, prompts, eos_id=eos, **base)
+        out, _, eng = _run_engine(cfg, params, prompts, eos_id=eos,
+                                  sync_every=8, **base)
+        assert out == ref
+        assert eng.decode_windows > 0
+        # EOS genuinely cut at least one stream short of its token limit
+        assert any(len(o) < 8 for o in out)
+
+    def test_temperature_matches_per_tick(self, rng):
+        """The PRNG-key carry advances exactly like the per-tick engine's
+        when the window covers the same ticks per-tick would run (queue
+        empty, so no admission can be deferred past a mid-window finish —
+        the one case where the key streams legitimately diverge, see
+        lm.decode_loop).  temperature=8.0 so streams are genuinely diverse:
+        random-init logits are peaked enough that lower temperatures emit
+        constant streams, which would mask a shifted subkey."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = self._prompts(cfg, rng, sizes=(6, 3))  # <= slots: no queue
+        base = dict(slots=2, max_len=48, max_new_tokens=6, page_size=16,
+                    temperature=8.0, seed=3)
+        ref, _, ref_eng = _run_engine(cfg, params, prompts, **base)
+        out, _, eng = _run_engine(cfg, params, prompts, sync_every=4, **base)
+        assert out == ref
+        assert eng.decode_windows > 0
+        # the sampled streams must be diverse enough to catch a shifted
+        # subkey, and the final keys must agree bit for bit
+        assert any(len(set(o)) > 1 for o in out)
+        assert np.array_equal(np.asarray(eng._key), np.asarray(ref_eng._key))
+
+    def test_hybrid_recurrent_state_matches_per_tick(self, rng):
+        """Hybrid (attention + SSM) archs replay prompts and carry
+        recurrent state: dead window iterations must not evolve a stopped
+        slot's SSM state (the live mask inside decode_step)."""
+        cfg = get_config("hymba_1_5b").reduced()
+        params = _params(cfg)
+        prompts = self._prompts(cfg, rng, sizes=(5, 3, 7, 2))
+        base = dict(slots=2, max_len=48, max_new_tokens=5, page_size=16)
+        ref, _, ref_eng = _run_engine(cfg, params, prompts, **base)
+        out, _, eng = _run_engine(cfg, params, prompts, sync_every=4, **base)
+        assert ref_eng.prefill_mode == "replay"  # SSM gates off chunking
+        assert out == ref
+        assert eng.decode_windows > 0
+
+    def test_pool_too_tight_for_grow_ahead_falls_back(self, rng):
+        """The pool exactly fits the per-tick footprint (page_size=1,
+        2 slots x 8-token peak = 16 blocks), so a window whose
+        allowance-clamped ask still includes the dead-iteration write
+        (rem + 1) over-asks by one block per slot: the all-or-nothing
+        grant must fail, fall back to per-tick stepping (never preempt),
+        and still finish with per-tick-identical outputs.  Once the
+        remaining allowance clamps the window to exactly fit, a window may
+        legitimately run — fallback and windows coexist."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = [rng.integers(0, cfg.vocab_size, size=3).tolist()
+                   for _ in range(2)]
+        base = dict(slots=2, max_len=16, max_new_tokens=6, page_size=1,
+                    num_blocks=16)
+        ref, _, _ = _run_engine(cfg, params, prompts, **base)
+        out, _, eng = _run_engine(cfg, params, prompts, sync_every=8, **base)
+        assert out == ref
+        assert eng.window_fallbacks > 0  # the 8-wide ask never fit
+        assert eng.preemptions == 0  # the grant degrades, it doesn't evict
+        assert eng.pool.in_use == 0
+
+    def test_preemption_at_sync_boundary(self, rng):
+        """Pool pressure mid-generation with the multi-step engine: growth
+        (and so preemption + recompute resume) happens at sync boundaries
+        and stays lossless."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompt1 = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        prompt2 = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        ref1, _, _ = _run_engine(cfg, params, [prompt1], slots=1, max_len=16,
+                                 max_new_tokens=6, page_size=4)
+        ref2, _, _ = _run_engine(cfg, params, [prompt2], slots=1, max_len=16,
+                                 max_new_tokens=6, page_size=4)
+        out, reqs, eng = _run_engine(
+            cfg, params, [prompt1, prompt2], slots=2, max_len=16,
+            max_new_tokens=6, page_size=4, num_blocks=4, sync_every=4)
+        assert eng.preemptions >= 1
+        assert reqs[1].preemptions >= 1 and reqs[0].preemptions == 0
+        assert out == [ref1[0], ref2[0]]  # recompute resume is lossless
+        assert eng.pool.in_use == 0
+
+    def test_step_donates_cache(self, rng):
+        """The jit'd steps consume their cache argument (donate_argnums):
+        after a tick every pre-step buffer is invalidated — XLA reused it
+        in place instead of copying the KV cache."""
+        cfg = _qwen()
+        eng = ServingEngine(cfg, _params(cfg), ServeConfig(
+            slots=1, max_len=32, max_new_tokens=4))
+        eng.submit(rng.integers(0, cfg.vocab_size, size=3).tolist())
+        before = jax.tree.leaves((eng.cache.prefix, eng.cache.rest))
+        eng.step()
+        assert all(leaf.is_deleted() for leaf in before)
+        after = jax.tree.leaves((eng.cache.prefix, eng.cache.rest))
+        assert not any(leaf.is_deleted() for leaf in after)
+
+    def test_device_table_uploaded_only_on_mutation(self, rng):
+        """One block covers the whole request, so after admission no tick
+        mutates the tables: the engine must reuse the cached device tensor
+        for the entire run instead of re-uploading it per tick."""
+        cfg = _qwen()
+        eng = ServingEngine(cfg, _params(cfg), ServeConfig(
+            slots=1, max_len=32, max_new_tokens=6, page_size=32))
+        eng.submit(rng.integers(0, cfg.vocab_size, size=3).tolist())
+        eng.run()
+        assert eng.steps_run > 3  # several ticks actually ran
+        assert eng.table_uploads == 1  # exactly the admission upload
+
+    def test_greedy_never_splits_key(self, rng):
+        """temperature <= 0 skips jax.random.split entirely: the PRNG key
+        comes back from every fused step bit-identical."""
+        cfg = _qwen()
+        eng = ServingEngine(cfg, _params(cfg), ServeConfig(
+            slots=2, max_len=32, max_new_tokens=4, seed=7))
+        for n in (5, 3):
+            eng.submit(rng.integers(0, cfg.vocab_size, size=n).tolist())
+        eng.run()
+        assert np.array_equal(
+            np.asarray(eng._key), np.asarray(jax.random.PRNGKey(7))
+        )
 
 
 # ---------------------------------------------------------------------------

@@ -16,10 +16,27 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q -W 'error::DeprecationWarning:repro\.serving' "$@"
 
 # Exercise the serving path end-to-end on a tiny config: engine + paged
-# cache + scheduler + both cache layouts asserting identical outputs, plus
-# the chunked-prefill fast path (asserts chunked prefill finishes within
+# cache + scheduler + both cache layouts asserting identical outputs, the
+# chunked-prefill fast path (asserts chunked prefill finishes within
 # ceil(prompt/chunk)+gen engine ticks where replay needs prompt+gen, with
-# byte-identical tokens).  --json records the perf trajectory row.
+# byte-identical tokens), and the device-resident multi-step decode loop
+# (byte-identical outputs across sync_every in {1,4,16} and both layouts).
+# --json records the perf trajectory row; --compare gates fresh derived
+# metrics against the committed baseline (>20% regression fails CI).  The
+# baseline comes from HEAD, not the working tree — a previous local run
+# leaves its own (noisy) numbers on disk, and gating against those would
+# drift the gate away from the committed trajectory; the working-tree file
+# is only the fallback outside a git checkout.
+baseline="$(mktemp)"
+if ! git show HEAD:BENCH_serving.json > "$baseline" 2>/dev/null || ! [ -s "$baseline" ]; then
+  if [ -s BENCH_serving.json ]; then
+    cp BENCH_serving.json "$baseline"
+  else
+    rm -f "$baseline"
+    baseline=""
+  fi
+fi
 rm -f BENCH_serving.json  # a stale record must not satisfy the check below
-python -m benchmarks.run --only serving --smoke --json
+python -m benchmarks.run --only serving --smoke --json \
+  ${baseline:+--compare "$baseline"}
 test -s BENCH_serving.json  # the trajectory record must actually land
