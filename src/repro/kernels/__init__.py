@@ -1,5 +1,9 @@
 # Tile-DSL kernels (paper §5 workloads) + jit'd wrappers + jnp oracles.
+import importlib
+import pkgutil
+
 from . import (
+    attention_core,
     dequant_matmul,
     flash_attention,
     linear_attention,
@@ -14,19 +18,25 @@ from .dequant_matmul import dequant_matmul_program
 from .flash_attention import flash_attention_program
 from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program, tune_matmul
-from .mla import mla_program
+from .mla import mla_paged_program, mla_prefill_program, mla_program
 from .paged_attention import paged_attention_program
 from .prefill_attention import prefill_attention_program
 
-_PARITY_MODULES = (
-    matmul,
-    flash_attention,
-    mla,
-    paged_attention,
-    prefill_attention,
-    dequant_matmul,
-    linear_attention,
-)
+
+def parity_modules():
+    """Every module in ``repro.kernels`` that declares ``PARITY_CASES``.
+
+    Auto-discovered from the package contents (no hand-kept list): a new
+    kernel module is covered by the backend-parity suite the moment it
+    defines ``PARITY_CASES`` — coverage by construction.  Sorted by module
+    name so the suite's parametrization order is deterministic.
+    """
+    mods = []
+    for info in pkgutil.iter_modules(__path__):
+        mod = importlib.import_module(f"{__name__}.{info.name}")
+        if hasattr(mod, "PARITY_CASES"):
+            mods.append(mod)
+    return sorted(mods, key=lambda m: m.__name__)
 
 
 def parity_programs():
@@ -37,7 +47,7 @@ def parity_programs():
     both ``target="pallas"`` (interpret mode) and ``target="reference"`` and
     asserts numerical agreement.
     """
-    for mod in _PARITY_MODULES:
+    for mod in parity_modules():
         yield from mod.parity_programs()
 
 
@@ -49,7 +59,7 @@ def parity_inputs(name, program, rng):
     ``parity_inputs(name, program, rng)`` hook; everything else gets
     unconstrained random tensors from the parity suite itself.
     """
-    for mod in _PARITY_MODULES:
+    for mod in parity_modules():
         hook = getattr(mod, "parity_inputs", None)
         if hook is not None and name in dict(mod.PARITY_CASES):
             return hook(name, program, rng)
@@ -59,15 +69,19 @@ def parity_inputs(name, program, rng):
 __all__ = [
     "ops",
     "ref",
+    "attention_core",
     "matmul_program",
     "tune_matmul",
     "flash_attention_program",
     "mla_program",
+    "mla_paged_program",
+    "mla_prefill_program",
     "paged_attention_program",
     "prefill_attention_program",
     "dequant_matmul_program",
     "chunk_state_program",
     "chunk_scan_program",
+    "parity_modules",
     "parity_programs",
     "parity_inputs",
 ]

@@ -1,10 +1,11 @@
 """FlashAttention in the tile DSL (paper Table 3 / Fig. 12).
 
 Online-softmax attention with the KV sequence streamed through the grid
-pipeline.  GQA is expressed through the head index map (each q-head block
-reads its kv group); causality through a masked elementwise update — the
-same dataflow as FlashAttention-2, with all scheduling (pipelining of the
-K/V windows, layouts, vectorization) inferred.
+pipeline, composed from the shared attention core (attention_core.py):
+a contiguous KV source, per-head Q blocks (GQA through the head index
+map — each q-head block reads its kv group), and a causal mask.  All
+scheduling (pipelining of the K/V windows, layouts, vectorization) is
+inferred.
 
 TPU adaptation notes: the m/l running statistics live in fragment buffers
 (VMEM scratch persisting over the `arbitrary` KV axis) instead of registers,
@@ -17,6 +18,8 @@ from typing import Optional
 
 from repro.core import TileProgram
 from repro.core import lang as T
+
+from . import attention_core as AC
 
 
 def flash_attention_program(
@@ -53,57 +56,30 @@ def flash_attention_program(
             K_shared = T.alloc_shared((block_N, head_dim), dtype)
             V_shared = T.alloc_shared((block_N, head_dim), dtype)
             acc_s = T.alloc_fragment((block_M, block_N), accum_dtype)
-            acc_o = T.alloc_fragment((block_M, head_dim), accum_dtype)
-            scores_max = T.alloc_fragment((block_M,), accum_dtype)
-            scores_max_prev = T.alloc_fragment((block_M,), accum_dtype)
-            scores_scale = T.alloc_fragment((block_M,), accum_dtype)
-            scores_sum = T.alloc_fragment((block_M,), accum_dtype)
-            logsum = T.alloc_fragment((block_M,), accum_dtype)
+            ons = AC.OnlineSoftmax(block_M, head_dim, scale, accum_dtype)
 
             kv_head = by // group
-
             T.copy(Q[bz, by, bx * block_M, 0], Q_shared)
-            T.fill(acc_o, 0.0)
-            T.fill(logsum, 0.0)
-            T.fill(scores_max, -T.infinity(accum_dtype))
 
-            for k in T.Pipelined(T.ceildiv(seq_kv, block_N), num_stages=num_stages):
+            def load_kv(k):
                 T.copy(K[bz, kv_head, k * block_N, 0], K_shared)
                 T.copy(V[bz, kv_head, k * block_N, 0], V_shared)
-                T.clear(acc_s)
-                T.gemm(Q_shared, K_shared, acc_s, transpose_B=True)
-                if causal:
-                    for i, j in T.Parallel(block_M, block_N):
-                        acc_s[i, j] = T.if_then_else(
-                            (bx * block_M + i) + (seq_kv - seq_q) >= (k * block_N + j),
-                            acc_s[i, j],
-                            -T.infinity(accum_dtype),
-                        )
-                T.copy(scores_max, scores_max_prev)
-                T.reduce_max(acc_s, scores_max, dim=1, clear=False)
-                # Clamp the running max before differencing: fully-masked
-                # causal blocks leave it at -inf, and (-inf) - (-inf) = nan.
-                neg_clamp = -1048576.0  # -2^20; exp2 underflows long before
-                for i in T.Parallel(block_M):
-                    scores_scale[i] = T.exp2(
-                        T.maximum(scores_max_prev[i], neg_clamp) * scale
-                        - T.maximum(scores_max[i], neg_clamp) * scale
-                    )
-                for i, j in T.Parallel(block_M, block_N):
-                    acc_s[i, j] = T.exp2(
-                        acc_s[i, j] * scale
-                        - T.maximum(scores_max[i], neg_clamp) * scale
-                    )
-                T.reduce_sum(acc_s, scores_sum, dim=1)
-                for i in T.Parallel(block_M):
-                    logsum[i] = logsum[i] * scores_scale[i] + scores_sum[i]
-                for i, j in T.Parallel(block_M, head_dim):
-                    acc_o[i, j] = acc_o[i, j] * scores_scale[i]
-                T.gemm(acc_s, V_shared, acc_o)
+                return K_shared, V_shared
 
-            for i, j in T.Parallel(block_M, head_dim):
-                acc_o[i, j] = acc_o[i, j] / logsum[i]
-            T.copy(acc_o, Output[bz, by, bx * block_M, 0])
+            def mask(k):
+                if not causal:
+                    return None
+                return AC.causal(
+                    lambda i: (bx * block_M + i) + (seq_kv - seq_q),
+                    lambda j: k * block_N + j,
+                )
+
+            AC.attend(
+                ons, acc_s, block_N, T.ceildiv(seq_kv, block_N), load_kv,
+                lambda s, ks, k: AC.scores(s, Q_shared, ks), mask,
+                num_stages=num_stages,
+            )
+            ons.finalize(Output[bz, by, bx * block_M, 0])
 
     return FlashAttn
 

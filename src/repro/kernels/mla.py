@@ -1,9 +1,24 @@
-"""FlashMLA in the tile DSL — a near-verbatim port of the paper's Fig. 18.
+"""FlashMLA in the tile DSL — the paper's Fig. 18 composed from the shared
+attention core, plus its serving variants.
 
 Multi-head Latent Attention (DeepSeek-V2): all query heads of a group attend
 to one shared latent KV (dim) plus a rotary part (pe_dim); V is the latent
 itself.  The paper reports this kernel at 98% of hand-optimized FlashMLA in
 ~70 lines — the headline usability result we reproduce here.
+
+Three programs share the template (attention_core.py), differing only in
+composition points:
+
+* :func:`mla_program` — contiguous KV window, block-max softmax (the
+  paper's formulation), no mask: the Fig. 18 port.
+* :func:`mla_paged_program` — the **paged MLA decode** kernel: latent and
+  rope pages gathered through a block table (the same scalar-prefetch path
+  as paged_attention.py), grid over slots, ragged live-length mask.  This
+  is what admits MLA models to the vLLM-style serving cache.
+* :func:`mla_prefill_program` — **MLA chunked prefill**: a (slots, chunk)
+  block of prompt latents attends prior latent pages plus itself causally
+  and writes its own latent/rope pages from inside the kernel
+  (table-directed output BlockSpecs, as in prefill_attention.py).
 """
 
 import math
@@ -11,6 +26,8 @@ from typing import Optional
 
 from repro.core import TileProgram
 from repro.core import lang as T
+
+from . import attention_core as AC
 
 
 def mla_program(
@@ -33,7 +50,7 @@ def mla_program(
     kv_group_num = heads // kv_head_num
     VALID_BLOCK_H = min(block_H, kv_group_num)
     if heads % VALID_BLOCK_H:
-        raise ValueError("heads must divide the valid head block")
+        raise ValueError("the valid head block must divide heads")
     scale = (
         sm_scale if sm_scale is not None else 1.0 / math.sqrt(dim + pe_dim)
     ) * 1.44269504  # log2(e)
@@ -53,12 +70,11 @@ def mla_program(
             KV_shared = T.alloc_shared((block_N, dim), dtype)
             K_pe_shared = T.alloc_shared((block_N, pe_dim), dtype)
             acc_s = T.alloc_fragment((VALID_BLOCK_H, block_N), accum_dtype)
-            acc_o = T.alloc_fragment((VALID_BLOCK_H, dim), accum_dtype)
-            scores_max = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
-            scores_max_prev = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
-            scores_scale = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
-            scores_sum = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
-            logsum = T.alloc_fragment((VALID_BLOCK_H,), accum_dtype)
+            # the paper's Fig. 18 formulation: per-block max (not running),
+            # probabilities staged through shared memory for the P·V GEMM
+            ons = AC.OnlineSoftmax(VALID_BLOCK_H, dim, scale, accum_dtype,
+                                   running_max=False, clamp_current=False,
+                                   shared_scores=S_shared)
 
             cur_kv_head = by // (kv_group_num // VALID_BLOCK_H)
             if swizzle:
@@ -68,12 +84,8 @@ def mla_program(
             T.copy(
                 Q_pe[bx, by * VALID_BLOCK_H : (by + 1) * VALID_BLOCK_H, :], Q_pe_shared
             )
-            T.fill(acc_o, 0)
-            T.fill(logsum, 0)
-            T.fill(scores_max, -T.infinity(accum_dtype))
 
-            loop_range = T.ceildiv(seqlen_kv, block_N)
-            for k in T.Pipelined(loop_range, num_stages=num_stages):
+            def load_kv(k):
                 T.copy(
                     KV[bx, k * block_N : (k + 1) * block_N, cur_kv_head, :], KV_shared
                 )
@@ -81,46 +93,264 @@ def mla_program(
                     K_pe[bx, k * block_N : (k + 1) * block_N, cur_kv_head, :],
                     K_pe_shared,
                 )
-                T.clear(acc_s)
-                T.gemm(Q_shared, KV_shared, acc_s, transpose_B=True)
-                T.gemm(Q_pe_shared, K_pe_shared, acc_s, transpose_B=True)
-                T.copy(scores_max, scores_max_prev)
-                T.fill(scores_max, -T.infinity(accum_dtype))
-                T.reduce_max(acc_s, scores_max, dim=1, clear=False)
-                neg_clamp = -1048576.0
-                for i in T.Parallel(VALID_BLOCK_H):
-                    scores_scale[i] = T.exp2(
-                        T.maximum(scores_max_prev[i], neg_clamp) * scale
-                        - scores_max[i] * scale
-                    )
-                for i, j in T.Parallel(VALID_BLOCK_H, block_N):
-                    acc_s[i, j] = T.exp2(acc_s[i, j] * scale - scores_max[i] * scale)
-                T.reduce_sum(acc_s, scores_sum, dim=1)
-                T.copy(acc_s, S_shared)
-                for i in T.Parallel(VALID_BLOCK_H):
-                    logsum[i] = logsum[i] * scores_scale[i] + scores_sum[i]
-                for i, j in T.Parallel(VALID_BLOCK_H, dim):
-                    acc_o[i, j] = acc_o[i, j] * scores_scale[i]
-                T.gemm(S_shared, KV_shared, acc_o)
+                return KV_shared, KV_shared  # V is the latent itself
 
-            for i, j in T.Parallel(VALID_BLOCK_H, dim):
-                acc_o[i, j] = acc_o[i, j] / logsum[i]
-            T.copy(acc_o, Output[bx, by * VALID_BLOCK_H : (by + 1) * VALID_BLOCK_H, :])
+            AC.attend(
+                ons, acc_s, block_N, T.ceildiv(seqlen_kv, block_N), load_kv,
+                lambda s, ks, k: AC.scores(
+                    s, Q_shared, ks, extra=[(Q_pe_shared, K_pe_shared)]
+                ),
+                num_stages=num_stages,
+            )
+            ons.finalize(Output[bx, by * VALID_BLOCK_H : (by + 1) * VALID_BLOCK_H, :])
 
     return FlashMLA
 
 
+def mla_paged_program(
+    slots: int,
+    heads: int,
+    dim: int,
+    pe_dim: int,
+    page_size: int,
+    max_pages: int,
+    num_pages: int,
+    block_H: int = 64,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+) -> TileProgram:
+    """Paged MLA decode: one latent query row block per slot, latent+rope
+    pages gathered through the block table (scalar prefetch), ragged mask
+    against each slot's live length.  The latent is shared by every query
+    head, so there is no kv-head grid axis — the pool is
+    ``(num_pages, page_size, dim)``."""
+    bh = min(block_H, heads)
+    if heads % bh:
+        raise ValueError("the head block must divide heads")
+    scale = (
+        sm_scale if sm_scale is not None else 1.0 / math.sqrt(dim + pe_dim)
+    ) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def PagedMLA(
+        Tables: T.ScalarTensor((slots, max_pages), "int32"),
+        Lens: T.ScalarTensor((slots,), "int32"),
+        Q: T.Tensor((slots, heads, dim), dtype),
+        Q_pe: T.Tensor((slots, heads, pe_dim), dtype),
+        KVPages: T.Tensor((num_pages, page_size, dim), dtype),
+        KPePages: T.Tensor((num_pages, page_size, pe_dim), dtype),
+        Output: T.Tensor((slots, heads, dim), dtype),
+    ):
+        with T.Kernel(heads // bh, slots) as (by, bz):
+            Q_shared = T.alloc_shared((bh, dim), dtype)
+            Q_pe_shared = T.alloc_shared((bh, pe_dim), dtype)
+            KV_shared = T.alloc_shared((page_size, dim), dtype)
+            K_pe_shared = T.alloc_shared((page_size, pe_dim), dtype)
+            acc_s = T.alloc_fragment((bh, page_size), accum_dtype)
+            # safe_div: empty slots (len 0) divide by the floor -> zeros
+            ons = AC.OnlineSoftmax(bh, dim, scale, accum_dtype, safe_div=True)
+
+            T.copy(Q[bz, by * bh, 0], Q_shared)
+            T.copy(Q_pe[bz, by * bh, 0], Q_pe_shared)
+
+            def load_kv(k):
+                # the paged gather: page index loaded from the block table
+                T.copy(KVPages[Tables[bz, k], 0, 0], KV_shared)
+                T.copy(KPePages[Tables[bz, k], 0, 0], K_pe_shared)
+                return KV_shared, KV_shared  # V is the latent itself
+
+            def mask(k):
+                return AC.ragged(Lens[bz], lambda j: k * page_size + j)
+
+            AC.attend(
+                ons, acc_s, page_size, max_pages, load_kv,
+                lambda s, ks, k: AC.scores(
+                    s, Q_shared, ks, extra=[(Q_pe_shared, K_pe_shared)]
+                ),
+                mask, num_stages=num_stages,
+            )
+            ons.finalize(Output[bz, by * bh, 0])
+
+    return PagedMLA
+
+
+def mla_prefill_program(
+    slots: int,
+    heads: int,
+    dim: int,
+    pe_dim: int,
+    chunk: int,
+    page_size: int,
+    max_pages: int,
+    num_pages: int,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+) -> TileProgram:
+    """MLA chunked prefill: a (slots, chunk) block of prompt latents attends
+    prior latent pages (gathered through the block table) plus itself
+    causally, and writes its own latent/rope pages from inside the kernel.
+
+    Queries are packed chunk-major with their head — row ``i * heads + h``
+    is chunk position ``i`` of head ``h`` — so each grid cell attends a
+    ``(page_size * heads, dim)`` query tile (the prefill_attention packing
+    with the whole head count as the group).  Same contract as
+    prefill_attention.py: ``chunk % page_size == 0``, live ``Starts``
+    page-aligned, dead chunk pages land in the reserved garbage page 0.
+    """
+    if chunk % page_size:
+        raise ValueError("chunk must be a multiple of page_size")
+    cpp = chunk // page_size  # chunk pages written per slot
+    rows = page_size * heads  # query rows per grid cell (chunk-major packed)
+    scale = (
+        sm_scale if sm_scale is not None else 1.0 / math.sqrt(dim + pe_dim)
+    ) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def PrefillMLA(
+        Tables: T.ScalarTensor((slots, max_pages), "int32"),
+        Starts: T.ScalarTensor((slots,), "int32"),  # prior tokens (page-aligned)
+        Lens: T.ScalarTensor((slots,), "int32"),  # live tokens in the chunk
+        Q: T.Tensor((slots, chunk * heads, dim), dtype),
+        Q_pe: T.Tensor((slots, chunk * heads, pe_dim), dtype),
+        CKV: T.Tensor((slots, chunk, dim), dtype),  # the chunk's own latents
+        KPE: T.Tensor((slots, chunk, pe_dim), dtype),
+        KVPages: T.Tensor((num_pages, page_size, dim), dtype),
+        KPePages: T.Tensor((num_pages, page_size, pe_dim), dtype),
+        Output: T.Tensor((slots, chunk * heads, dim), dtype),
+    ):
+        with T.Kernel(cpp, slots) as (bq, bz):
+            Q_shared = T.alloc_shared((rows, dim), dtype)
+            Q_pe_shared = T.alloc_shared((rows, pe_dim), dtype)
+            Kc_shared = T.alloc_shared((chunk, dim), dtype)
+            Pc_shared = T.alloc_shared((chunk, pe_dim), dtype)
+            Kp_shared = T.alloc_shared((page_size, dim), dtype)
+            Pp_shared = T.alloc_shared((page_size, pe_dim), dtype)
+            acc_s = T.alloc_fragment((rows, page_size), accum_dtype)
+            acc_c = T.alloc_fragment((rows, chunk), accum_dtype)
+            # safe_div: rows past Lens are fully masked -> zeros, not nan
+            ons = AC.OnlineSoftmax(rows, dim, scale, accum_dtype,
+                                   safe_div=True)
+
+            T.copy(Q[bz, bq * rows, 0], Q_shared)
+            T.copy(Q_pe[bz, bq * rows, 0], Q_pe_shared)
+            T.copy(CKV[bz, 0, 0], Kc_shared)
+            T.copy(KPE[bz, 0, 0], Pc_shared)
+
+            # ---- prior latents, gathered through the block table ---------
+            def load_prior(kp):
+                T.copy(KVPages[Tables[bz, kp], 0, 0], Kp_shared)
+                T.copy(KPePages[Tables[bz, kp], 0, 0], Pp_shared)
+                return Kp_shared, Kp_shared  # V is the latent itself
+
+            AC.attend(
+                ons, acc_s, page_size, max_pages, load_prior,
+                lambda s, ks, kp: AC.scores(
+                    s, Q_shared, ks, extra=[(Q_pe_shared, Pp_shared)]
+                ),
+                lambda kp: AC.ragged(Starts[bz], lambda j: kp * page_size + j),
+                num_stages=num_stages,
+            )
+
+            # ---- the chunk itself (latents straight from the CKV/KPE
+            # inputs — never read back through the pages we are writing) ---
+            AC.scores(acc_c, Q_shared, Kc_shared, extra=[(Q_pe_shared, Pc_shared)])
+            in_pos = lambda r: bq * page_size + r // heads
+            cmask = AC.both(
+                AC.causal(in_pos, lambda j: j),
+                AC.ragged(Lens[bz], lambda j: j),
+            )
+            ons.update(acc_c, chunk, Kc_shared, cmask)
+
+            ons.finalize(Output[bz, bq * rows, 0])
+
+            # ---- the paged write: this cell's chunk page, placed through
+            # the block table (scalar-prefetch output BlockSpec), same
+            # self-defense as prefill_attention.py: dead chunk pages land
+            # in the reserved garbage page 0, table index clamped ----------
+            live_page = (bq * page_size) < Lens[bz]
+            tidx = T.minimum(Starts[bz] // page_size + bq, max_pages - 1)
+            dst_page = T.if_then_else(live_page, Tables[bz, tidx], 0)
+            T.copy(
+                Kc_shared[bq * page_size : bq * page_size + page_size, :],
+                KVPages[dst_page, 0, 0],
+            )
+            T.copy(
+                Pc_shared[bq * page_size : bq * page_size + page_size, :],
+                KPePages[dst_page, 0, 0],
+            )
+
+    return PrefillMLA
+
+
 # Tiny-shape configs for the pallas-vs-reference parity suite
-# (tests/test_pipeline.py).
+# (tests/test_pipeline.py): the contiguous Fig. 18 kernel, the paged decode
+# kernel (ragged lens through a block table) and the chunked-prefill kernel
+# (multi-page chunk, in-kernel page writes).  The paged cases take their
+# inputs from the override below — tables must hold valid page ids.
 PARITY_CASES = [
     (
         "mla",
         dict(batch=1, heads=4, kv_head_num=1, seqlen_kv=32, dim=16, pe_dim=8,
              block_N=16, block_H=2),
     ),
+    (
+        "mla_paged",
+        dict(slots=3, heads=4, dim=16, pe_dim=8, page_size=16, max_pages=2,
+             num_pages=8, block_H=2),
+    ),
+    (
+        "mla_prefill",
+        dict(slots=2, heads=2, dim=16, pe_dim=8, chunk=32, page_size=16,
+             max_pages=4, num_pages=10),
+    ),
 ]
 
 
 def parity_programs():
     for name, cfg in PARITY_CASES:
-        yield name, mla_program(**cfg)
+        if name == "mla":
+            yield name, mla_program(**cfg)
+        elif name == "mla_paged":
+            yield name, mla_paged_program(**cfg)
+        else:
+            yield name, mla_prefill_program(**cfg)
+
+
+def parity_inputs(name, program, rng):
+    """Valid inputs for the paged parity cases: block tables drawn without
+    replacement (each physical page owned by one slot), ragged lens, and —
+    for the prefill kernel — page-aligned starts leaving room for the
+    chunk's own pages (the serving engine's chunk contract)."""
+    if name == "mla":
+        return None
+    cfg = dict(PARITY_CASES)[name]
+    slots, mp, np_ = cfg["slots"], cfg["max_pages"], cfg["num_pages"]
+    ps = cfg["page_size"]
+    pages = rng.permutation(np_ - 1)[: slots * mp] + 1  # page 0 reserved
+    pages = pages.reshape(slots, mp).astype("int32")
+    if name == "mla_paged":
+        lens = rng.integers(1, mp * ps + 1, size=slots).astype("int32")
+        scalars = [pages, lens]
+        nskip = 2
+    else:
+        chunk = cfg["chunk"]
+        cpp = chunk // ps
+        starts = (rng.integers(0, mp - cpp + 1, size=slots) * ps).astype("int32")
+        # ragged within the last chunk page only (fully-dead chunk pages all
+        # write the shared garbage page 0, whose final contents depend on
+        # backend grid-walk order — same reasoning as prefill_attention.py)
+        lens = rng.integers(chunk - ps + 1, chunk + 1, size=slots).astype("int32")
+        scalars = [pages, starts, lens]
+        nskip = 3
+    args = list(scalars)
+    for p in program.input_params()[nskip:]:
+        args.append(rng.standard_normal(p.shape).astype(p.dtype))
+    # in-out page pools ride after the pure inputs (aliased operands)
+    for p in program.output_params():
+        if p.name in ("KVPages", "KPePages"):
+            args.append(rng.standard_normal(p.shape).astype(p.dtype))
+    return args

@@ -34,7 +34,7 @@ from .dequant_matmul import dequant_matmul_program
 from .flash_attention import flash_attention_program
 from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program
-from .mla import mla_program
+from .mla import mla_paged_program, mla_prefill_program, mla_program
 from .paged_attention import paged_attention_program
 from .prefill_attention import prefill_attention_program
 
@@ -253,6 +253,102 @@ def mla(q, q_pe, kv, k_pe, *, sm_scale=None, backend: Optional[str] = None,
         ),
     )
     return kern(q, q_pe, kv, k_pe)
+
+
+def mla_paged(q_lat, q_pe, ckv_pages, kpe_pages, block_tables, seq_lens, *,
+              sm_scale=None, backend: Optional[str] = None, block_h: int = 64,
+              num_stages: int = 2):
+    """Paged MLA decode: latent queries (B, H, R) against latent/rope page
+    pools gathered through a block table (see kernels/mla.py).  The Pallas
+    path is the scalar-prefetch tile kernel; the XLA path is ref.mla_paged
+    (what the serving engine runs on CPU hosts)."""
+    be = _resolve(backend)
+    if be == "xla":
+        return ref.mla_paged(q_lat, q_pe, ckv_pages, kpe_pages, block_tables,
+                             seq_lens, sm_scale=sm_scale)
+    b, h, r = q_lat.shape
+    pe = q_pe.shape[-1]
+    num_pages, page_size, _ = ckv_pages.shape
+    max_pages = block_tables.shape[1]
+    bh = min(block_h, h)
+    while h % bh:
+        bh -= 1
+    key = ("mla_paged", b, h, r, pe, num_pages, page_size, max_pages,
+           str(q_lat.dtype), bh, num_stages, sm_scale)
+    kern = _cached(
+        key,
+        lambda: mla_paged_program(
+            b, h, r, pe, page_size, max_pages, num_pages, bh,
+            str(q_lat.dtype), "float32", num_stages, sm_scale,
+        ),
+    )
+    return kern(block_tables, seq_lens, q_lat, q_pe, ckv_pages, kpe_pages)
+
+
+def mla_prefill(q_lat, q_pe, ckv_new, kpe_new, ckv_pages, kpe_pages,
+                block_tables, start_lens, chunk_lens, *, sm_scale=None,
+                backend: Optional[str] = None, num_stages: int = 2):
+    """MLA chunked prefill over the latent page pools.
+
+    ``q_lat``/``q_pe`` are the chunk's absorbed queries (B, H, C, ·);
+    ``ckv_new``/``kpe_new`` (B, C, ·) the chunk's own latents;
+    ``start_lens`` (B,) prior resident tokens (the chunk's write offset)
+    and ``chunk_lens`` (B,) the live tokens within the chunk.  Returns
+    ``(out, ckv_pages', kpe_pages')`` — the chunk's latents are written
+    into the pool pages through the block table, dead positions landing in
+    the reserved garbage page 0.  Same contract split as
+    :func:`prefill_attention`: the Pallas tile kernel writes pages from
+    inside the kernel and requires chunk-aligned starts; the XLA path is
+    the ref.mla_prefill oracle plus an explicit masked scatter.
+    """
+    be = _resolve(backend)
+    b, h, chunk, r = q_lat.shape
+    pe = q_pe.shape[-1]
+    num_pages, page_size, _ = ckv_pages.shape
+    max_pages = block_tables.shape[1]
+    if be != "xla" and chunk % page_size == 0 \
+            and chunk // page_size <= max_pages:
+        key = ("mla_prefill", b, h, r, pe, num_pages, page_size, max_pages,
+               chunk, str(q_lat.dtype), num_stages, sm_scale)
+        kern = _cached(
+            key,
+            lambda: mla_prefill_program(
+                b, h, r, pe, chunk, page_size, max_pages, num_pages,
+                str(q_lat.dtype), "float32", num_stages, sm_scale,
+            ),
+        )
+        # pack queries chunk-major with their head: row = i*heads + h
+        qp = q_lat.transpose(0, 2, 1, 3).reshape(b, chunk * h, r)
+        qpep = q_pe.transpose(0, 2, 1, 3).reshape(b, chunk * h, pe)
+        ckv_p, kpe_p, out = kern(
+            block_tables, start_lens, chunk_lens, qp, qpep, ckv_new, kpe_new,
+            ckv_pages, kpe_pages,
+        )
+        out = out.reshape(b, chunk, h, r).transpose(0, 2, 1, 3)
+        return out, ckv_p, kpe_p
+
+    # ---- XLA path: masked scatter + gather through the table -------------
+    pos = start_lens[:, None].astype(jnp.int32) + jnp.arange(chunk, dtype=jnp.int32)
+    logical = jnp.clip(pos // page_size, 0, max_pages - 1)
+    phys = jnp.take_along_axis(block_tables, logical, axis=1)  # (B, C)
+    valid = jnp.arange(chunk)[None, :] < chunk_lens[:, None]
+    phys = jnp.where(valid, phys, 0)  # dead tail -> reserved garbage page
+    off = pos % page_size
+    ckv_pages, kpe_pages = jnp.asarray(ckv_pages), jnp.asarray(kpe_pages)
+    pdt = ckv_pages.dtype
+    ckv_p = ckv_pages.at[phys, off].set(jnp.asarray(ckv_new).astype(pdt))
+    kpe_p = kpe_pages.at[phys, off].set(jnp.asarray(kpe_new).astype(pdt))
+
+    s_total = max_pages * page_size
+    si = jnp.arange(s_total, dtype=jnp.int32)
+    ctx_pos = jnp.where(si[None, :] < start_lens[:, None], si[None, :], -1)
+    out = ref.mla_prefill(
+        q_lat, q_pe, ckv_new, kpe_new,
+        ckv_p[block_tables].reshape(b, -1, r),
+        kpe_p[block_tables].reshape(b, -1, pe),
+        ctx_pos, pos, chunk_lens, sm_scale=sm_scale,
+    )
+    return out, ckv_p, kpe_p
 
 
 # ---------------------------------------------------------------------------

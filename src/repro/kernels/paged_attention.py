@@ -11,11 +11,12 @@ in the copy-region starts, so the Pallas lowering turns the gather into a
 non-contiguous pages exactly like contiguous ones (TileLoom's "plan
 dataflow over non-contiguous tiles" as a one-line index change).
 
-Softmax is the same online-rescaling loop as flash_attention.py; ragged
-sequence lengths (every slot at its own position) and sliding windows are
-masked per element against the ``Lens`` scalar tensor.  Entries of the
-block table beyond a slot's live length must still hold *valid* page ids
-(the pool DMAs them regardless; masking kills their contribution) — the
+Softmax is the shared online-rescaling template (attention_core.py) with a
+page-gather KV source and GQA group-major Q packing; ragged sequence
+lengths (every slot at its own position) and sliding windows compose the
+ragged mask against the ``Lens`` scalar tensor.  Entries of the block
+table beyond a slot's live length must still hold *valid* page ids (the
+pool DMAs them regardless; masking kills their contribution) — the
 serving engine pads tables with page 0.
 """
 
@@ -24,6 +25,8 @@ from typing import Optional
 
 from repro.core import TileProgram
 from repro.core import lang as T
+
+from . import attention_core as AC
 
 
 def paged_attention_program(
@@ -59,62 +62,30 @@ def paged_attention_program(
             K_shared = T.alloc_shared((page_size, head_dim), dtype)
             V_shared = T.alloc_shared((page_size, head_dim), dtype)
             acc_s = T.alloc_fragment((group, page_size), accum_dtype)
-            acc_o = T.alloc_fragment((group, head_dim), accum_dtype)
-            scores_max = T.alloc_fragment((group,), accum_dtype)
-            scores_max_prev = T.alloc_fragment((group,), accum_dtype)
-            scores_scale = T.alloc_fragment((group,), accum_dtype)
-            scores_sum = T.alloc_fragment((group,), accum_dtype)
-            logsum = T.alloc_fragment((group,), accum_dtype)
+            # safe_div: empty slots (len 0) divide by the floor -> zeros
+            ons = AC.OnlineSoftmax(group, head_dim, scale, accum_dtype,
+                                   safe_div=True)
 
             T.copy(Q[bz, bh * group, 0], Q_shared)
-            T.fill(acc_o, 0.0)
-            T.fill(logsum, 0.0)
-            T.fill(scores_max, -T.infinity(accum_dtype))
 
-            for k in T.Pipelined(max_pages, num_stages=num_stages):
+            def load_kv(k):
                 # the paged gather: page index loaded from the block table
                 T.copy(KPages[bh, Tables[bz, k], 0, 0], K_shared)
                 T.copy(VPages[bh, Tables[bz, k], 0, 0], V_shared)
-                T.clear(acc_s)
-                T.gemm(Q_shared, K_shared, acc_s, transpose_B=True)
-                # ragged mask: this slot's live KV positions are
-                # [max(0, len-window), len) — everything else (tail of the
-                # last page, table padding) contributes nothing.
-                for i, j in T.Parallel(group, page_size):
-                    valid = (k * page_size + j) < Lens[bz]
-                    if window is not None:
-                        valid = valid & (
-                            (k * page_size + j) >= (Lens[bz] - window)
-                        )
-                    acc_s[i, j] = T.if_then_else(
-                        valid, acc_s[i, j], -T.infinity(accum_dtype)
-                    )
-                T.copy(scores_max, scores_max_prev)
-                T.reduce_max(acc_s, scores_max, dim=1, clear=False)
-                # Clamp before differencing: fully-masked pages leave the
-                # running max at -inf and (-inf) - (-inf) = nan.
-                neg_clamp = -1048576.0  # -2^20; exp2 underflows long before
-                for i in T.Parallel(group):
-                    scores_scale[i] = T.exp2(
-                        T.maximum(scores_max_prev[i], neg_clamp) * scale
-                        - T.maximum(scores_max[i], neg_clamp) * scale
-                    )
-                for i, j in T.Parallel(group, page_size):
-                    acc_s[i, j] = T.exp2(
-                        acc_s[i, j] * scale
-                        - T.maximum(scores_max[i], neg_clamp) * scale
-                    )
-                T.reduce_sum(acc_s, scores_sum, dim=1)
-                for i in T.Parallel(group):
-                    logsum[i] = logsum[i] * scores_scale[i] + scores_sum[i]
-                for i, j in T.Parallel(group, head_dim):
-                    acc_o[i, j] = acc_o[i, j] * scores_scale[i]
-                T.gemm(acc_s, V_shared, acc_o)
+                return K_shared, V_shared
 
-            # empty slots (len 0) divide by the floor and emit zeros, not nan
-            for i, j in T.Parallel(group, head_dim):
-                acc_o[i, j] = acc_o[i, j] / T.maximum(logsum[i], 1e-30)
-            T.copy(acc_o, Output[bz, bh * group, 0])
+            # ragged mask: this slot's live KV positions are
+            # [max(0, len-window), len) — everything else (tail of the
+            # last page, table padding) contributes nothing.
+            def mask(k):
+                return AC.ragged(Lens[bz], lambda j: k * page_size + j, window)
+
+            AC.attend(
+                ons, acc_s, page_size, max_pages, load_kv,
+                lambda s, ks, k: AC.scores(s, Q_shared, ks), mask,
+                num_stages=num_stages,
+            )
+            ons.finalize(Output[bz, bh * group, 0])
 
     return PagedAttn
 

@@ -38,6 +38,8 @@ from typing import Optional
 from repro.core import TileProgram
 from repro.core import lang as T
 
+from . import attention_core as AC
+
 
 def prefill_attention_program(
     slots: int,
@@ -83,99 +85,52 @@ def prefill_attention_program(
             Vp_shared = T.alloc_shared((page_size, head_dim), dtype)
             acc_s = T.alloc_fragment((rows, page_size), accum_dtype)
             acc_c = T.alloc_fragment((rows, chunk), accum_dtype)
-            acc_o = T.alloc_fragment((rows, head_dim), accum_dtype)
-            scores_max = T.alloc_fragment((rows,), accum_dtype)
-            scores_max_prev = T.alloc_fragment((rows,), accum_dtype)
-            scores_scale = T.alloc_fragment((rows,), accum_dtype)
-            scores_sum = T.alloc_fragment((rows,), accum_dtype)
-            logsum = T.alloc_fragment((rows,), accum_dtype)
+            # safe_div: rows past Lens are fully masked -> zeros, not nan
+            ons = AC.OnlineSoftmax(rows, head_dim, scale, accum_dtype,
+                                   safe_div=True)
 
             T.copy(Q[bz, bh, bq * rows, 0], Q_shared)
             T.copy(K[bz, bh, 0, 0], Kc_shared)
             T.copy(V[bz, bh, 0, 0], Vc_shared)
-            T.fill(acc_o, 0.0)
-            T.fill(logsum, 0.0)
-            T.fill(scores_max, -T.infinity(accum_dtype))
 
-            # Clamp before differencing running maxima: fully-masked blocks
-            # (no prior KV, tail pages) leave them at -inf and
-            # (-inf) - (-inf) = nan.
-            neg_clamp = -1048576.0  # -2^20; exp2 underflows long before
+            # the absolute position of query row r (chunk-major packing)
+            q_pos = lambda r: Starts[bz] + bq * page_size + r // group
 
             # ---- prior KV, gathered through the block table --------------
-            for kp in T.Pipelined(max_pages, num_stages=num_stages):
+            def load_prior(kp):
                 T.copy(KPages[bh, Tables[bz, kp], 0, 0], Kp_shared)
                 T.copy(VPages[bh, Tables[bz, kp], 0, 0], Vp_shared)
-                T.clear(acc_s)
-                T.gemm(Q_shared, Kp_shared, acc_s, transpose_B=True)
-                for r, j in T.Parallel(rows, page_size):
-                    # prior positions [0, Starts) are live; everything else
-                    # (the chunk's own pages, table padding) is masked.
-                    valid = (kp * page_size + j) < Starts[bz]
-                    if window is not None:
-                        valid = valid & (
-                            (Starts[bz] + bq * page_size + r // group)
-                            - (kp * page_size + j)
-                            < window
-                        )
-                    acc_s[r, j] = T.if_then_else(
-                        valid, acc_s[r, j], -T.infinity(accum_dtype)
-                    )
-                T.copy(scores_max, scores_max_prev)
-                T.reduce_max(acc_s, scores_max, dim=1, clear=False)
-                for r in T.Parallel(rows):
-                    scores_scale[r] = T.exp2(
-                        T.maximum(scores_max_prev[r], neg_clamp) * scale
-                        - T.maximum(scores_max[r], neg_clamp) * scale
-                    )
-                for r, j in T.Parallel(rows, page_size):
-                    acc_s[r, j] = T.exp2(
-                        acc_s[r, j] * scale
-                        - T.maximum(scores_max[r], neg_clamp) * scale
-                    )
-                T.reduce_sum(acc_s, scores_sum, dim=1)
-                for r in T.Parallel(rows):
-                    logsum[r] = logsum[r] * scores_scale[r] + scores_sum[r]
-                for r, j in T.Parallel(rows, head_dim):
-                    acc_o[r, j] = acc_o[r, j] * scores_scale[r]
-                T.gemm(acc_s, Vp_shared, acc_o)
+                return Kp_shared, Vp_shared
+
+            def prior_mask(kp):
+                # prior positions [0, Starts) are live; everything else
+                # (the chunk's own pages, table padding) is masked.
+                k_pos = lambda j: kp * page_size + j
+                m = AC.ragged(Starts[bz], k_pos)
+                if window is not None:
+                    m = AC.both(m, AC.banded(q_pos, k_pos, window))
+                return m
+
+            AC.attend(
+                ons, acc_s, page_size, max_pages, load_prior,
+                lambda s, ks, k: AC.scores(s, Q_shared, ks), prior_mask,
+                num_stages=num_stages,
+            )
 
             # ---- the chunk itself (keys straight from the K/V inputs —
-            # never read back through the pages we are writing) ------------
-            T.clear(acc_c)
-            T.gemm(Q_shared, Kc_shared, acc_c, transpose_B=True)
-            for r, j in T.Parallel(rows, chunk):
-                valid = (j <= (bq * page_size + r // group)) & (j < Lens[bz])
-                if window is not None:
-                    valid = valid & (
-                        ((bq * page_size + r // group) - j) < window
-                    )
-                acc_c[r, j] = T.if_then_else(
-                    valid, acc_c[r, j], -T.infinity(accum_dtype)
-                )
-            T.copy(scores_max, scores_max_prev)
-            T.reduce_max(acc_c, scores_max, dim=1, clear=False)
-            for r in T.Parallel(rows):
-                scores_scale[r] = T.exp2(
-                    T.maximum(scores_max_prev[r], neg_clamp) * scale
-                    - T.maximum(scores_max[r], neg_clamp) * scale
-                )
-            for r, j in T.Parallel(rows, chunk):
-                acc_c[r, j] = T.exp2(
-                    acc_c[r, j] * scale
-                    - T.maximum(scores_max[r], neg_clamp) * scale
-                )
-            T.reduce_sum(acc_c, scores_sum, dim=1)
-            for r in T.Parallel(rows):
-                logsum[r] = logsum[r] * scores_scale[r] + scores_sum[r]
-            for r, j in T.Parallel(rows, head_dim):
-                acc_o[r, j] = acc_o[r, j] * scores_scale[r]
-            T.gemm(acc_c, Vc_shared, acc_o)
+            # never read back through the pages we are writing): causal over
+            # in-chunk positions, ragged against the live length ------------
+            AC.scores(acc_c, Q_shared, Kc_shared)
+            in_pos = lambda r: bq * page_size + r // group
+            cmask = AC.both(
+                AC.causal(in_pos, lambda j: j),
+                AC.ragged(Lens[bz], lambda j: j),
+            )
+            if window is not None:
+                cmask = AC.both(cmask, AC.banded(in_pos, lambda j: j, window))
+            ons.update(acc_c, chunk, Vc_shared, cmask)
 
-            # rows past Lens are fully masked: divide by the floor, emit 0
-            for r, j in T.Parallel(rows, head_dim):
-                acc_o[r, j] = acc_o[r, j] / T.maximum(logsum[r], 1e-30)
-            T.copy(acc_o, Output[bz, bh, bq * rows, 0])
+            ons.finalize(Output[bz, bh, bq * rows, 0])
 
             # ---- the paged write: this cell's chunk page, placed through
             # the block table (scalar-prefetch output BlockSpec).  The write

@@ -332,6 +332,113 @@ def prefill_attention(
 # ---------------------------------------------------------------------------
 
 
+def mla_masked(
+    q_lat: jax.Array,  # (B, H, R) absorbed latent queries
+    q_pe: jax.Array,  # (B, H, Dpe)
+    c_kv: jax.Array,  # (B, S, R) latent cache
+    k_pe: jax.Array,  # (B, S, Dpe)
+    kv_len: jax.Array,  # (B,) or scalar live length per slot
+    sm_scale: float,
+) -> jax.Array:
+    """Latent-space MLA decode attention with a length mask — the single
+    oracle both latent layouts share: the contiguous decode path feeds the
+    per-slot strip, :func:`mla_paged` the page gather.  Returns the float32
+    latent output (B, H, R) (callers expand through W_uv)."""
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), c_kv.astype(jnp.float32))
+        + jnp.einsum("bhp,bsp->bhs", q_pe.astype(jnp.float32), k_pe.astype(jnp.float32))
+    )
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (scores.shape[0],))
+    mask = jnp.arange(c_kv.shape[1])[None, None, :] < kv_len[:, None, None]
+    scores = jnp.where(mask, scores * sm_scale, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bsr->bhr", p, c_kv.astype(jnp.float32))
+
+
+def mla_paged(
+    q_lat: jax.Array,  # (B, H, R)
+    q_pe: jax.Array,  # (B, H, Dpe)
+    ckv_pages: jax.Array,  # (P, page_size, R) latent page pool
+    kpe_pages: jax.Array,  # (P, page_size, Dpe)
+    block_tables: jax.Array,  # (B, max_pages) int32 physical page ids
+    seq_lens: jax.Array,  # (B,) int32 live length per slot
+    sm_scale: Optional[float] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Paged MLA decode oracle: gather each slot's latent/rope pages through
+    its block table, then the shared masked latent attention.  Because the
+    gather reconstructs logical token order, outputs are identical to the
+    contiguous strip path — the property the serving equivalence tests pin."""
+    b, h, r = q_lat.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(r + q_pe.shape[-1])
+    ckv = ckv_pages[block_tables].reshape(b, -1, r)
+    kpe = kpe_pages[block_tables].reshape(b, -1, kpe_pages.shape[-1])
+    out = mla_masked(q_lat, q_pe, ckv, kpe, seq_lens, sm_scale)
+    return out.astype(out_dtype or q_lat.dtype)
+
+
+def mla_prefill(
+    q_lat: jax.Array,  # (B, H, C, R) absorbed chunk queries
+    q_pe: jax.Array,  # (B, H, C, Dpe)
+    ckv_new: jax.Array,  # (B, C, R) the chunk's own latents
+    kpe_new: jax.Array,  # (B, C, Dpe)
+    ckv_ctx: jax.Array,  # (B, S, R) prior latent context
+    kpe_ctx: jax.Array,  # (B, S, Dpe)
+    ctx_pos: jax.Array,  # (B, S) int32 absolute position per ctx entry; -1 = dead
+    q_pos: jax.Array,  # (B, C) int32 absolute position per query
+    chunk_lens: jax.Array,  # (B,) live tokens in the chunk (0 = inactive slot)
+    sm_scale: Optional[float] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """MLA chunked-prefill oracle: masked two-part latent attention
+    ``softmax([scores_ctx ; scores_new])`` — prefill_attention's structure
+    with the latent+rope score split and the latent as V.  Same row
+    semantics: rows past ``chunk_lens`` attend what causality allows
+    (garbage the callers discard); rows with no valid key emit zeros."""
+    b, h, c, r = q_lat.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / np.sqrt(r + q_pe.shape[-1])
+    qf = q_lat.astype(jnp.float32)
+    qpef = q_pe.astype(jnp.float32)
+
+    def scores_of(kv, pe):
+        return (
+            jnp.einsum("bhcr,bsr->bhcs", qf, kv.astype(jnp.float32))
+            + jnp.einsum("bhcp,bsp->bhcs", qpef, pe.astype(jnp.float32))
+        ) * sm_scale
+
+    s_ctx = scores_of(ckv_ctx, kpe_ctx)  # (B, H, C, S)
+    s_new = scores_of(ckv_new, kpe_new)  # (B, H, C, C)
+    qp = jnp.asarray(q_pos, jnp.int32)
+    cp = jnp.asarray(ctx_pos, jnp.int32)
+    lens = jnp.asarray(chunk_lens, jnp.int32)
+    m_ctx = (cp[:, None, :] >= 0) & (cp[:, None, :] <= qp[:, :, None])
+    ci = jnp.arange(c, dtype=jnp.int32)
+    m_new = (ci[None, None, :] <= ci[None, :, None]) & (
+        ci[None, None, :] < lens[:, None, None]
+    )
+    mask = jnp.concatenate(
+        [
+            jnp.broadcast_to(m_ctx, (b, c, s_ctx.shape[-1])),
+            jnp.broadcast_to(m_new, (b, c, c)),
+        ],
+        axis=-1,
+    )[:, None]  # (B, 1, C, S+C)
+    scores = jnp.concatenate([s_ctx, s_new], axis=-1)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(mask, scores, neg)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * mask
+    den = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    p = e / den
+    v_all = jnp.concatenate(
+        [ckv_ctx.astype(jnp.float32), ckv_new.astype(jnp.float32)], axis=1
+    )
+    out = jnp.einsum("bhcs,bsr->bhcr", p, v_all)
+    return out.astype(out_dtype or q_lat.dtype)
+
+
 def mla(
     q: jax.Array,  # (B, Hq, D)
     q_pe: jax.Array,  # (B, Hq, Dpe)

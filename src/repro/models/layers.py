@@ -5,7 +5,8 @@ Every block exists in two execution modes:
 * full-sequence (training / prefill) — uses the tile-DSL kernels through
   ``repro.kernels.ops`` when ``kernel_backend`` allows, else the XLA path;
 * single-token decode — operates against static-shape caches (contiguous KV,
-  ring-buffer KV for sliding windows, SSM state for Mamba).
+  ring-buffer KV for sliding windows, paged KV/latent pools behind block
+  tables, SSM state for Mamba).
 """
 from __future__ import annotations
 
@@ -408,9 +409,66 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int):
     }
 
 
+def init_mla_paged_cache(cfg: ModelConfig, num_blocks: int, page_size: int):
+    """Latent page pools for one layer: the latent is shared by every query
+    head, so pages carry no head axis — ``(num_blocks, page_size, rank)``
+    plus the rope part.  The per-token footprint is ``rank + rope_dim``
+    instead of ``2 * heads * head_dim``: latent paging keeps MLA's KV
+    compression through the block pool."""
+    m = cfg.mla
+    return {
+        "ckv_pages": jnp.zeros((num_blocks, page_size, m.kv_lora_rank), cfg.dtype),
+        "kpe_pages": jnp.zeros((num_blocks, page_size, m.qk_rope_head_dim), cfg.dtype),
+    }
+
+
+def _mla_absorbed_q(params, q_nope, cfg: ModelConfig):
+    """Absorb W_uk into the queries: latent-space scoring (Fig. 18)."""
+    m = cfg.mla
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim)
+    return jnp.einsum(
+        "...hn,rhn->...hr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)
+    )
+
+
+def _mla_out_proj(params, out_lat, x_dtype, cfg: ModelConfig):
+    """Expand latent outputs through W_uv and project with W_o."""
+    m = cfg.mla
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, cfg.num_heads, m.v_head_dim)
+    out = jnp.einsum(
+        "...hr,rhv->...hv", out_lat.astype(jnp.float32), w_uv.astype(jnp.float32)
+    )
+    out = out.reshape(*out.shape[:-2], cfg.num_heads * m.v_head_dim).astype(x_dtype)
+    return jnp.einsum("...e,ed->...d", out, params["w_o"])
+
+
 def mla_decode(params, x, cfg: ModelConfig, cache, pos):
     """Latent-cache decode: absorb W_uk into q and attend in latent space —
     the FlashMLA serving path (paper Fig. 18), backed by our MLA kernel."""
+    m = cfg.mla
+    b = x.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q_nope, q_pe, c_kv, k_pe = _mla_decode_qkv(params, x, cfg, posb[:, None])
+
+    def upd(c, u, s):  # per-row write at its own position
+        return jax.lax.dynamic_update_slice(c, u, (s, 0, 0))
+
+    cache_ckv = jax.vmap(upd)(cache["c_kv"], c_kv[:, None, None, :], posb)
+    cache_kpe = jax.vmap(upd)(cache["k_pe"], k_pe[:, :, None, :], posb)
+    q_lat = _mla_absorbed_q(params, q_nope, cfg)
+    sm = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # attend over the latent cache (mask positions beyond pos via kv_len)
+    out_lat = ref.mla_masked(
+        q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype),
+        cache_ckv[:, :, 0], cache_kpe[:, :, 0], pos + 1, sm,
+    )
+    proj = _mla_out_proj(params, out_lat, x.dtype, cfg)[:, None]
+    return proj, {"c_kv": cache_ckv, "k_pe": cache_kpe}
+
+
+def _mla_decode_qkv(params, x, cfg: ModelConfig, posv):
+    """Shared single-token MLA projections: absorbed latent queries, rotated
+    rope queries, and the token's latent/rope cache entries."""
     m = cfg.mla
     b = x.shape[0]
     h = cfg.num_heads
@@ -418,8 +476,6 @@ def mla_decode(params, x, cfg: ModelConfig, cache, pos):
         b, h, m.qk_nope_head_dim + m.qk_rope_head_dim
     )
     q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
-    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    posv = posb[:, None]
     q_pe = apply_rope(
         q_pe.reshape(b, 1, h, m.qk_rope_head_dim), posv, cfg.rope_theta
     ).reshape(b, h, m.qk_rope_head_dim)
@@ -431,40 +487,118 @@ def mla_decode(params, x, cfg: ModelConfig, cache, pos):
         posv,
         cfg.rope_theta,
     )
+    return q_nope, q_pe, c_kv, k_pe
 
-    def upd(c, u, s):  # per-row write at its own position
-        return jax.lax.dynamic_update_slice(c, u, (s, 0, 0))
 
-    cache_ckv = jax.vmap(upd)(cache["c_kv"], c_kv[:, None, None, :], posb)
-    cache_kpe = jax.vmap(upd)(cache["k_pe"], k_pe[:, :, None, :], posb)
-    # absorb: q_latent[h, r] = q_nope[h, n] @ w_uk[r, h*n]
-    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
-    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+def mla_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables):
+    """One-token MLA decode against the **latent page pools** — the paged
+    twin of :func:`mla_decode`.  The token's latent/rope entries are
+    scattered into the page holding position ``pos`` through the block
+    table, then the absorbed queries attend the gathered pages with a
+    ragged length mask (ops.mla_paged: the paged MLA tile kernel, or its
+    oracle on XLA hosts)."""
+    m = cfg.mla
+    b = x.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q_nope, q_pe, c_kv, k_pe = _mla_decode_qkv(params, x, cfg, posb[:, None])
+    page_size = cache["ckv_pages"].shape[1]
+    logical = posb // page_size
+    offset = posb % page_size
+    phys = jnp.take_along_axis(tables, logical[:, None], axis=1)[:, 0]
+    cdt = cache["ckv_pages"].dtype
+    ckv_pages = cache["ckv_pages"].at[phys, offset].set(c_kv.astype(cdt))
+    kpe_pages = cache["kpe_pages"].at[phys, offset].set(k_pe[:, 0].astype(cdt))
+    q_lat = _mla_absorbed_q(params, q_nope, cfg)
     sm = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    # attend over the latent cache (mask positions beyond pos via kv_len)
-    out_lat = _mla_masked(
-        q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), cache_ckv, cache_kpe,
-        pos + 1, sm, cfg,
+    out_lat = ops.mla_paged(
+        q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), ckv_pages, kpe_pages,
+        tables, posb + 1, sm_scale=sm,
+        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
     )
-    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
-    out = jnp.einsum("bhr,rhv->bhv", out_lat.astype(jnp.float32), w_uv.astype(jnp.float32))
-    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
-    proj = jnp.einsum("bse,ed->bsd", out, params["w_o"])
-    return proj, {"c_kv": cache_ckv, "k_pe": cache_kpe}
+    proj = _mla_out_proj(params, out_lat, x.dtype, cfg)[:, None]
+    return proj, {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages}
 
 
-def _mla_masked(q_lat, q_pe, c_kv, k_pe, kv_len, sm_scale, cfg):
-    """Latent attention with a length mask (XLA path; the Pallas MLA kernel
-    is used by the serving engine when the cache is exactly full)."""
-    scores = (
-        jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), c_kv[:, :, 0].astype(jnp.float32))
-        + jnp.einsum("bhp,bsp->bhs", q_pe.astype(jnp.float32), k_pe[:, :, 0].astype(jnp.float32))
+def _mla_prefill_qkv(params, x, cfg: ModelConfig, posmat):
+    """Shared chunk-wide MLA projections for the prefill paths."""
+    m = cfg.mla
+    b, c, _ = x.shape
+    h = cfg.num_heads
+    q = jnp.einsum("bsd,de->bse", x, params["w_q"]).reshape(
+        b, c, h, m.qk_nope_head_dim + m.qk_rope_head_dim
     )
-    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (scores.shape[0],))
-    mask = jnp.arange(c_kv.shape[1])[None, None, :] < kv_len[:, None, None]
-    scores = jnp.where(mask, scores * sm_scale, -jnp.inf)
-    p = jax.nn.softmax(scores, axis=-1)
-    return jnp.einsum("bhs,bsr->bhr", p, c_kv[:, :, 0].astype(jnp.float32))
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_pe = apply_rope(q_pe, posmat, cfg.rope_theta)
+    c_kv = rmsnorm(
+        jnp.einsum("bsd,de->bse", x, params["w_dkv"]), params["kv_norm"], cfg.norm_eps
+    )
+    k_pe = apply_rope(
+        jnp.einsum("bsd,de->bse", x, params["w_kpe"]), posmat, cfg.rope_theta
+    )
+    q_lat = _mla_absorbed_q(params, q_nope, cfg)  # (b, c, h, r)
+    sm = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    # (b, h, c, ·) for the kernels/oracles
+    return (q_lat.transpose(0, 2, 1, 3), q_pe.transpose(0, 2, 1, 3),
+            c_kv, k_pe, sm)
+
+
+def mla_prefill_paged(params, x, cfg: ModelConfig, cache, pos, tables, lens):
+    """Chunk-wide MLA prefill against the latent page pools.  Same contract
+    as :func:`attention_prefill_paged` — the chunk's latents land in the
+    pages holding positions [pos, pos+lens) through the block table (inside
+    the tile kernel on the Pallas path; a masked scatter on XLA), and every
+    chunk query attends prior pages plus the chunk causally, all in latent
+    space."""
+    b, c, _ = x.shape
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    posmat = posb[:, None] + jnp.arange(c, dtype=jnp.int32)
+    q_lat, q_pe, c_kv, k_pe, sm = _mla_prefill_qkv(params, x, cfg, posmat)
+    out_lat, ckv_pages, kpe_pages = ops.mla_prefill(
+        q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), c_kv, k_pe,
+        cache["ckv_pages"], cache["kpe_pages"], tables, posb,
+        jnp.asarray(lens, jnp.int32), sm_scale=sm,
+        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+    )
+    proj = _mla_out_proj(params, out_lat.transpose(0, 2, 1, 3), x.dtype, cfg)
+    return proj, {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages}
+
+
+def mla_prefill(params, x, cfg: ModelConfig, cache, pos, lens):
+    """Chunk-wide MLA prefill against the contiguous latent strips — the
+    latent twin of :func:`attention_prefill` (no ring variant: MLA has no
+    sliding windows).  Prior context comes from the per-slot strip; the
+    chunk is written back as a gather-select (no scatter)."""
+    b, c, _ = x.shape
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    lens = jnp.asarray(lens, jnp.int32)
+    posmat = posb[:, None] + jnp.arange(c, dtype=jnp.int32)
+    q_lat, q_pe, c_kv, k_pe, sm = _mla_prefill_qkv(params, x, cfg, posmat)
+    size = cache["c_kv"].shape[1]
+    r = jnp.arange(size, dtype=jnp.int32)[None, :]  # (1, S)
+    ctx_pos = jnp.where(r < posb[:, None], r, -1)
+    out_lat = ref.mla_prefill(
+        q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), c_kv, k_pe,
+        cache["c_kv"][:, :, 0], cache["k_pe"][:, :, 0], ctx_pos, posmat,
+        lens, sm_scale=sm,
+    )
+    proj = _mla_out_proj(params, out_lat.transpose(0, 2, 1, 3), x.dtype, cfg)
+    # write the chunk into the strip as a gather-select over cache entries
+    rel = r - posb[:, None]  # (B, S)
+    live = (rel >= 0) & (rel < lens[:, None])
+    cg = jnp.clip(rel, 0, c - 1)[:, :, None]  # (B, S, 1)
+    cdt = cache["c_kv"].dtype
+    sel = live[:, :, None, None]
+    ckv_new = jnp.where(
+        sel,
+        jnp.take_along_axis(c_kv.astype(cdt), cg, axis=1)[:, :, None, :],
+        cache["c_kv"],
+    )
+    kpe_new = jnp.where(
+        sel,
+        jnp.take_along_axis(k_pe.astype(cdt), cg, axis=1)[:, :, None, :],
+        cache["k_pe"],
+    )
+    return proj, {"c_kv": ckv_new, "k_pe": kpe_new}
 
 
 # ---------------------------------------------------------------------------

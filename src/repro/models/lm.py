@@ -275,6 +275,8 @@ class Cache:
       (B, max_pages) int32 block table mapping each slot's logical KV
       blocks to physical pages (serving/paged_cache.py owns the host-side
       allocation; the engine refreshes ``tables`` via :meth:`with_tables`).
+      GQA pages its KV heads; MLA pages its shared latent+rope cache
+      (DESIGN.md §5.4).
     """
 
     def __init__(self, prefix, rest, stacked: bool, max_len: int,
@@ -317,10 +319,13 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     wlist = static_windows(cfg)
     if layout not in ("contiguous", "paged"):
         raise ValueError(f"unknown cache layout {layout!r}")
-    if layout == "paged" and cfg.attention == "mla":
-        raise NotImplementedError(
-            "paged KV is implemented for GQA/MQA attention; MLA latent "
-            "paging is future work — use layout='contiguous'."
+    if layout == "paged" and not cfg.attends:
+        # loud, not a silent downgrade: the caller asked for paging and
+        # this arch has no attention KV state to page
+        raise ValueError(
+            f"layout='paged' needs an attention KV cache; {cfg.name} "
+            f"(attention={cfg.attention!r}) keeps only recurrent state — "
+            "use layout='contiguous'."
         )
     max_pages = -(-max_len // page_size) if layout == "paged" else 0
     if layout == "paged" and num_blocks is None:
@@ -336,7 +341,10 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
                     cfg, batch, max_len, window=wlist[layer_idx]
                 )
         elif cfg.attention == "mla":
-            c["mla"] = L.init_mla_cache(cfg, batch, max_len)
+            if layout == "paged":
+                c["mla"] = L.init_mla_paged_cache(cfg, num_blocks, page_size)
+            else:
+                c["mla"] = L.init_mla_cache(cfg, batch, max_len)
         if cfg.family in ("ssm", "hybrid"):
             c["ssm"] = L.init_mamba2_cache(cfg, batch)
         return c
@@ -394,7 +402,12 @@ def _block_decode(p, x, cfg: ModelConfig, cache, pos, window,
             )
         new_cache["kv"] = kv
     elif cfg.attention == "mla":
-        delta, mc = L.mla_decode(p["attn"], h, cfg, cache["mla"], pos)
+        if layout == "paged":
+            delta, mc = L.mla_decode_paged(
+                p["attn"], h, cfg, cache["mla"], pos, tables
+            )
+        else:
+            delta, mc = L.mla_decode(p["attn"], h, cfg, cache["mla"], pos)
         new_cache["mla"] = mc
     if cfg.family in ("ssm", "hybrid"):
         ssm_in = cache["ssm"]
@@ -535,17 +548,26 @@ def _block_prefill(p, x, cfg: ModelConfig, cache, pos, lens, window,
     ``window`` must be a static python value."""
     h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
     new_cache: Dict[str, Any] = {}
-    if layout == "paged":
+    if cfg.attention == "mla":
+        if layout == "paged":
+            delta, mc = L.mla_prefill_paged(
+                p["attn"], h, cfg, cache["mla"], pos, tables, lens
+            )
+        else:
+            delta, mc = L.mla_prefill(p["attn"], h, cfg, cache["mla"], pos, lens)
+        new_cache["mla"] = mc
+    elif layout == "paged":
         delta, kv = L.attention_prefill_paged(
             p["attn"], h, cfg, cache["kv"], pos, tables, lens, window=window,
             rope_fraction=rope_fraction(cfg),
         )
+        new_cache["kv"] = kv
     else:
         delta, kv = L.attention_prefill(
             p["attn"], h, cfg, cache["kv"], pos, lens, window=window,
             rope_fraction=rope_fraction(cfg),
         )
-    new_cache["kv"] = kv
+        new_cache["kv"] = kv
     x = x + delta
     if "moe" in p:
         h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
@@ -558,10 +580,11 @@ def _block_prefill(p, x, cfg: ModelConfig, cache, pos, lens, window,
 
 
 def supports_chunked_prefill(cfg: ModelConfig) -> bool:
-    """Chunked prefill covers the attention families; SSM/hybrid state and
-    MLA latent caches still replay token by token (recurrent state has no
-    chunk-parallel write yet)."""
-    return cfg.attention == "gqa" and cfg.family not in ("ssm", "hybrid")
+    """Chunked prefill covers the attention families — GQA through the
+    prefill_attention kernel and MLA through mla_prefill (latent chunk
+    writes).  SSM/hybrid state still replays token by token (recurrent
+    state has no chunk-parallel write)."""
+    return cfg.attention in ("gqa", "mla") and cfg.family not in ("ssm", "hybrid")
 
 
 def prefill_step(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
@@ -579,7 +602,7 @@ def prefill_step(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
     """
     if not supports_chunked_prefill(cfg):
         raise NotImplementedError(
-            f"chunked prefill supports GQA attention archs; {cfg.name} "
+            f"chunked prefill supports attention archs (GQA/MLA); {cfg.name} "
             f"(attention={cfg.attention}, family={cfg.family}) replays "
             "prompts through decode_step instead."
         )

@@ -14,9 +14,10 @@ Prefill comes in two modes (``ServeConfig.prefill``):
   chunk-wide forward pass (``lm.prefill_step`` — the prefill_attention
   kernel path).  A 1k-token prompt then costs ~``1k / prefill_chunk``
   ticks instead of 1k full decode steps, while decode latency stays
-  bounded: no tick ever exceeds ``token_budget`` tokens.  Falls back to
-  replay for architectures without chunk-parallel cache writes (SSM /
-  hybrid state, MLA latent caches).
+  bounded: no tick ever exceeds ``token_budget`` tokens.  Covers the
+  attention families (GQA via prefill_attention, MLA via mla_prefill);
+  falls back to replay only for architectures without chunk-parallel cache
+  writes (SSM / hybrid recurrent state).
 * ``"replay"`` — the legacy baseline: prompts stream one token per engine
   tick through the decode step.
 
@@ -32,8 +33,12 @@ KV memory comes in two layouts behind one ``decode_step`` interface
   prefill), and completion **recycles blocks immediately** at EOS.
 * ``"contiguous"`` — the legacy per-slot ``max_len`` strip (ring buffers
   for sliding-window layers); preallocates ``slots × max_len`` regardless
-  of real prompt lengths.  Kept as the comparison baseline and as the
-  fallback for MLA archs (latent paging is future work).
+  of real prompt lengths.  Kept as the comparison baseline.
+
+Both layouts cover every attention family: GQA/MQA page their KV heads,
+MLA pages its shared latent+rope cache (DESIGN.md §5.4).  Pure-SSM archs
+have no attention KV state to page — asking for ``cache="paged"`` there is
+a loud ``ValueError``, never a silent layout downgrade.
 
 Both layouts produce identical outputs for identical requests — asserted in
 tests/test_serving.py.
@@ -268,8 +273,10 @@ class ServingEngine:
         mode = serve_cfg.cache
         if mode not in ("paged", "contiguous"):
             raise ValueError(f"unknown cache mode {mode!r}")
-        if mode == "paged" and cfg.attention == "mla":
-            mode = "contiguous"  # MLA latent paging not implemented
+        # no silent downgrades: every attention family pages (GQA/MQA
+        # through KV pages, MLA through latent pages); an arch with no
+        # attention KV state fails loudly inside lm.init_cache instead of
+        # being quietly handed a different memory layout than requested
         self.cache_mode = mode
 
         if mode == "paged":

@@ -133,6 +133,7 @@ def _variants():
         ("mqa", dataclasses.replace(q, num_kv_heads=1)),
         ("sliding_window", dataclasses.replace(
             q, sliding_window=12, global_attn_every=2)),
+        ("mla", get_config("deepseek_v2_lite_16b").reduced()),
     ]
 
 
@@ -161,7 +162,7 @@ def test_chunked_matches_replay(name, cfg, cache, rng):
 
 
 def test_unsupported_arch_falls_back_to_replay():
-    cfg = get_config("deepseek_v2_lite_16b").reduced()  # MLA
+    cfg = get_config("hymba_1_5b").reduced()  # hybrid: recurrent SSM state
     eng = ServingEngine(cfg, _params(cfg), ServeConfig(
         slots=1, max_len=16, max_new_tokens=2))
     assert eng.prefill_mode == "replay"
@@ -171,6 +172,16 @@ def test_unsupported_arch_falls_back_to_replay():
             jnp.zeros((1, 4), jnp.int32), jnp.zeros((1,), jnp.int32),
             jnp.ones((1,), jnp.int32),
         )
+
+
+def test_mla_supports_chunked_prefill():
+    """MLA archs take the chunked fast path now (the mla_prefill latent
+    chunk write) — the PR-3 era replay fallback is gone."""
+    cfg = get_config("deepseek_v2_lite_16b").reduced()
+    assert lm.supports_chunked_prefill(cfg)
+    eng = ServingEngine(cfg, _params(cfg), ServeConfig(
+        slots=1, max_len=16, max_new_tokens=2))
+    assert eng.prefill_mode == "chunked"
 
 
 # ---------------------------------------------------------------------------

@@ -251,12 +251,27 @@ class TestScheduler:
         assert ok.error is None and len(ok.output) == 2
         assert {r.uid for r in done} == {big.uid, ok.uid}
 
-    def test_mla_falls_back_to_contiguous(self):
+    def test_mla_serves_paged(self):
+        """MLA archs page their latent cache — the PR-2 era contiguous
+        downgrade is gone."""
         cfg = get_config("deepseek_v2_lite_16b").reduced()
         eng = ServingEngine(cfg, _params(cfg), ServeConfig(
             slots=1, max_len=16, max_new_tokens=2))
+        assert eng.cache_mode == "paged"
+        assert eng.cache.layout == "paged"
+
+    def test_paged_without_attention_is_loud(self):
+        """An arch with no attention KV state cannot page: asking for the
+        paged layout raises instead of silently handing back a different
+        memory layout than requested."""
+        cfg = get_config("mamba2_2_7b").reduced()
+        with pytest.raises(ValueError, match="paged"):
+            ServingEngine(cfg, _params(cfg), ServeConfig(
+                slots=1, max_len=16, max_new_tokens=2, cache="paged"))
+        # contiguous still serves the recurrent-state arch
+        eng = ServingEngine(cfg, _params(cfg), ServeConfig(
+            slots=1, max_len=16, max_new_tokens=2, cache="contiguous"))
         assert eng.cache_mode == "contiguous"
-        assert eng.cache.layout == "contiguous"
 
 
 # ---------------------------------------------------------------------------
@@ -450,6 +465,7 @@ def _variants():
             q, sliding_window=12, global_attn_every=2)),
         ("soft_cap", dataclasses.replace(q, logit_soft_cap=5.0)),
         ("hybrid_windowed", get_config("hymba_1_5b").reduced()),
+        ("mla", get_config("deepseek_v2_lite_16b").reduced()),
     ]
 
 
@@ -474,8 +490,106 @@ def test_paged_matches_contiguous(name, cfg, rng):
 
 
 # ---------------------------------------------------------------------------
-# paged_attention kernel vs its pure-JAX oracle
+# MLA end-to-end: the paged latent cache + chunked prefill (ISSUE-5)
 # ---------------------------------------------------------------------------
+
+
+def test_mla_paged_chunked_matches_contiguous_replay(rng):
+    """The acceptance matrix: an MLA config serves through the paged latent
+    cache and chunked prefill with outputs byte-identical to the legacy
+    contiguous/replay path — all four layout x prefill combinations agree,
+    and the paged runs recycle every block."""
+    cfg = get_config("deepseek_v2_lite_16b").reduced()
+    params = _params(cfg)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=n).tolist() for n in (22, 3, 17, 9)
+    ]
+
+    def drive(cache, prefill):
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=2, max_len=48, max_new_tokens=5, cache=cache,
+            prefill=prefill, prefill_chunk=16, page_size=16))
+        reqs = [eng.submit(p) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        return [r.output for r in reqs], eng
+
+    ref_out, _ = drive("contiguous", "replay")
+    for cache, prefill in [("contiguous", "chunked"), ("paged", "replay"),
+                           ("paged", "chunked")]:
+        out, eng = drive(cache, prefill)
+        assert out == ref_out, f"{cache}/{prefill} diverged"
+        assert eng.prefill_mode == prefill
+        if cache == "paged":
+            assert eng.pool.in_use == 0  # every latent page recycled
+
+
+def test_mla_paged_multistep_matches_per_tick(rng):
+    """The device-resident decode window over the **latent** page layout:
+    grow-ahead grants/trims must account the head-axis-free ckv/kpe pools
+    exactly like GQA KV pages — byte-identical to per-tick stepping, every
+    latent page recycled, and the window genuinely engaged."""
+    cfg = get_config("deepseek_v2_lite_16b").reduced()
+    params = _params(cfg)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (6, 3, 9, 2)]
+    base = dict(slots=2, max_len=48, max_new_tokens=5, cache="paged",
+                page_size=16)
+    ref, _, _ = _run_engine(cfg, params, prompts, **base)
+    for sync in (4, 16):
+        out, _, eng = _run_engine(cfg, params, prompts, sync_every=sync,
+                                  **base)
+        assert out == ref
+        assert eng.decode_windows > 0
+        assert eng.pool.in_use == 0
+
+
+def test_mla_paged_preemption_lossless(rng):
+    """Pool pressure on the latent pages: preemption + recompute resume
+    must stay lossless for MLA exactly as for GQA."""
+    cfg = get_config("deepseek_v2_lite_16b").reduced()
+    params = _params(cfg)
+    prompt1 = rng.integers(0, cfg.vocab_size, size=6).tolist()
+    prompt2 = rng.integers(0, cfg.vocab_size, size=6).tolist()
+
+    def alone(prompt):
+        e = ServingEngine(cfg, params, ServeConfig(
+            slots=1, max_len=16, max_new_tokens=6, page_size=4))
+        r = e.submit(prompt)
+        e.run()
+        return r.output
+
+    ref1, ref2 = alone(prompt1), alone(prompt2)
+    eng = ServingEngine(cfg, params, ServeConfig(
+        slots=2, max_len=16, max_new_tokens=6, page_size=4, num_blocks=4))
+    r1, r2 = eng.submit(prompt1), eng.submit(prompt2)
+    eng.run()
+    assert eng.preemptions >= 1
+    assert r1.output == ref1 and r2.output == ref2
+    assert eng.pool.in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# paged kernels vs their pure-JAX oracles
+# ---------------------------------------------------------------------------
+
+
+def test_mla_paged_kernel_matches_oracle(rng):
+    from repro.core import Schedule, compile as tl_compile
+    from repro.kernels import ref
+    from repro.kernels.mla import (
+        PARITY_CASES,
+        mla_paged_program,
+        parity_inputs,
+    )
+
+    cfg = dict(PARITY_CASES)["mla_paged"]
+    prog = mla_paged_program(**cfg)
+    kern = tl_compile(prog, Schedule(interpret=True), target="pallas")
+    tbl, lens, q, qpe, ckv, kpe = parity_inputs("mla_paged", prog, rng)
+    out = np.asarray(kern(tbl, lens, q, qpe, ckv, kpe))
+    oracle = np.asarray(ref.mla_paged(q, qpe, ckv, kpe, tbl, lens))
+    np.testing.assert_allclose(out, oracle, rtol=1e-4, atol=2e-3)
 
 
 def test_paged_attention_kernel_matches_oracle(rng):

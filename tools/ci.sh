@@ -19,24 +19,31 @@ python -m pytest -x -q -W 'error::DeprecationWarning:repro\.serving' "$@"
 # cache + scheduler + both cache layouts asserting identical outputs, the
 # chunked-prefill fast path (asserts chunked prefill finishes within
 # ceil(prompt/chunk)+gen engine ticks where replay needs prompt+gen, with
-# byte-identical tokens), and the device-resident multi-step decode loop
-# (byte-identical outputs across sync_every in {1,4,16} and both layouts).
-# --json records the perf trajectory row; --compare gates fresh derived
-# metrics against the committed baseline (>20% regression fails CI).  The
-# baseline comes from HEAD, not the working tree — a previous local run
+# byte-identical tokens), the device-resident multi-step decode loop
+# (byte-identical outputs across sync_every in {1,4,16} and both layouts),
+# and the MLA serving matrix (paged latent cache + chunked prefill
+# byte-identical to contiguous/replay).  The loc table rides along so the
+# paper's MLA line-budget claim and the attention-core net-simplification
+# claim are pinned by the same gate.
+# --json records the perf trajectory rows; --compare gates fresh derived
+# metrics against the committed baselines (>20% regression fails CI).  The
+# baselines come from HEAD, not the working tree — a previous local run
 # leaves its own (noisy) numbers on disk, and gating against those would
-# drift the gate away from the committed trajectory; the working-tree file
-# is only the fallback outside a git checkout.
-baseline="$(mktemp)"
-if ! git show HEAD:BENCH_serving.json > "$baseline" 2>/dev/null || ! [ -s "$baseline" ]; then
-  if [ -s BENCH_serving.json ]; then
-    cp BENCH_serving.json "$baseline"
-  else
-    rm -f "$baseline"
-    baseline=""
+# drift the gate away from the committed trajectory; working-tree files
+# are only the fallback outside a git checkout.
+baseline_dir="$(mktemp -d)"
+for table in serving loc; do
+  if ! git show "HEAD:BENCH_${table}.json" > "$baseline_dir/BENCH_${table}.json" 2>/dev/null \
+      || ! [ -s "$baseline_dir/BENCH_${table}.json" ]; then
+    if [ -s "BENCH_${table}.json" ]; then
+      cp "BENCH_${table}.json" "$baseline_dir/BENCH_${table}.json"
+    else
+      rm -f "$baseline_dir/BENCH_${table}.json"
+    fi
   fi
-fi
-rm -f BENCH_serving.json  # a stale record must not satisfy the check below
-python -m benchmarks.run --only serving --smoke --json \
-  ${baseline:+--compare "$baseline"}
-test -s BENCH_serving.json  # the trajectory record must actually land
+  rm -f "BENCH_${table}.json"  # a stale record must not satisfy the check below
+done
+python -m benchmarks.run --only serving,loc --smoke --json \
+  --compare "$baseline_dir"
+test -s BENCH_serving.json  # the trajectory records must actually land
+test -s BENCH_loc.json
