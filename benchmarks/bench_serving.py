@@ -36,6 +36,22 @@ composable attention core's new composition points), asserting
 byte-identical outputs across paged/contiguous and replay/chunked with the
 latent pool at half the contiguous footprint.
 
+Workload 5 — *shared-system-prompt prefix caching* (ISSUE-6): every request
+carries the same 112-token system prompt (7 full pages at ``page_size=16``)
+plus a short page-unaligned unique tail.  With the prefix cache on, warm
+requests attach the cached prefix pages at admission and prefill only their
+tail — TTFT-from-admission collapses from ``ceil(prompt/chunk)`` ticks to
+~one chunk, and fresh block allocations per request drop to the tail+gen
+footprint.  Runs prefix on/off x chunked/replay and asserts byte-identical
+outputs (caching must never change tokens), warm TTFT <= 25% of cold, and
+fewer allocations per request than the uncached engine.
+
+Workload 6 — *MLA decode-heavy: per-tick vs multi-step* (ISSUE-5/6 rider):
+workload 3's regime on the MLA latent cache — the device-resident decode
+loop composes with paged latent attention, reported as wall-clock tok/s,
+delivery-latency percentiles and the deterministic dispatch-amortization
+ratio.
+
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json]
 """
 from __future__ import annotations
@@ -356,6 +372,132 @@ def _mla_workload(smoke: bool):
     return rows
 
 
+def _prefix_workload(cfg, params, smoke: bool, chunk: int = 16):
+    """Workload 5 — shared-system-prompt prefix caching.  slots=1 keeps the
+    runs sequential, so the first request is the cold miss that populates
+    the index and every later request is a pure warm hit (and tick counts
+    decompose exactly, scheduling-free)."""
+    shared_len = 7 * 16  # 7 full pages at page_size=16
+    if smoke:
+        n_req, max_new, max_len = 4, 3, 160
+    else:
+        n_req, max_new, max_len = 6, 4, 192
+    rng = np.random.default_rng(4)
+    shared = rng.integers(0, cfg.vocab_size, size=shared_len).tolist()
+    # page-unaligned tails: the cached prefix ends mid-page from the
+    # engine's point of view, exercising the partial-page admission path
+    tails = [rng.integers(0, cfg.vocab_size, size=int(t)).tolist()
+             for t in rng.integers(3, 14, size=n_req)]
+    prompts = [shared + t for t in tails]
+    base = dict(slots=1, max_len=max_len, max_new_tokens=max_new,
+                prefill_chunk=chunk, cache="paged", page_size=16,
+                num_blocks=24)
+
+    def drive(label, **kw):
+        engine = ServingEngine(cfg, params, ServeConfig(**dict(base, **kw)))
+        reqs = [engine.submit(p) for p in prompts]
+        t0 = time.time()
+        engine.run(max_steps=100_000)
+        dt = time.time() - t0
+        toks = sum(len(r.output) for r in reqs)
+        ttfts = [r.ttft_admit_ticks for r in reqs]
+        return {
+            "mode": label,
+            "tok_per_s": round(toks / max(dt, 1e-9), 2),
+            "steps": engine.steps_run,
+            "n_req": n_req,
+            "ttft_cold_ticks": ttfts[0],
+            "ttft_warm_ticks_mean": round(float(np.mean(ttfts[1:])), 2),
+            "pages_shared": engine.pages_shared,
+            "pages_copied": engine.pages_copied,
+            "allocs_per_req": round(engine.pool.total_allocs / n_req, 2),
+            "peak_kv_blocks": engine.pool.peak_in_use,
+            "outputs": [r.output for r in reqs],
+        }
+
+    rows = [
+        drive("prefix_chunked", prefill="chunked"),
+        drive("noprefix_chunked", prefill="chunked", prefix_cache=False),
+        drive("prefix_replay", prefill="replay"),
+        drive("noprefix_replay", prefill="replay", prefix_cache=False),
+    ]
+    ref_out = rows[0]["outputs"]
+    for r in rows[1:]:
+        if r["outputs"] != ref_out:
+            raise AssertionError(
+                f"prefix caching changed tokens: {r['mode']} vs {rows[0]['mode']}"
+            )
+    by = {r["mode"]: r for r in rows}
+    on = by["prefix_chunked"]
+    cold, warm = on["ttft_cold_ticks"], on["ttft_warm_ticks_mean"]
+    if warm > 0.25 * cold:
+        raise AssertionError(
+            f"warm TTFT {warm} ticks > 25% of cold {cold} at chunk={chunk}"
+        )
+    if on["allocs_per_req"] >= by["noprefix_chunked"]["allocs_per_req"]:
+        raise AssertionError(
+            "prefix sharing did not reduce block allocations per request"
+        )
+    print(f"# serving: shared-system-prompt prefix caching "
+          f"({n_req} reqs x {shared_len}-token shared prefix + unique tail, "
+          f"chunk={chunk})")
+    print("mode,tok_per_s,steps,ttft_cold_ticks,ttft_warm_ticks_mean,"
+          "pages_shared,allocs_per_req,peak_kv_blocks")
+    for r in rows:
+        print(f"{r['mode']},{r['tok_per_s']},{r['steps']},"
+              f"{r['ttft_cold_ticks']},{r['ttft_warm_ticks_mean']},"
+              f"{r['pages_shared']},{r['allocs_per_req']},"
+              f"{r['peak_kv_blocks']}")
+    print(f"# warm TTFT {cold} -> {warm} ticks "
+          f"({cold / max(warm, 1e-9):.1f}x); allocations/request "
+          f"{by['noprefix_chunked']['allocs_per_req']} -> "
+          f"{on['allocs_per_req']}; identical outputs across "
+          "prefix on/off x chunked/replay: ok")
+    print()
+    return rows
+
+
+def _mla_decode_workload(smoke: bool):
+    """Workload 6 — decode-heavy MLA: the device-resident multi-step loop
+    over the paged latent cache (workload 3's regime, MLA arch)."""
+    from repro.configs import get_config as _get
+
+    cfg = _get("deepseek_v2_lite_16b").reduced()
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    if smoke:
+        slots, max_len, n_req, prompt_len, max_new = 2, 64, 4, 4, 24
+    else:
+        slots, max_len, n_req, prompt_len, max_new = 2, 128, 8, 6, 48
+    rng = np.random.default_rng(5)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=prompt_len).tolist()
+        for _ in range(n_req)
+    ]
+    base = dict(slots=slots, max_len=max_len, max_new_tokens=max_new,
+                cache="paged")
+    variants = [
+        ("mla_decode_sync1_paged", dict(base, sync_every=1)),
+        ("mla_decode_sync16_paged", dict(base, sync_every=16)),
+    ]
+    rows = [_drive_timed(cfg, params, prompts, kw, label)
+            for label, kw in variants]
+    if rows[0]["outputs"] != rows[1]["outputs"]:
+        raise AssertionError("MLA multi-step decode outputs diverged")
+    amort = rows[0]["dispatches"] / max(rows[1]["dispatches"], 1)
+    print(f"# serving: MLA decode-heavy per-tick vs multi-step "
+          f"({n_req} reqs x {prompt_len} prompt + {max_new} gen, slots={slots})")
+    print("mode,tok_per_s,lat_p50_ms,lat_p95_ms,steps,dispatches,"
+          "decode_windows,table_uploads")
+    for r in rows:
+        print(f"{r['mode']},{r['tok_per_s']},{r['lat_p50_ms']},"
+              f"{r['lat_p95_ms']},{r['steps']},{r['dispatches']},"
+              f"{r['decode_windows']},{r['table_uploads']}")
+    print(f"# MLA multi-step decode: {amort:.1f}x fewer host dispatches at "
+          "sync_every=16; identical outputs: ok")
+    print()
+    return rows
+
+
 def derived_metrics(rows):
     """Cross-row metrics for the BENCH_serving.json trajectory record.
 
@@ -397,6 +539,21 @@ def derived_metrics(rows):
         out["mla_paged_kv_saving"] = round(
             1.0 - by_mode["mla_paged_chunked"]["kv_bytes"]
             / max(by_mode["mla_contiguous_chunked"]["kv_bytes"], 1), 4)
+    if "prefix_chunked" in by_mode:
+        p = by_mode["prefix_chunked"]
+        # warm-hit TTFT collapse: cold (index miss) over warm (prefix
+        # attached at admission) ticks-to-first-token, chunked prefill
+        out["prefix_warm_ttft_speedup"] = round(
+            p["ttft_cold_ticks"] / max(p["ttft_warm_ticks_mean"], 1e-9), 2)
+        # physical pages each request borrowed from the index instead of
+        # allocating (block-allocation pressure the cache absorbed)
+        out["shared_pages_per_request"] = round(
+            p["pages_shared"] / max(p["n_req"], 1), 2)
+    if ("mla_decode_sync1_paged" in by_mode
+            and "mla_decode_sync16_paged" in by_mode):
+        out["mla_decode_dispatch_amortization"] = round(
+            by_mode["mla_decode_sync1_paged"]["dispatches"]
+            / max(by_mode["mla_decode_sync16_paged"]["dispatches"], 1), 2)
     return out
 
 
@@ -407,6 +564,8 @@ def run(smoke: bool = False):
     rows += _prefill_workload(cfg, params, smoke)
     rows += _decode_workload(cfg, params, smoke)
     rows += _mla_workload(smoke)
+    rows += _prefix_workload(cfg, params, smoke)
+    rows += _mla_decode_workload(smoke)
     # outputs are asserted above; keep the JSON/return rows lean
     for r in rows:
         r.pop("outputs", None)

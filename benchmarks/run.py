@@ -145,6 +145,12 @@ def compare_derived(name: str, current: dict, baseline: dict,
             )
         else:
             print(f"# compare[{name}]: {k} = {cur} vs baseline {base}: ok")
+    # metrics introduced after the baseline was recorded pass trivially
+    # this run (nothing to gate against) — name them so the trajectory
+    # shows they become gated once the baseline is regenerated
+    for k in sorted(set(current) - set(baseline.get("derived") or {})):
+        print(f"# compare[{name}]: {k} = {current[k]} is new "
+              "(no baseline; gated after the next baseline refresh)")
     return failures
 
 

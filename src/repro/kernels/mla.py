@@ -120,12 +120,13 @@ def mla_paged_program(
     accum_dtype: str = "float32",
     num_stages: int = 2,
     sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
 ) -> TileProgram:
     """Paged MLA decode: one latent query row block per slot, latent+rope
     pages gathered through the block table (scalar prefetch), ragged mask
-    against each slot's live length.  The latent is shared by every query
-    head, so there is no kv-head grid axis — the pool is
-    ``(num_pages, page_size, dim)``."""
+    against each slot's live length (optionally sliding-window limited).
+    The latent is shared by every query head, so there is no kv-head grid
+    axis — the pool is ``(num_pages, page_size, dim)``."""
     bh = min(block_H, heads)
     if heads % bh:
         raise ValueError("the head block must divide heads")
@@ -162,7 +163,7 @@ def mla_paged_program(
                 return KV_shared, KV_shared  # V is the latent itself
 
             def mask(k):
-                return AC.ragged(Lens[bz], lambda j: k * page_size + j)
+                return AC.ragged(Lens[bz], lambda j: k * page_size + j, window)
 
             AC.attend(
                 ons, acc_s, page_size, max_pages, load_kv,
@@ -189,6 +190,7 @@ def mla_prefill_program(
     accum_dtype: str = "float32",
     num_stages: int = 2,
     sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
 ) -> TileProgram:
     """MLA chunked prefill: a (slots, chunk) block of prompt latents attends
     prior latent pages (gathered through the block table) plus itself
@@ -246,13 +248,21 @@ def mla_prefill_program(
                 T.copy(KPePages[Tables[bz, kp], 0, 0], Pp_shared)
                 return Kp_shared, Kp_shared  # V is the latent itself
 
+            q_pos = lambda r: Starts[bz] + bq * page_size + r // heads
+
+            def prior_mask(kp):
+                k_pos = lambda j: kp * page_size + j
+                m = AC.ragged(Starts[bz], k_pos)
+                if window is not None:
+                    m = AC.both(m, AC.banded(q_pos, k_pos, window))
+                return m
+
             AC.attend(
                 ons, acc_s, page_size, max_pages, load_prior,
                 lambda s, ks, kp: AC.scores(
                     s, Q_shared, ks, extra=[(Q_pe_shared, Pp_shared)]
                 ),
-                lambda kp: AC.ragged(Starts[bz], lambda j: kp * page_size + j),
-                num_stages=num_stages,
+                prior_mask, num_stages=num_stages,
             )
 
             # ---- the chunk itself (latents straight from the CKV/KPE
@@ -263,6 +273,8 @@ def mla_prefill_program(
                 AC.causal(in_pos, lambda j: j),
                 AC.ragged(Lens[bz], lambda j: j),
             )
+            if window is not None:
+                cmask = AC.both(cmask, AC.banded(in_pos, lambda j: j, window))
             ons.update(acc_c, chunk, Kc_shared, cmask)
 
             ons.finalize(Output[bz, bq * rows, 0])
@@ -303,9 +315,19 @@ PARITY_CASES = [
              num_pages=8, block_H=2),
     ),
     (
+        "mla_paged_windowed",
+        dict(slots=3, heads=4, dim=16, pe_dim=8, page_size=16, max_pages=2,
+             num_pages=8, block_H=2, window=12),
+    ),
+    (
         "mla_prefill",
         dict(slots=2, heads=2, dim=16, pe_dim=8, chunk=32, page_size=16,
              max_pages=4, num_pages=10),
+    ),
+    (
+        "mla_prefill_windowed",
+        dict(slots=2, heads=2, dim=16, pe_dim=8, chunk=32, page_size=16,
+             max_pages=4, num_pages=10, window=20),
     ),
 ]
 
@@ -314,7 +336,7 @@ def parity_programs():
     for name, cfg in PARITY_CASES:
         if name == "mla":
             yield name, mla_program(**cfg)
-        elif name == "mla_paged":
+        elif name.startswith("mla_paged"):
             yield name, mla_paged_program(**cfg)
         else:
             yield name, mla_prefill_program(**cfg)
@@ -332,7 +354,7 @@ def parity_inputs(name, program, rng):
     ps = cfg["page_size"]
     pages = rng.permutation(np_ - 1)[: slots * mp] + 1  # page 0 reserved
     pages = pages.reshape(slots, mp).astype("int32")
-    if name == "mla_paged":
+    if name.startswith("mla_paged"):
         lens = rng.integers(1, mp * ps + 1, size=slots).astype("int32")
         scalars = [pages, lens]
         nskip = 2

@@ -256,16 +256,20 @@ def mla(q, q_pe, kv, k_pe, *, sm_scale=None, backend: Optional[str] = None,
 
 
 def mla_paged(q_lat, q_pe, ckv_pages, kpe_pages, block_tables, seq_lens, *,
-              sm_scale=None, backend: Optional[str] = None, block_h: int = 64,
+              sm_scale=None, window: Optional[int] = None,
+              logit_soft_cap: Optional[float] = None,
+              backend: Optional[str] = None, block_h: int = 64,
               num_stages: int = 2):
     """Paged MLA decode: latent queries (B, H, R) against latent/rope page
     pools gathered through a block table (see kernels/mla.py).  The Pallas
     path is the scalar-prefetch tile kernel; the XLA path is ref.mla_paged
-    (what the serving engine runs on CPU hosts)."""
+    (what the serving engine runs on CPU hosts).  Soft-capped models route
+    to the oracle — same policy as paged_attention."""
     be = _resolve(backend)
-    if be == "xla":
+    if be == "xla" or logit_soft_cap is not None:
         return ref.mla_paged(q_lat, q_pe, ckv_pages, kpe_pages, block_tables,
-                             seq_lens, sm_scale=sm_scale)
+                             seq_lens, sm_scale=sm_scale, window=window,
+                             logit_soft_cap=logit_soft_cap)
     b, h, r = q_lat.shape
     pe = q_pe.shape[-1]
     num_pages, page_size, _ = ckv_pages.shape
@@ -274,12 +278,12 @@ def mla_paged(q_lat, q_pe, ckv_pages, kpe_pages, block_tables, seq_lens, *,
     while h % bh:
         bh -= 1
     key = ("mla_paged", b, h, r, pe, num_pages, page_size, max_pages,
-           str(q_lat.dtype), bh, num_stages, sm_scale)
+           str(q_lat.dtype), bh, num_stages, sm_scale, window)
     kern = _cached(
         key,
         lambda: mla_paged_program(
             b, h, r, pe, page_size, max_pages, num_pages, bh,
-            str(q_lat.dtype), "float32", num_stages, sm_scale,
+            str(q_lat.dtype), "float32", num_stages, sm_scale, window,
         ),
     )
     return kern(block_tables, seq_lens, q_lat, q_pe, ckv_pages, kpe_pages)
@@ -287,6 +291,8 @@ def mla_paged(q_lat, q_pe, ckv_pages, kpe_pages, block_tables, seq_lens, *,
 
 def mla_prefill(q_lat, q_pe, ckv_new, kpe_new, ckv_pages, kpe_pages,
                 block_tables, start_lens, chunk_lens, *, sm_scale=None,
+                window: Optional[int] = None,
+                logit_soft_cap: Optional[float] = None,
                 backend: Optional[str] = None, num_stages: int = 2):
     """MLA chunked prefill over the latent page pools.
 
@@ -306,15 +312,15 @@ def mla_prefill(q_lat, q_pe, ckv_new, kpe_new, ckv_pages, kpe_pages,
     pe = q_pe.shape[-1]
     num_pages, page_size, _ = ckv_pages.shape
     max_pages = block_tables.shape[1]
-    if be != "xla" and chunk % page_size == 0 \
+    if be != "xla" and logit_soft_cap is None and chunk % page_size == 0 \
             and chunk // page_size <= max_pages:
         key = ("mla_prefill", b, h, r, pe, num_pages, page_size, max_pages,
-               chunk, str(q_lat.dtype), num_stages, sm_scale)
+               chunk, str(q_lat.dtype), num_stages, sm_scale, window)
         kern = _cached(
             key,
             lambda: mla_prefill_program(
                 b, h, r, pe, chunk, page_size, max_pages, num_pages,
-                str(q_lat.dtype), "float32", num_stages, sm_scale,
+                str(q_lat.dtype), "float32", num_stages, sm_scale, window,
             ),
         )
         # pack queries chunk-major with their head: row = i*heads + h
@@ -346,7 +352,8 @@ def mla_prefill(q_lat, q_pe, ckv_new, kpe_new, ckv_pages, kpe_pages,
         q_lat, q_pe, ckv_new, kpe_new,
         ckv_p[block_tables].reshape(b, -1, r),
         kpe_p[block_tables].reshape(b, -1, pe),
-        ctx_pos, pos, chunk_lens, sm_scale=sm_scale,
+        ctx_pos, pos, chunk_lens, sm_scale=sm_scale, window=window,
+        logit_soft_cap=logit_soft_cap,
     )
     return out, ckv_p, kpe_p
 

@@ -339,6 +339,8 @@ def mla_masked(
     k_pe: jax.Array,  # (B, S, Dpe)
     kv_len: jax.Array,  # (B,) or scalar live length per slot
     sm_scale: float,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
 ) -> jax.Array:
     """Latent-space MLA decode attention with a length mask — the single
     oracle both latent layouts share: the contiguous decode path feeds the
@@ -347,10 +349,17 @@ def mla_masked(
     scores = (
         jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32), c_kv.astype(jnp.float32))
         + jnp.einsum("bhp,bsp->bhs", q_pe.astype(jnp.float32), k_pe.astype(jnp.float32))
-    )
+    ) * sm_scale
+    # scale first, then cap — the same order as attention()'s _attn_block,
+    # so latent and standard attention stay token-identical for capped models
+    if logit_soft_cap is not None:
+        scores = logit_soft_cap * jnp.tanh(scores / logit_soft_cap)
     kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (scores.shape[0],))
-    mask = jnp.arange(c_kv.shape[1])[None, None, :] < kv_len[:, None, None]
-    scores = jnp.where(mask, scores * sm_scale, -jnp.inf)
+    ki = jnp.arange(c_kv.shape[1], dtype=jnp.int32)
+    mask = ki[None, None, :] < kv_len[:, None, None]
+    if window is not None:
+        mask = mask & (ki[None, None, :] >= (kv_len[:, None, None] - window))
+    scores = jnp.where(mask, scores, -jnp.inf)
     p = jax.nn.softmax(scores, axis=-1)
     return jnp.einsum("bhs,bsr->bhr", p, c_kv.astype(jnp.float32))
 
@@ -363,6 +372,8 @@ def mla_paged(
     block_tables: jax.Array,  # (B, max_pages) int32 physical page ids
     seq_lens: jax.Array,  # (B,) int32 live length per slot
     sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
     out_dtype=None,
 ) -> jax.Array:
     """Paged MLA decode oracle: gather each slot's latent/rope pages through
@@ -374,7 +385,8 @@ def mla_paged(
         sm_scale = 1.0 / np.sqrt(r + q_pe.shape[-1])
     ckv = ckv_pages[block_tables].reshape(b, -1, r)
     kpe = kpe_pages[block_tables].reshape(b, -1, kpe_pages.shape[-1])
-    out = mla_masked(q_lat, q_pe, ckv, kpe, seq_lens, sm_scale)
+    out = mla_masked(q_lat, q_pe, ckv, kpe, seq_lens, sm_scale,
+                     window=window, logit_soft_cap=logit_soft_cap)
     return out.astype(out_dtype or q_lat.dtype)
 
 
@@ -389,6 +401,8 @@ def mla_prefill(
     q_pos: jax.Array,  # (B, C) int32 absolute position per query
     chunk_lens: jax.Array,  # (B,) live tokens in the chunk (0 = inactive slot)
     sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
     out_dtype=None,
 ) -> jax.Array:
     """MLA chunked-prefill oracle: masked two-part latent attention
@@ -403,10 +417,13 @@ def mla_prefill(
     qpef = q_pe.astype(jnp.float32)
 
     def scores_of(kv, pe):
-        return (
+        s = (
             jnp.einsum("bhcr,bsr->bhcs", qf, kv.astype(jnp.float32))
             + jnp.einsum("bhcp,bsp->bhcs", qpef, pe.astype(jnp.float32))
         ) * sm_scale
+        if logit_soft_cap is not None:
+            s = logit_soft_cap * jnp.tanh(s / logit_soft_cap)
+        return s
 
     s_ctx = scores_of(ckv_ctx, kpe_ctx)  # (B, H, C, S)
     s_new = scores_of(ckv_new, kpe_new)  # (B, H, C, C)
@@ -418,6 +435,9 @@ def mla_prefill(
     m_new = (ci[None, None, :] <= ci[None, :, None]) & (
         ci[None, None, :] < lens[:, None, None]
     )
+    if window is not None:
+        m_ctx = m_ctx & ((qp[:, :, None] - cp[:, None, :]) < window)
+        m_new = m_new & ((ci[None, :, None] - ci[None, None, :]) < window)
     mask = jnp.concatenate(
         [
             jnp.broadcast_to(m_ctx, (b, c, s_ctx.shape[-1])),

@@ -442,7 +442,7 @@ def _mla_out_proj(params, out_lat, x_dtype, cfg: ModelConfig):
     return jnp.einsum("...e,ed->...d", out, params["w_o"])
 
 
-def mla_decode(params, x, cfg: ModelConfig, cache, pos):
+def mla_decode(params, x, cfg: ModelConfig, cache, pos, window=None):
     """Latent-cache decode: absorb W_uk into q and attend in latent space —
     the FlashMLA serving path (paper Fig. 18), backed by our MLA kernel."""
     m = cfg.mla
@@ -461,6 +461,7 @@ def mla_decode(params, x, cfg: ModelConfig, cache, pos):
     out_lat = ref.mla_masked(
         q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype),
         cache_ckv[:, :, 0], cache_kpe[:, :, 0], pos + 1, sm,
+        window=window, logit_soft_cap=cfg.logit_soft_cap,
     )
     proj = _mla_out_proj(params, out_lat, x.dtype, cfg)[:, None]
     return proj, {"c_kv": cache_ckv, "k_pe": cache_kpe}
@@ -490,7 +491,8 @@ def _mla_decode_qkv(params, x, cfg: ModelConfig, posv):
     return q_nope, q_pe, c_kv, k_pe
 
 
-def mla_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables):
+def mla_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables,
+                     window=None):
     """One-token MLA decode against the **latent page pools** — the paged
     twin of :func:`mla_decode`.  The token's latent/rope entries are
     scattered into the page holding position ``pos`` through the block
@@ -512,7 +514,8 @@ def mla_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables):
     sm = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     out_lat = ops.mla_paged(
         q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), ckv_pages, kpe_pages,
-        tables, posb + 1, sm_scale=sm,
+        tables, posb + 1, sm_scale=sm, window=window,
+        logit_soft_cap=cfg.logit_soft_cap,
         backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
     )
     proj = _mla_out_proj(params, out_lat, x.dtype, cfg)[:, None]
@@ -542,7 +545,8 @@ def _mla_prefill_qkv(params, x, cfg: ModelConfig, posmat):
             c_kv, k_pe, sm)
 
 
-def mla_prefill_paged(params, x, cfg: ModelConfig, cache, pos, tables, lens):
+def mla_prefill_paged(params, x, cfg: ModelConfig, cache, pos, tables, lens,
+                      window=None):
     """Chunk-wide MLA prefill against the latent page pools.  Same contract
     as :func:`attention_prefill_paged` — the chunk's latents land in the
     pages holding positions [pos, pos+lens) through the block table (inside
@@ -556,18 +560,20 @@ def mla_prefill_paged(params, x, cfg: ModelConfig, cache, pos, tables, lens):
     out_lat, ckv_pages, kpe_pages = ops.mla_prefill(
         q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), c_kv, k_pe,
         cache["ckv_pages"], cache["kpe_pages"], tables, posb,
-        jnp.asarray(lens, jnp.int32), sm_scale=sm,
+        jnp.asarray(lens, jnp.int32), sm_scale=sm, window=window,
+        logit_soft_cap=cfg.logit_soft_cap,
         backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
     )
     proj = _mla_out_proj(params, out_lat.transpose(0, 2, 1, 3), x.dtype, cfg)
     return proj, {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages}
 
 
-def mla_prefill(params, x, cfg: ModelConfig, cache, pos, lens):
+def mla_prefill(params, x, cfg: ModelConfig, cache, pos, lens, window=None):
     """Chunk-wide MLA prefill against the contiguous latent strips — the
-    latent twin of :func:`attention_prefill` (no ring variant: MLA has no
-    sliding windows).  Prior context comes from the per-slot strip; the
-    chunk is written back as a gather-select (no scatter)."""
+    latent twin of :func:`attention_prefill`.  The strip stays full-length
+    (no ring variant): a sliding ``window`` only masks scores.  Prior
+    context comes from the per-slot strip; the chunk is written back as a
+    gather-select (no scatter)."""
     b, c, _ = x.shape
     posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     lens = jnp.asarray(lens, jnp.int32)
@@ -579,7 +585,7 @@ def mla_prefill(params, x, cfg: ModelConfig, cache, pos, lens):
     out_lat = ref.mla_prefill(
         q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), c_kv, k_pe,
         cache["c_kv"][:, :, 0], cache["k_pe"][:, :, 0], ctx_pos, posmat,
-        lens, sm_scale=sm,
+        lens, sm_scale=sm, window=window, logit_soft_cap=cfg.logit_soft_cap,
     )
     proj = _mla_out_proj(params, out_lat.transpose(0, 2, 1, 3), x.dtype, cfg)
     # write the chunk into the strip as a gather-select over cache entries

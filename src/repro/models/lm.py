@@ -362,6 +362,40 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     return Cache(prefix, rest, False, max_len, layout, page_size, tables)
 
 
+def copy_pages(cache: Cache, src, dst) -> Cache:
+    """Device-side copy-on-write: duplicate physical pages ``src[i]`` onto
+    ``dst[i]`` in every page-pool leaf of a paged cache.
+
+    The serving engine calls this when a slot must write into a page shared
+    with another table (``SlotTables.ensure_writable`` handed out a fresh
+    page): the shared contents are copied on device — never staged through
+    the host — and the repointed table is uploaded afterwards.  Page pools
+    are identified by their leaf names (``*_pages``: GQA's k/v pools, MLA's
+    latent/rope pools); every pool keeps its page axis at ``ndim - 3``
+    (pages × page_size × feature, with optional head/layer-stack axes in
+    front), so one gather/scatter covers both families, stacked or not.
+    Pairs may be padded with ``(0, 0)`` — copying the reserved garbage page
+    onto itself is a no-op.
+    """
+    if cache.layout != "paged":
+        raise ValueError("copy_pages needs a paged cache")
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def visit(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        if not any(str(n).endswith("_pages") for n in names):
+            return leaf
+        pool = jnp.moveaxis(leaf, leaf.ndim - 3, 0)
+        pool = pool.at[dst].set(pool[src])
+        return jnp.moveaxis(pool, 0, leaf.ndim - 3)
+
+    prefix = jax.tree_util.tree_map_with_path(visit, cache.prefix)
+    rest = jax.tree_util.tree_map_with_path(visit, cache.rest)
+    return Cache(prefix, rest, cache.stacked, cache.max_len, cache.layout,
+                 cache.page_size, cache.tables)
+
+
 def _per_slot(mask, tree_a, tree_b):
     """Select ``tree_a`` where the (B,) ``mask`` holds, else ``tree_b``
     (leaves are batch-major)."""
@@ -404,10 +438,12 @@ def _block_decode(p, x, cfg: ModelConfig, cache, pos, window,
     elif cfg.attention == "mla":
         if layout == "paged":
             delta, mc = L.mla_decode_paged(
-                p["attn"], h, cfg, cache["mla"], pos, tables
+                p["attn"], h, cfg, cache["mla"], pos, tables, window=window
             )
         else:
-            delta, mc = L.mla_decode(p["attn"], h, cfg, cache["mla"], pos)
+            delta, mc = L.mla_decode(
+                p["attn"], h, cfg, cache["mla"], pos, window=window
+            )
         new_cache["mla"] = mc
     if cfg.family in ("ssm", "hybrid"):
         ssm_in = cache["ssm"]
@@ -551,10 +587,13 @@ def _block_prefill(p, x, cfg: ModelConfig, cache, pos, lens, window,
     if cfg.attention == "mla":
         if layout == "paged":
             delta, mc = L.mla_prefill_paged(
-                p["attn"], h, cfg, cache["mla"], pos, tables, lens
+                p["attn"], h, cfg, cache["mla"], pos, tables, lens,
+                window=window
             )
         else:
-            delta, mc = L.mla_prefill(p["attn"], h, cfg, cache["mla"], pos, lens)
+            delta, mc = L.mla_prefill(
+                p["attn"], h, cfg, cache["mla"], pos, lens, window=window
+            )
         new_cache["mla"] = mc
     elif layout == "paged":
         delta, kv = L.attention_prefill_paged(

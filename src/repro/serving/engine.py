@@ -31,6 +31,22 @@ KV memory comes in two layouts behind one ``decode_step`` interface
   (then youngest) request back to the queue when the pool is exhausted
   (recompute-style resume: its prompt *and* generated tokens replay through
   prefill), and completion **recycles blocks immediately** at EOS.
+
+Paged mode additionally runs a **prefix cache** (``ServeConfig.
+prefix_cache``, on by default for the attention families): full pages of
+prompt tokens are indexed in a radix tree over token ids
+(paged_cache.PrefixCache) when a request finishes prefilling, and a new
+request whose prompt prefixes a cached chain *attaches* those pages at
+admission — positions advance past them with **no kernel dispatch at
+all**, so a warm-prefix request's TTFT collapses to the divergent tail
+(~one chunk under chunked prefill).  Pages are refcounted; a slot that
+must write into a shared page goes through copy-on-write
+(``ensure_writable`` + ``lm.copy_pages``) before the step runs, and every
+repoint marks the device block table dirty.  Cached pages nobody
+references are reclaimed LRU-first when admission, growth or grow-ahead
+grants run short — a hot pool degrades to the uncached engine rather than
+refusing admission.  SSM/hybrid families gate the cache off: skipped
+positions would skip recurrent-state updates.
 * ``"contiguous"`` — the legacy per-slot ``max_len`` strip (ring buffers
   for sliding-window layers); preallocates ``slots × max_len`` regardless
   of real prompt lengths.  Kept as the comparison baseline.
@@ -77,7 +93,13 @@ import numpy as np
 from repro.models import lm
 from repro.models.config import ModelConfig
 
-from .paged_cache import BlockPool, PoolExhausted, SlotTables, blocks_for
+from .paged_cache import (
+    BlockPool,
+    PoolExhausted,
+    PrefixCache,
+    SlotTables,
+    blocks_for,
+)
 from .sampling import sample_step
 
 # One jit'd decode step per (model configuration, sampling temperature),
@@ -178,6 +200,19 @@ def _decode_loop_fn(cfg: ModelConfig, temperature: float, n_steps: int,
     )
 
 
+def _copy_pages_fn(cfg: ModelConfig):
+    """jit'd copy-on-write page duplication (``lm.copy_pages``), donating
+    the cache like every other step so XLA copies pages in place.  One
+    wrapper per model config; distinct pair-count shapes trace separate
+    entries under it (the engine pads pair lists to powers of two to bound
+    the variants)."""
+
+    def build():
+        return jax.jit(lm.copy_pages, donate_argnums=(0,))
+
+    return _cached_fn(("copy_pages", repr(cfg)), build)
+
+
 def plan_prefill_chunks(
     budget: int,
     n_gen: int,
@@ -232,6 +267,12 @@ class ServeConfig:
     # decode batch).  Effective budget is floored at `slots` so a full
     # generation batch always fits.
     token_budget: Optional[int] = None
+    # -- prefix caching ---------------------------------------------------
+    # index full prompt pages in a radix tree and attach cache-hit pages at
+    # admission (refcounted sharing + copy-on-write).  Paged mode only;
+    # gated off automatically for SSM/hybrid families, whose recurrent
+    # state cannot skip positions.
+    prefix_cache: bool = True
     # -- device-resident decode loop --------------------------------------
     # decode ticks per host dispatch: 1 = legacy per-tick stepping; N > 1
     # runs up to N ticks in one jax.lax.scan when every active slot is
@@ -255,6 +296,8 @@ class Request:
     error: Optional[str] = None  # set when the request can never be served
     submit_step: int = 0  # engine tick at submission
     first_token_step: Optional[int] = None  # tick that produced output[0]
+    admit_step: Optional[int] = None  # tick of first admission into a slot
+    cached_tokens: int = 0  # prompt tokens covered by prefix-cache hits
 
     @property
     def ttft_ticks(self) -> Optional[int]:
@@ -262,6 +305,15 @@ class Request:
         if self.first_token_step is None:
             return None
         return self.first_token_step - self.submit_step + 1
+
+    @property
+    def ttft_admit_ticks(self) -> Optional[int]:
+        """Engine ticks from first admission to the first generated token —
+        the queue-independent TTFT (what prefix caching shrinks: prefill
+        work, not time spent waiting for a slot)."""
+        if self.first_token_step is None or self.admit_step is None:
+            return None
+        return self.first_token_step - self.admit_step + 1
 
 
 class ServingEngine:
@@ -296,6 +348,22 @@ class ServingEngine:
             self.pool = None
             self.tables = None
             self.cache = lm.init_cache(cfg, b, serve_cfg.max_len)
+
+        # prefix cache: paged attention families only — skipping cached
+        # positions is only sound when all per-position state lives in the
+        # (shareable) KV pages; recurrent SSM/hybrid state must replay
+        self.prefix: Optional[PrefixCache] = None
+        if (
+            mode == "paged"
+            and serve_cfg.prefix_cache
+            and lm.supports_chunked_prefill(cfg)
+        ):
+            self.prefix = PrefixCache(
+                self.pool, salt=(cfg.name, serve_cfg.page_size)
+            )
+        self.pages_shared = 0  # cache-hit pages attached at admission
+        self.pages_copied = 0  # copy-on-write page duplications
+        self.pages_deduped = 0  # duplicate prefill pages absorbed at insert
 
         self.pos = np.zeros((b,), np.int32)  # next write position per slot
         self.slot_req: List[Optional[Request]] = [None] * b
@@ -389,15 +457,40 @@ class ServingEngine:
                     req.done = True
                     self.completed.append(req)
                     continue
-                if self.pool.free < need:
+                matched: List[int] = []
+                if self.prefix is not None:
+                    # cap the match so at least one replay token remains (the
+                    # decode loop needs a real last token to feed) and so only
+                    # prompt pages are ever consumed from the cache — resumed
+                    # preemptees replay prompt + output, but output pages are
+                    # never published to the index.
+                    ps = self.pool.page_size
+                    replay_len = len(req.prompt) + len(req.output)
+                    cap = min(len(req.prompt), replay_len - 1) // ps
+                    matched = self.prefix.match(req.prompt, cap)
+                shortfall = (need - len(matched)) - self.pool.free
+                if shortfall > 0 and self.prefix is not None:
+                    self.prefix.evict(shortfall, protect=frozenset(matched))
+                if self.pool.free < need - len(matched):
                     break
+            else:
+                matched = []
             self.queue.popleft()
             self.slot_req[s] = req
             self.slot_state[s] = "prefill"
-            self.pos[s] = 0
-            req._cursor = 0  # type: ignore[attr-defined]
+            start = len(matched) * self.pool.page_size if matched else 0
+            self.pos[s] = start
+            req._cursor = start  # type: ignore[attr-defined]
             req._admit_seq = next(self._admit_seq)  # type: ignore[attr-defined]
+            req._prefix_done = False  # type: ignore[attr-defined]
+            if req.admit_step is None:
+                req.admit_step = self.steps_run
+            req.cached_tokens = start
             if self.tables is not None:
+                if matched:
+                    self.tables.attach(s, matched)
+                    self.pages_shared += len(matched)
+                    self._tables_dirty = True
                 if self.tables.ensure_capacity(
                     s, self._resident_tokens(req), req.uid
                 ):
@@ -429,6 +522,27 @@ class ServingEngine:
         self.preemptions += 1
         self.queue.appendleft(req)
 
+    def _reclaim(self, want: int) -> int:
+        """Evict up to ``want`` unreferenced prefix-cache pages back to the
+        pool. Cached-but-unused pages are the cheapest blocks to reclaim, so
+        they always go before any live slot is preempted."""
+        if self.prefix is None or want <= 0:
+            return 0
+        return self.prefix.evict(want)
+
+    def _ensure_with_evict(self, s: int, target_tokens: int, owner) -> bool:
+        """ensure_capacity with prefix-cache eviction as the pressure valve.
+        Returns False only when eviction cannot free enough blocks."""
+        while True:
+            try:
+                if self.tables.ensure_capacity(s, target_tokens, owner):
+                    self._tables_dirty = True
+                return True
+            except PoolExhausted:
+                need = blocks_for(target_tokens, self.pool.page_size) - self.tables.num_blocks(s)
+                if self.prefix is None or self.prefix.evict(need - self.pool.free) == 0:
+                    return False
+
     def _grow(self, s: int) -> bool:
         """Ensure slot ``s`` can write at ``pos[s]``; preempt on exhaustion.
         Returns False when ``s`` itself was evicted to make room."""
@@ -444,21 +558,18 @@ class ServingEngine:
             self.completed.append(req)
             return False
         while True:
-            try:
-                if self.tables.ensure_capacity(s, int(self.pos[s]) + 1, req.uid):
-                    self._tables_dirty = True
+            if self._ensure_with_evict(s, int(self.pos[s]) + 1, req.uid):
                 return True
-            except PoolExhausted:
-                victim = self._pick_victim(exclude=s)
-                if victim is None:
-                    self._preempt(s)
-                    return False
-                # don't evict someone strictly more important than s
-                v = self.slot_req[victim]
-                if (v.priority, -v._admit_seq) > (req.priority, -req._admit_seq):  # type: ignore[attr-defined]
-                    self._preempt(s)
-                    return False
-                self._preempt(victim)
+            victim = self._pick_victim(exclude=s)
+            if victim is None:
+                self._preempt(s)
+                return False
+            # don't evict someone strictly more important than s
+            v = self.slot_req[victim]
+            if (v.priority, -v._admit_seq) > (req.priority, -req._admit_seq):  # type: ignore[attr-defined]
+                self._preempt(s)
+                return False
+            self._preempt(victim)
 
     def _finish(self, s: int, req: Request):
         req.done = True
@@ -555,10 +666,7 @@ class ServingEngine:
             req = self.slot_req[s]
             span = min(n, int(rem[s]) + 1)
             target = min(int(self.pos[s]) + span, self.scfg.max_len)
-            try:
-                if self.tables.ensure_capacity(s, target, req.uid):
-                    self._tables_dirty = True
-            except PoolExhausted:
+            if not self._ensure_with_evict(s, target, req.uid):
                 ps = self.pool.page_size
                 for t in active:
                     self.tables.trim(t, pre[t] * ps)
@@ -596,8 +704,16 @@ class ServingEngine:
         )
         while n // 2 >= max_span:
             n //= 2
-        if self.tables is not None and not self._grant_window(active, n, rem):
-            return None
+        if self.tables is not None:
+            if not self._grant_window(active, n, rem):
+                return None
+            pairs: List[Tuple[int, int]] = []
+            for s in active:
+                span = min(n, int(rem[s]) + 1)
+                target = min(int(self.pos[s]) + span, self.scfg.max_len)
+                last = max(int(self.pos[s]), target - 1)
+                pairs += self._cow_range(s, last)
+            self._apply_cow(pairs)
         loop = self._loop_fns.get(n)
         if loop is None:
             loop = self._loop_fns[n] = _decode_loop_fn(
@@ -637,6 +753,72 @@ class ServingEngine:
                         self._tables_dirty = True
         return len(active)
 
+    # -- prefix-cache bookkeeping ---------------------------------------
+    def _register_prefix(self, s: int, req: Request):
+        """Publish the slot's full prompt pages into the prefix index once
+        prefill completes.  ``insert`` retains each new page; pages already
+        cached come back as (idx, cached_page) pairs and the slot's table is
+        repointed at the canonical copy so the duplicate recycles — the
+        device copy of the table is re-uploaded before the next dispatch."""
+        if self.prefix is None or getattr(req, "_prefix_done", False):
+            return
+        req._prefix_done = True  # type: ignore[attr-defined]
+        ps = self.pool.page_size
+        n_pages = min(len(req.prompt) // ps, self.tables.num_blocks(s))
+        if n_pages <= 0:
+            return
+        pages = self.tables.blocks(s)[:n_pages]
+        for idx, cached in self.prefix.insert(req.prompt[: n_pages * ps], pages):
+            self.tables.repoint(s, idx, cached)
+            self.pages_deduped += 1
+            self._tables_dirty = True
+
+    def _cow_range(self, s: int, last_pos: int) -> List[Tuple[int, int]]:
+        """Copy-on-write guard for the pages slot ``s`` may write this
+        dispatch (positions ``pos[s]..last_pos``).  Shared pages (refcount
+        > 1) are swapped for fresh private copies and the table repointed;
+        returns the (src, dst) page pairs still needing a device-side copy.
+
+        In the normal flow this never fires: only *full* prompt pages are
+        published to the index and matches are capped so the divergent tail
+        starts page-aligned — a shared page is never written.  The guard
+        exists so sharing stays safe by construction (tests pin it via
+        manually attached partial pages), not by scheduler luck."""
+        pairs: List[Tuple[int, int]] = []
+        ps = self.pool.page_size
+        req = self.slot_req[s]
+        first = int(self.pos[s]) // ps
+        last = min(last_pos // ps, self.tables.num_blocks(s) - 1)
+        for pidx in range(first, last + 1):
+            try:
+                pair = self.tables.ensure_writable(s, pidx, req.uid)
+            except PoolExhausted:
+                self._reclaim(1)
+                pair = self.tables.ensure_writable(s, pidx, req.uid)
+            if pair:
+                pairs.append(pair)
+        return pairs
+
+    def _apply_cow(self, pairs: List[Tuple[int, int]]):
+        """Run the device-side page copies for COW repoints.  Pairs are
+        padded to a power-of-two count to bound jit trace variants; padding
+        copies page 0 onto itself (page 0 is reserved, never shared)."""
+        if not pairs:
+            return
+        self.pages_copied += len(pairs)
+        self._tables_dirty = True
+        n = 1
+        while n < len(pairs):
+            n *= 2
+        src = np.zeros((n,), np.int32)
+        dst = np.zeros((n,), np.int32)
+        for i, (a, b) in enumerate(pairs):
+            src[i] = a
+            dst[i] = b
+        self.cache = _copy_pages_fn(self.cfg)(
+            self.cache, jnp.asarray(src), jnp.asarray(dst)
+        )
+
     # -- per-tick paths -------------------------------------------------
     def _step_replay(self, active: List[int]) -> int:
         feed = np.zeros((self.scfg.slots,), np.int32)
@@ -651,6 +833,11 @@ class ServingEngine:
                 req.prompt[cur] if cur < np_ else req.output[cur - np_]
             )
             live[s] = True
+        if self.tables is not None:
+            pairs: List[Tuple[int, int]] = []
+            for s in active:
+                pairs += self._cow_range(s, int(self.pos[s]))
+            self._apply_cow(pairs)
         next_tok, self.cache, self._key = self._step(
             self.params, self._fresh_cache(), jnp.asarray(feed),
             jnp.asarray(self.pos), self._key, jnp.asarray(live),
@@ -662,6 +849,7 @@ class ServingEngine:
             self.pos[s] += 1
             req._cursor = cur + 1  # type: ignore[attr-defined]
             if cur + 1 >= full_len[s]:  # this step produced a real token
+                self._register_prefix(s, req)
                 self._emit_token(s, req, int(next_tok[s]))
         self.tick_tokens.append(len(active))
         self.steps_run += 1
@@ -690,6 +878,11 @@ class ServingEngine:
                 req = self.slot_req[s]
                 feed[s] = req.output[-1]
                 live[s] = True
+            if self.tables is not None:
+                pairs: List[Tuple[int, int]] = []
+                for s in gen:
+                    pairs += self._cow_range(s, int(self.pos[s]))
+                self._apply_cow(pairs)
             next_tok, self.cache, self._key = self._step(
                 self.params, self._fresh_cache(), jnp.asarray(feed),
                 jnp.asarray(self.pos), self._key, jnp.asarray(live),
@@ -711,6 +904,11 @@ class ServingEngine:
                 replay = (req.prompt + req.output)[cur : cur + n]
                 toks[s, :n] = replay
                 lens[s] = n
+            if self.tables is not None:
+                cow_pairs: List[Tuple[int, int]] = []
+                for s, n in chunk_lens.items():
+                    cow_pairs += self._cow_range(s, int(self.pos[s]) + n - 1)
+                self._apply_cow(cow_pairs)
             ptok, self.cache, self._key = self._prefill(
                 self.params, self._fresh_cache(), jnp.asarray(toks),
                 jnp.asarray(self.pos), jnp.asarray(lens), self._key,
@@ -724,6 +922,7 @@ class ServingEngine:
                     # the chunk reached the end of the replay stream: its
                     # last live logits produce the next real token
                     self.slot_state[s] = "gen"
+                    self._register_prefix(s, req)
                     self._emit_token(s, req, int(ptok[s]))
 
         self.tick_tokens.append(len(gen) + sum(chunk_lens.values()))

@@ -1,4 +1,5 @@
-"""Paged KV cache bookkeeping: block pool + per-slot block tables.
+"""Paged KV cache bookkeeping: refcounted block pool, per-slot block tables
+with copy-on-write, and the prefix-cache radix index.
 
 The vLLM insight applied to the tile model: the KV cache is a pool of
 fixed-size **blocks** (pages) of ``page_size`` tokens, and each request owns
@@ -6,6 +7,26 @@ an ordered list of physical blocks — its *block table* — instead of a
 contiguous ``max_len`` strip.  Memory then scales with the tokens actually
 resident, not ``slots x max_len``; admission/preemption decisions reduce to
 free-block counting.
+
+Blocks are **refcounted** so N slot tables (and the prefix index) can share
+one physical page: two block tables pointing at the same page *is* the
+sharing mechanism — the table-directed gather in the paged kernels needs no
+change at all.  ``release`` decrements; a block recycles when its count
+hits zero.  A slot that must write into a shared page first goes through
+:meth:`SlotTables.ensure_writable` — **copy-on-write**: it gets a fresh
+page, the caller copies the shared contents device-side
+(``models.lm.copy_pages``), and the table entry is repointed before the
+step runs.
+
+:class:`PrefixCache` is the SGLang-style radix index over token ids at page
+granularity: full pages of prompt tokens map to chains of physical pages.
+Chain keys are rolling hashes (``hash((parent_key, page_tokens))`` from a
+per-model-config salted root) but child lookup is by the exact token block,
+so a hash collision can never alias two different prefixes.  The index
+holds one reference per cached page; eviction (LRU leaves first) only ever
+reclaims pages with refcount 1 — pages no slot table references — so a hot
+pool degrades gracefully to the uncached behavior instead of failing
+admission.
 
 Everything here is host-side (numpy/python) bookkeeping: allocation,
 per-slot tables, the padded ``(slots, max_pages)`` int32 table tensor the
@@ -16,21 +37,24 @@ table.
 
 Invariants (property-tested in tests/test_property.py):
 
-* a block is owned by at most one slot at a time (never double-assigned);
-* alloc/free round-trips conserve blocks (never leak);
+* a block recycles exactly when its refcount reaches zero (alloc/retain/
+  release conserve blocks — never leak, never free early);
+* after a copy-on-write the written page is reachable from exactly one
+  table;
+* eviction never reclaims a page with refcount > 1;
 * table entries beyond a slot's live length hold page 0 — a *valid* page id
   (the kernel DMAs padding pages and masks their contribution).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
 class PoolExhausted(Exception):
-    """No free blocks; caller should preempt or queue."""
+    """No free blocks; caller should evict cached pages, preempt or queue."""
 
 
 def blocks_for(num_tokens: int, page_size: int) -> int:
@@ -39,7 +63,14 @@ def blocks_for(num_tokens: int, page_size: int) -> int:
 
 
 class BlockPool:
-    """Fixed pool of KV blocks with owner tracking and peak accounting.
+    """Fixed pool of refcounted KV blocks with owner tracking and peak
+    accounting.
+
+    ``alloc`` hands out a block at refcount 1; ``retain`` adds a reference
+    (a second table, the prefix index); ``release`` drops one — the block
+    returns to the free list only at zero.  ``in_use``/``peak_in_use``
+    count *physical* blocks, not references: that is what admission and
+    memory accounting care about.
 
     ``base`` offsets the physical ids handed out: the serving engine uses
     ``base=1`` so physical page 0 is never allocatable — it is the padding
@@ -57,8 +88,10 @@ class BlockPool:
         self._free: List[int] = list(
             range(base + self.num_blocks - 1, base - 1, -1)
         )
+        self._ref: Dict[int, int] = {}
         self._owner: Dict[int, object] = {}
         self.peak_in_use = 0
+        self.total_allocs = 0  # cumulative alloc() calls (sharing avoids them)
 
     # ------------------------------------------------------------------
     @property
@@ -79,16 +112,31 @@ class BlockPool:
                 f"all {self.num_blocks} KV blocks in use"
             )
         blk = self._free.pop()
+        self._ref[blk] = 1
         self._owner[blk] = owner
         self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.total_allocs += 1
         return blk
 
-    def release(self, blocks: List[int]) -> None:
+    def retain(self, block: int) -> None:
+        """Add a reference to an allocated block (page sharing)."""
+        if block not in self._ref:
+            raise ValueError(f"retain of free KV block {block}")
+        self._ref[block] += 1
+
+    def release(self, blocks: Sequence[int]) -> None:
+        """Drop one reference per listed block; recycle at zero."""
         for blk in blocks:
-            if blk not in self._owner:
+            if blk not in self._ref:
                 raise ValueError(f"double free of KV block {blk}")
-            del self._owner[blk]
-            self._free.append(blk)
+            self._ref[blk] -= 1
+            if self._ref[blk] == 0:
+                del self._ref[blk]
+                del self._owner[blk]
+                self._free.append(blk)
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
 
     def owner_of(self, block: int) -> object:
         return self._owner.get(block)
@@ -100,6 +148,11 @@ class SlotTables:
 
     ``tables()`` returns the ``(slots, max_pages)`` int32 array the decode
     step consumes; unowned entries point at page 0 (valid but masked).
+
+    Sharing-aware operations: :meth:`attach` installs already-filled pages
+    (cache hits) into a slot's table, :meth:`repoint` swaps one entry for a
+    deduplicated twin, and :meth:`ensure_writable` is the copy-on-write
+    gate every write path runs before touching a page.
     """
 
     pool: BlockPool
@@ -144,11 +197,61 @@ class SlotTables:
             self._np[slot, len(self._blocks[slot]) - 1] = blk
         return grow
 
+    def attach(self, slot: int, pages: Sequence[int]) -> int:
+        """Append already-filled ``pages`` (a prefix-cache hit) to ``slot``'s
+        table, retaining each — the slot now co-owns them with whoever
+        filled them.  Returns the number of pages attached."""
+        blks = self._blocks[slot]
+        if len(blks) + len(pages) > self.max_pages:
+            raise ValueError(
+                f"slot {slot}: attaching {len(pages)} pages onto "
+                f"{len(blks)} exceeds max_pages={self.max_pages}"
+            )
+        for p in pages:
+            self.pool.retain(p)
+            blks.append(p)
+            self._np[slot, len(blks) - 1] = p
+        return len(pages)
+
+    def repoint(self, slot: int, page_idx: int, page: int) -> None:
+        """Swap the entry at ``page_idx`` for ``page`` (dedup: an identical
+        page already cached elsewhere).  Retains the new page, drops the
+        slot's reference on the old one."""
+        old = self._blocks[slot][page_idx]
+        if old == page:
+            return
+        self.pool.retain(page)
+        self.pool.release([old])
+        self._blocks[slot][page_idx] = page
+        self._np[slot, page_idx] = page
+
+    def ensure_writable(self, slot: int, page_idx: int,
+                        owner=None) -> Optional[Tuple[int, int]]:
+        """Copy-on-write gate: make the page at ``page_idx`` exclusively
+        ``slot``'s before a write lands in it.
+
+        A page referenced only by this table (refcount 1) is already
+        writable — returns ``None``.  A shared page gets a fresh block, the
+        table entry is repointed, and ``(src, dst)`` is returned: the
+        caller must copy page ``src`` onto ``dst`` device-side
+        (``models.lm.copy_pages``) *before* dispatching the step, then
+        re-upload the table.  Raises :class:`PoolExhausted` when no fresh
+        block is available (the caller may evict cached pages and retry)."""
+        blk = self._blocks[slot][page_idx]
+        if self.pool.refcount(blk) <= 1:
+            return None
+        fresh = self.pool.alloc(owner)
+        self.pool.release([blk])
+        self._blocks[slot][page_idx] = fresh
+        self._np[slot, page_idx] = fresh
+        return (blk, fresh)
+
     def trim(self, slot: int, num_tokens: int) -> int:
         """Release ``slot``'s blocks beyond those holding ``num_tokens``
         tokens (the multi-step engine's grow-ahead give-back: unused
         worst-case pages return to the pool at the sync boundary).  Returns
-        the number of blocks released."""
+        the number of blocks dropped from the table (shared blocks survive
+        under their remaining references)."""
         need = blocks_for(num_tokens, self.pool.page_size) if num_tokens > 0 else 0
         blks = self._blocks[slot]
         extra = blks[need:]
@@ -160,7 +263,8 @@ class SlotTables:
         return len(extra)
 
     def release_slot(self, slot: int) -> int:
-        """Return all of ``slot``'s blocks to the pool (EOS / preemption)."""
+        """Drop all of ``slot``'s references (EOS / preemption); unshared
+        blocks return to the pool."""
         blks = self._blocks[slot]
         n = len(blks)
         self.pool.release(blks)
@@ -179,3 +283,163 @@ class SlotTables:
                 f"slot {slot} pos {pos}: logical page {page} not allocated"
             )
         return self._blocks[slot][page]
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: radix index over token ids -> page chains
+# ---------------------------------------------------------------------------
+
+
+class _PrefixNode:
+    """One full page of cached tokens: a radix-tree edge labelled by the
+    page's token block, holding the physical page those tokens' KV lives
+    in."""
+
+    __slots__ = ("page", "key", "parent", "token_block", "children",
+                 "last_use")
+
+    def __init__(self, page, key, parent, token_block):
+        self.page = page
+        self.key = key
+        self.parent = parent
+        self.token_block = token_block
+        self.children: Dict[tuple, "_PrefixNode"] = {}
+        self.last_use = 0
+
+
+class PrefixCache:
+    """Radix index mapping token-id prefixes to chains of filled KV pages
+    (SGLang's radix attention at page granularity).
+
+    Nodes are whole pages: a prompt contributes ``len(prompt) //
+    page_size`` nodes, each holding the physical page whose KV was computed
+    from exactly that token prefix.  Node keys are rolling content hashes —
+    ``hash((parent_key, page_tokens))`` seeded from a per-model-config salt
+    — used as chain identity; child *lookup* is by the exact token block,
+    so hash collisions can never alias two different prefixes.
+
+    The index holds one pool reference per cached page (``retain`` on
+    insert).  :meth:`match` returns the longest cached page chain for a
+    prompt (LRU-touched), :meth:`insert` indexes freshly-filled pages and
+    reports duplicates for the caller to absorb, and :meth:`evict` reclaims
+    LRU leaf pages **only** when no slot table references them (pool
+    refcount 1) — the graceful-degradation contract: a hot pool behaves
+    like an uncached engine rather than refusing admission.
+    """
+
+    def __init__(self, pool: BlockPool, salt: tuple = ()):
+        self.pool = pool
+        self.page_size = pool.page_size
+        root_key = hash(("prefix-root", tuple(salt)))
+        self._root = _PrefixNode(None, root_key, None, None)
+        self._clock = 0
+        self.hits = 0
+        self.lookups = 0
+        self.insertions = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _blocks_of(self, tokens: Sequence[int]) -> List[tuple]:
+        ps = self.page_size
+        return [
+            tuple(tokens[i * ps:(i + 1) * ps])
+            for i in range(len(tokens) // ps)
+        ]
+
+    @property
+    def pages(self) -> int:
+        """Physical pages currently held by the index."""
+        n, stack = 0, [self._root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            n += 1
+        return n - 1  # root holds no page
+
+    # ------------------------------------------------------------------
+    def match(self, tokens: Sequence[int],
+              max_pages: Optional[int] = None) -> List[int]:
+        """Longest cached chain of full pages prefixing ``tokens`` (at most
+        ``max_pages`` of them), LRU-touched.  Returns the physical page
+        ids in logical order; the caller attaches them to a slot table
+        (which takes the references) before any further allocation can
+        evict them."""
+        self.lookups += 1
+        now = self._tick()
+        node = self._root
+        pages: List[int] = []
+        blocks = self._blocks_of(tokens)
+        if max_pages is not None:
+            blocks = blocks[: max(0, max_pages)]
+        for blk in blocks:
+            child = node.children.get(blk)
+            if child is None:
+                break
+            child.last_use = now
+            pages.append(child.page)
+            node = child
+        if pages:
+            self.hits += 1
+        return pages
+
+    def insert(self, tokens: Sequence[int],
+               pages: Sequence[int]) -> List[Tuple[int, int]]:
+        """Index ``pages`` — the physical pages now holding the full-page
+        prefix of ``tokens`` — retaining each newly-indexed page.
+
+        Content-hash dedup happens here: when a token block is already
+        cached under a *different* physical page (two requests prefilled
+        the same prompt concurrently), the existing page wins and ``(idx,
+        cached_page)`` is reported so the caller can repoint its table and
+        free its duplicate copy.  Idempotent for pages already indexed."""
+        now = self._tick()
+        node = self._root
+        dups: List[Tuple[int, int]] = []
+        for idx, blk in enumerate(self._blocks_of(tokens)[: len(pages)]):
+            child = node.children.get(blk)
+            if child is None:
+                page = pages[idx]
+                child = _PrefixNode(page, hash((node.key, blk)), node, blk)
+                node.children[blk] = child
+                self.pool.retain(page)
+                self.insertions += 1
+            elif child.page != pages[idx]:
+                dups.append((idx, child.page))
+            child.last_use = now
+            node = child
+        return dups
+
+    def evict(self, want: int,
+              protect: FrozenSet[int] = frozenset()) -> int:
+        """Reclaim up to ``want`` cached pages, LRU leaves first, skipping
+        ``protect`` (e.g. pages just matched but not yet attached) and any
+        page a slot table still references (pool refcount > 1).  Returns
+        pages freed.  Removing a leaf can expose its parent as the next
+        candidate, so eviction walks chains tail-first — a prefix chain
+        never loses an interior page while a descendant survives."""
+        freed = 0
+        while freed < want:
+            leaves = []
+            stack = [self._root]
+            while stack:
+                nd = stack.pop()
+                stack.extend(nd.children.values())
+                if nd is not self._root and not nd.children:
+                    if nd.page not in protect and \
+                            self.pool.refcount(nd.page) == 1:
+                        leaves.append(nd)
+            if not leaves:
+                break
+            leaves.sort(key=lambda n: n.last_use)
+            for nd in leaves:
+                if freed >= want:
+                    break
+                del nd.parent.children[nd.token_block]
+                self.pool.release([nd.page])
+                self.evictions += 1
+                freed += 1
+        return freed

@@ -13,6 +13,7 @@ from repro.core.schedule import physical_tile_shape, swizzle_decode
 from repro.serving.paged_cache import (
     BlockPool,
     PoolExhausted,
+    PrefixCache,
     SlotTables,
     blocks_for,
 )
@@ -145,6 +146,139 @@ class TestPagedCacheProperties:
         for s in range(slots):
             tables.release_slot(s)
         assert pool.in_use == 0 and pool.free == slots * max_pages
+
+    @given(
+        st.integers(1, 12),  # num_blocks
+        st.lists(
+            st.tuples(st.integers(0, 2), st.integers(0, 1 << 30)),
+            max_size=80,
+        ),  # (op: 0=alloc 1=retain 2=release, pick) sequence
+    )
+    @settings(max_examples=80, deadline=None)
+    def test_refcount_conservation(self, nb, ops):
+        """Any interleaving of alloc/retain/release conserves blocks: a
+        block is live iff it holds references, the pool's refcounts match a
+        shadow ledger exactly, and dropping every reference drains the pool
+        (no leak, no early recycle)."""
+        pool = BlockPool(nb, 4)
+        refs = []  # one entry per outstanding reference (blocks repeat)
+        for op, pick in ops:
+            if op == 0:
+                if pool.free:
+                    blk = pool.alloc()
+                    assert blk not in refs  # fresh block was really free
+                    refs.append(blk)
+                else:
+                    with pytest.raises(PoolExhausted):
+                        pool.alloc()
+            elif op == 1 and refs:
+                blk = refs[pick % len(refs)]
+                pool.retain(blk)
+                refs.append(blk)
+            elif op == 2 and refs:
+                pool.release([refs.pop(pick % len(refs))])
+            live = set(refs)
+            assert pool.in_use == len(live)
+            assert pool.free == nb - len(live)
+            for blk in live:
+                assert pool.refcount(blk) == refs.count(blk)
+        pool.release(refs)
+        assert pool.in_use == 0 and pool.free == nb
+
+    @given(st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_cow_write_is_exclusively_reachable(self, data):
+        """After the copy-on-write gate runs on a page index, that entry's
+        page is reachable from exactly one slot table — no write can land
+        in a page another table still maps."""
+        ps = data.draw(st.integers(1, 4))
+        max_pages = data.draw(st.integers(1, 5))
+        pool = BlockPool(4 * max_pages + max_pages, ps, base=1)
+        tables = SlotTables(pool, 2, max_pages)
+        n_pages = data.draw(st.integers(1, max_pages), label="n_pages")
+        tables.ensure_capacity(0, n_pages * ps, owner="a")
+        # slot 1 shares an arbitrary subset of slot 0's pages and owns the
+        # rest privately
+        shared = [
+            data.draw(st.booleans(), label=f"share[{i}]")
+            for i in range(n_pages)
+        ]
+        for i, s in enumerate(shared):
+            if s:
+                tables.attach(1, [tables.blocks(0)[i]])
+            else:
+                tables.ensure_capacity(1, (i + 1) * ps, owner="b")
+        writes = [
+            i for i in range(n_pages)
+            if data.draw(st.booleans(), label=f"write[{i}]")
+        ]
+        pairs = []
+        for i in writes:
+            pair = tables.ensure_writable(1, i, owner="b")
+            if pair is not None:
+                src, dst = pair
+                assert src != dst
+                assert shared[i]  # only genuinely shared pages copy
+                pairs.append(pair)
+        for i in writes:
+            blk = tables.blocks(1)[i]
+            assert pool.refcount(blk) == 1
+            assert blk not in tables.blocks(0)  # exclusive reachability
+        # idempotent: a second gate pass never copies again
+        assert all(tables.ensure_writable(1, i, "b") is None for i in writes)
+        tables.release_slot(0)
+        tables.release_slot(1)
+        assert pool.in_use == 0
+
+    @given(st.data())
+    @settings(max_examples=60, deadline=None)
+    def test_eviction_never_reclaims_referenced_pages(self, data):
+        """PrefixCache.evict only frees pages no slot table references
+        (pool refcount 1) and never frees protected pages, however many
+        pages are requested; attached pages survive with their references
+        intact."""
+        ps = data.draw(st.integers(1, 3))
+        n_prompts = data.draw(st.integers(1, 4))
+        prompts = [
+            data.draw(
+                st.lists(st.integers(0, 5), min_size=ps, max_size=4 * ps),
+                label=f"prompt[{i}]",
+            )
+            for i in range(n_prompts)
+        ]
+        pool = BlockPool(64, ps, base=1)
+        tables = SlotTables(pool, n_prompts, 8)
+        cache = PrefixCache(pool, salt=("t", ps))
+        for s, toks in enumerate(prompts):
+            full = (len(toks) // ps) * ps
+            if full == 0:
+                continue
+            tables.ensure_capacity(s, full, owner=s)
+            for idx, cached in cache.insert(toks[:full], tables.blocks(s)):
+                tables.repoint(s, idx, cached)
+        # some slots finish: their references drop, cached pages go cold
+        finished = [
+            s for s in range(n_prompts)
+            if data.draw(st.booleans(), label=f"finish[{s}]")
+        ]
+        for s in finished:
+            tables.release_slot(s)
+        held = {b for s in range(n_prompts) for b in tables.blocks(s)}
+        protect = frozenset(
+            b for b in held if data.draw(st.booleans(), label=f"prot[{b}]")
+        )
+        before = pool.in_use
+        freed = cache.evict(data.draw(st.integers(0, 64)), protect=protect)
+        assert pool.in_use == before - freed
+        for b in held:  # table-referenced pages never reclaimed
+            assert pool.refcount(b) >= 1
+        for s in range(n_prompts):  # tables untouched by eviction
+            for b in tables.blocks(s):
+                assert b >= 1
+        # a full-pressure evict leaves exactly the referenced pages
+        cache.evict(64)
+        for b in held:
+            assert pool.refcount(b) >= 1
 
 
 class TestTokenBudgetProperties:

@@ -31,6 +31,7 @@ from repro.serving import ServeConfig, ServingEngine
 from repro.serving.paged_cache import (
     BlockPool,
     PoolExhausted,
+    PrefixCache,
     SlotTables,
     blocks_for,
 )
@@ -134,6 +135,190 @@ class TestSlotTables:
         assert st.trim(0, 0) == 2  # trim-to-zero == full release
 
 
+class TestRefcountedSharing:
+    """Page sharing between tables: retain/attach/repoint and the
+    copy-on-write gate (ISSUE-6)."""
+
+    def test_retain_release_lifecycle(self):
+        pool = BlockPool(2, 4)
+        blk = pool.alloc("a")
+        pool.retain(blk)
+        assert pool.refcount(blk) == 2
+        pool.release([blk])
+        assert pool.refcount(blk) == 1 and pool.in_use == 1  # still live
+        pool.release([blk])
+        assert pool.refcount(blk) == 0 and pool.in_use == 0  # recycled
+        with pytest.raises(ValueError):
+            pool.retain(blk)  # can't retain a free block
+
+    def test_attach_shares_pages_across_slots(self):
+        pool = BlockPool(4, 4, base=1)
+        st = SlotTables(pool, slots=2, max_pages=4)
+        st.ensure_capacity(0, 8, owner="a")  # 2 pages
+        shared = st.blocks(0)
+        st.attach(1, shared)
+        assert st.blocks(1) == shared
+        assert all(pool.refcount(b) == 2 for b in shared)
+        assert pool.in_use == 2  # physical pages, not references
+        st.release_slot(0)
+        assert all(pool.refcount(b) == 1 for b in shared)  # slot 1 holds on
+        st.release_slot(1)
+        assert pool.in_use == 0
+
+    def test_attach_respects_max_pages(self):
+        pool = BlockPool(8, 4, base=1)
+        st = SlotTables(pool, slots=2, max_pages=2)
+        st.ensure_capacity(0, 8, owner="a")
+        with pytest.raises(ValueError):
+            st.attach(1, st.blocks(0) + st.blocks(0))
+
+    def test_repoint_swaps_reference(self):
+        pool = BlockPool(4, 4, base=1)
+        st = SlotTables(pool, slots=2, max_pages=2)
+        st.ensure_capacity(0, 4, owner="a")
+        st.ensure_capacity(1, 4, owner="b")
+        canonical, dup = st.blocks(0)[0], st.blocks(1)[0]
+        st.repoint(1, 0, canonical)
+        assert st.blocks(1) == [canonical]
+        assert pool.refcount(canonical) == 2
+        assert pool.refcount(dup) == 0  # duplicate recycled
+        assert st.tables()[1, 0] == canonical  # device tensor follows
+        st.repoint(1, 0, canonical)  # same-page repoint is a no-op
+        assert pool.refcount(canonical) == 2
+
+    def test_ensure_writable_copies_only_shared_pages(self):
+        pool = BlockPool(4, 4, base=1)
+        st = SlotTables(pool, slots=2, max_pages=2)
+        st.ensure_capacity(0, 8, owner="a")
+        st.attach(1, st.blocks(0)[:1])  # share page 0 only
+        st.ensure_capacity(1, 8, owner="b")  # private page 1
+        assert st.ensure_writable(1, 1, "b") is None  # private: no copy
+        src, dst = st.ensure_writable(1, 0, "b")  # shared: COW
+        assert src == st.blocks(0)[0] and dst == st.blocks(1)[0]
+        assert src != dst
+        assert pool.refcount(src) == 1 and pool.refcount(dst) == 1
+        assert st.tables()[1, 0] == dst
+        assert st.ensure_writable(1, 0, "b") is None  # now exclusive
+
+    def test_ensure_writable_exhaustion_frees_nothing(self):
+        pool = BlockPool(2, 4, base=1)
+        st = SlotTables(pool, slots=2, max_pages=2)
+        st.ensure_capacity(0, 8, owner="a")  # pool drained
+        st.attach(1, st.blocks(0)[:1])
+        with pytest.raises(PoolExhausted):
+            st.ensure_writable(1, 0, "b")
+        # the failed gate changed nothing: still shared, still consistent
+        assert st.blocks(1)[0] == st.blocks(0)[0]
+        assert pool.refcount(st.blocks(0)[0]) == 2
+
+    def test_trim_and_release_respect_sharing(self):
+        pool = BlockPool(4, 4, base=1)
+        st = SlotTables(pool, slots=2, max_pages=4)
+        st.ensure_capacity(0, 16, owner="a")
+        st.attach(1, st.blocks(0))
+        st.trim(0, 4)  # slot 0 keeps 1 page; the other 3 survive via slot 1
+        assert pool.in_use == 4
+        assert st.num_blocks(1) == 4
+        st.release_slot(1)
+        assert pool.in_use == 1  # only slot 0's kept page remains
+
+
+class TestPrefixIndex:
+    """The radix index over token ids (unit level — engine integration is
+    TestPrefixCaching below)."""
+
+    def _cache(self, ps=4, nb=16):
+        pool = BlockPool(nb, ps, base=1)
+        return pool, PrefixCache(pool, salt=("test", ps))
+
+    def test_insert_then_match_longest_chain(self):
+        pool, pc = self._cache()
+        toks = list(range(12))  # 3 full pages
+        pages = [pool.alloc() for _ in range(3)]
+        assert pc.insert(toks, pages) == []
+        assert pc.pages == 3
+        assert all(pool.refcount(p) == 2 for p in pages)  # index holds one
+        assert pc.match(toks, max_pages=8) == pages
+        assert pc.match(toks[:8] + [99, 99, 99, 99], 8) == pages[:2]
+        assert pc.match([99] * 12, 8) == []
+        # partial trailing page never matches (page granularity)
+        assert pc.match(toks[:6], 8) == pages[:1]
+        assert pc.hits == 3 and pc.lookups == 4
+
+    def test_match_respects_cap(self):
+        pool, pc = self._cache()
+        toks = list(range(12))
+        pc.insert(toks, [pool.alloc() for _ in range(3)])
+        assert len(pc.match(toks, max_pages=1)) == 1
+        assert pc.match(toks, max_pages=0) == []
+
+    def test_insert_dedups_concurrent_prefills(self):
+        pool, pc = self._cache()
+        toks = list(range(8))
+        first = [pool.alloc(), pool.alloc()]
+        dup = [pool.alloc(), pool.alloc()]
+        pc.insert(toks, first)
+        # a second request prefilled the same prompt into its own pages:
+        # the index reports the canonical pages so the caller repoints
+        assert pc.insert(toks, dup) == [(0, first[0]), (1, first[1])]
+        assert pc.pages == 2  # no duplicate nodes
+
+    def test_hash_collision_cannot_alias(self):
+        """Chain identity is content-checked: two different token blocks
+        never resolve to the same cached page even if their hashes collide
+        (lookup is by exact token tuple, the hash is only the chain key)."""
+        pool, pc = self._cache()
+        a, b = [0, 1, 2, 3], [4, 5, 6, 7]
+        pa, pb = pool.alloc(), pool.alloc()
+        pc.insert(a, [pa])
+        pc.insert(b, [pb])
+        assert pc.match(a, 1) == [pa]
+        assert pc.match(b, 1) == [pb]
+
+    def test_salt_keys_chains_per_model_config(self):
+        pool = BlockPool(8, 4, base=1)
+        pc1 = PrefixCache(pool, salt=("model-a", 4))
+        pc2 = PrefixCache(pool, salt=("model-b", 4))
+        assert pc1._root.key != pc2._root.key
+
+    def test_evict_lru_leaves_first(self):
+        pool, pc = self._cache()
+        cold = list(range(8))
+        hot = list(range(100, 108))
+        cold_pages = [pool.alloc() for _ in range(2)]
+        hot_pages = [pool.alloc() for _ in range(2)]
+        pc.insert(cold, cold_pages)
+        pc.insert(hot, hot_pages)
+        pool.release(cold_pages + hot_pages)  # only the index holds them
+        pc.match(cold, 2)
+        pc.match(hot, 2)  # hot is most-recent
+        assert pc.evict(1) == 1
+        # the cold chain's leaf went first
+        assert pc.match(cold, 2) == cold_pages[:1]
+        assert pc.match(hot, 2) == hot_pages
+
+    def test_evict_walks_chains_tail_first(self):
+        pool, pc = self._cache()
+        toks = list(range(12))
+        pages = [pool.alloc() for _ in range(3)]
+        pc.insert(toks, pages)
+        pool.release(pages)
+        assert pc.evict(3) == 3  # leaf, then exposed parent, then root child
+        assert pc.pages == 0
+        assert pool.in_use == 0
+
+    def test_evict_skips_referenced_and_protected(self):
+        pool, pc = self._cache()
+        toks = list(range(8))
+        pages = [pool.alloc() for _ in range(2)]
+        pc.insert(toks, pages)  # rc 2 everywhere: caller + index
+        assert pc.evict(8) == 0  # a table still references both
+        pool.release([pages[1]])  # tail page goes cold (rc 1)
+        assert pc.evict(8, protect=frozenset([pages[1]])) == 0  # protected
+        assert pc.evict(8) == 1  # now reclaimable
+        assert pool.refcount(pages[0]) == 2  # head survives untouched
+
+
 # ---------------------------------------------------------------------------
 # Scheduler behavior
 # ---------------------------------------------------------------------------
@@ -153,10 +338,12 @@ class TestScheduler:
         assert [r.uid for r in done] == [r.uid for r in reqs]  # FIFO completion
 
     def test_admission_gated_by_free_blocks(self, rng):
+        # prefix_cache off: this test pins the free-block admission gate,
+        # which sharing the identical prompt would legitimately bypass
         cfg = _qwen()
         eng = ServingEngine(cfg, _params(cfg), ServeConfig(
             slots=2, max_len=16, max_new_tokens=2,
-            page_size=4, num_blocks=4))
+            page_size=4, num_blocks=4, prefix_cache=False))
         long_prompt = rng.integers(0, cfg.vocab_size, size=10).tolist()
         r1 = eng.submit(long_prompt)
         r2 = eng.submit(long_prompt)
@@ -185,9 +372,11 @@ class TestScheduler:
 
         # pool of 4 blocks: both requests admit at 2 blocks each, but each
         # needs a 3rd block mid-generation -> forced preemption
+        # (prefix_cache off: published prompt pages would relieve exactly
+        # the pool pressure this test constructs)
         eng = ServingEngine(cfg, params, ServeConfig(
             slots=2, max_len=16, max_new_tokens=6,
-            page_size=4, num_blocks=4))
+            page_size=4, num_blocks=4, prefix_cache=False))
         r1 = eng.submit(prompt1)
         r2 = eng.submit(prompt2)
         done = eng.run()
@@ -221,9 +410,12 @@ class TestScheduler:
             eng.submit(rng.integers(0, cfg.vocab_size, size=5).tolist())
         done = eng.run()
         assert len(done) == 5
-        assert eng.pool.in_use == 0
+        # everything recycled at EOS except the pages the prefix index
+        # deliberately keeps (one full prompt page per unique 5-token prompt)
+        assert eng.pool.in_use == eng.prefix.pages
         # 5 requests through a 2-slot engine only ever hold 2 slots of blocks
-        assert eng.peak_kv_blocks() <= 2 * blocks_for(5 + 3, 4)
+        # (+ the retained cache pages of completed requests)
+        assert eng.peak_kv_blocks() <= 2 * blocks_for(5 + 3, 4) + eng.prefix.pages
 
     def test_unservable_request_fails_fast(self, rng):
         cfg = _qwen()
@@ -383,7 +575,7 @@ class TestMultiStepDecode:
         prompts = [rng.integers(0, cfg.vocab_size, size=3).tolist()
                    for _ in range(2)]
         base = dict(slots=2, max_len=16, max_new_tokens=6, page_size=1,
-                    num_blocks=16)
+                    num_blocks=16, prefix_cache=False)
         ref, _, _ = _run_engine(cfg, params, prompts, **base)
         out, _, eng = _run_engine(cfg, params, prompts, sync_every=8, **base)
         assert out == ref
@@ -405,7 +597,8 @@ class TestMultiStepDecode:
                                  max_new_tokens=6, page_size=4)
         out, reqs, eng = _run_engine(
             cfg, params, [prompt1, prompt2], slots=2, max_len=16,
-            max_new_tokens=6, page_size=4, num_blocks=4, sync_every=4)
+            max_new_tokens=6, page_size=4, num_blocks=4, sync_every=4,
+            prefix_cache=False)
         assert eng.preemptions >= 1
         assert reqs[1].preemptions >= 1 and reqs[0].preemptions == 0
         assert out == [ref1[0], ref2[0]]  # recompute resume is lossless
@@ -521,7 +714,11 @@ def test_mla_paged_chunked_matches_contiguous_replay(rng):
         assert out == ref_out, f"{cache}/{prefill} diverged"
         assert eng.prefill_mode == prefill
         if cache == "paged":
-            assert eng.pool.in_use == 0  # every latent page recycled
+            # every latent page recycled except the full prompt pages the
+            # prefix index retains (22- and 17-token prompts @ ps=16 -> one
+            # each); byte-identity above covers caching-on vs contiguous
+            assert eng.pool.in_use == eng.prefix.pages
+            assert eng.prefix.pages == 2
 
 
 def test_mla_paged_multistep_matches_per_tick(rng):
@@ -566,7 +763,223 @@ def test_mla_paged_preemption_lossless(rng):
     eng.run()
     assert eng.preemptions >= 1
     assert r1.output == ref1 and r2.output == ref2
-    assert eng.pool.in_use == 0
+    # only the prefix-cached prompt pages outlive the requests (6-token
+    # prompts @ ps=4 -> one full page each, shared with nobody)
+    assert eng.pool.in_use == eng.prefix.pages
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching: refcounted sharing + COW through the engine (ISSUE-6)
+# ---------------------------------------------------------------------------
+
+
+def test_copy_pages_copies_every_page_leaf(rng):
+    """lm.copy_pages duplicates physical pages across every ``*_pages``
+    leaf (GQA k/v pages, MLA latent + rope pages) and leaves all other
+    pages untouched — the device half of copy-on-write."""
+    import jax.numpy as jnp
+
+    for name in ("qwen2_1_5b", "deepseek_v2_lite_16b"):
+        cfg = get_config(name).reduced()
+        cache = lm.init_cache(cfg, 1, 16, layout="paged", page_size=4,
+                              num_blocks=6)
+
+        def fill(leaf):
+            vals = np.arange(leaf.size, dtype=np.float32) % 251
+            return jnp.asarray(vals.reshape(leaf.shape), leaf.dtype)
+
+        cache = lm.Cache(
+            jax.tree_util.tree_map(fill, cache.prefix),
+            jax.tree_util.tree_map(fill, cache.rest),
+            cache.stacked, cache.max_len, cache.layout, cache.page_size,
+            cache.tables,
+        )
+        out = lm.copy_pages(cache, [1, 2], [4, 5])
+
+        def check(path, before, after):
+            names = [
+                str(p.key) for p in path
+                if isinstance(p, jax.tree_util.DictKey)
+            ]
+            b = np.asarray(jnp.moveaxis(before, before.ndim - 3, 0))
+            a = np.asarray(jnp.moveaxis(after, after.ndim - 3, 0))
+            if any(n.endswith("_pages") for n in names):
+                np.testing.assert_array_equal(a[4], b[1])
+                np.testing.assert_array_equal(a[5], b[2])
+                np.testing.assert_array_equal(a[3], b[3])  # bystander
+            else:
+                np.testing.assert_array_equal(a, b)  # non-page leaves
+
+        jax.tree_util.tree_map_with_path(check, cache.prefix, out.prefix)
+        jax.tree_util.tree_map_with_path(check, cache.rest, out.rest)
+
+
+class TestPrefixCaching:
+    """Engine-level prefix caching: cache-hit chunks never dispatch, shared
+    pages are refcounted, divergence goes through copy-on-write, and every
+    mode stays byte-identical to a caching-disabled run."""
+
+    def _shared_prompts(self, cfg, rng, prefix_len=12, tails=(7, 3, 10, 1)):
+        shared = rng.integers(0, cfg.vocab_size, size=prefix_len).tolist()
+        return [
+            shared + rng.integers(0, cfg.vocab_size, size=t).tolist()
+            for t in tails
+        ]
+
+    def test_warm_prefix_ttft_collapses_to_one_chunk(self, rng):
+        """The tentpole number: a warm shared prefix skips its cached pages
+        entirely at admission, so TTFT falls from ceil(prompt/chunk) ticks
+        to ~one chunk's worth for the divergent tail."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompt = rng.integers(0, cfg.vocab_size, size=20).tolist()
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=1, max_len=48, max_new_tokens=3, page_size=4,
+            prefill_chunk=4, token_budget=5))
+        r_cold = eng.submit(prompt)
+        r_warm = eng.submit(prompt)  # slots=1: strictly after r_cold
+        eng.run()
+        assert r_cold.output == r_warm.output
+        assert r_cold.cached_tokens == 0
+        # 20-token prompt, 4-token chunks: cold prefill takes 5 ticks
+        assert r_cold.ttft_admit_ticks == 5
+        # warm: 4 of 5 pages cached (the last is held back so one replay
+        # token remains); the 4-token tail is exactly one chunk
+        assert r_warm.cached_tokens == 16
+        assert r_warm.ttft_admit_ticks == 1
+        assert eng.pages_shared == 4
+        assert eng.prefix.hits >= 1
+
+    def test_byte_identity_against_caching_disabled(self, rng):
+        """Acceptance matrix: shared-prefix traffic produces byte-identical
+        tokens with the prefix cache on vs off, across chunked and replay
+        prefill."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = self._shared_prompts(cfg, rng)
+        for prefill in ("chunked", "replay"):
+            base = dict(slots=2, max_len=48, max_new_tokens=4, page_size=4,
+                        prefill=prefill)
+            ref, _, off = _run_engine(cfg, params, prompts,
+                                      prefix_cache=False, **base)
+            out, reqs, on = _run_engine(cfg, params, prompts, **base)
+            assert out == ref, f"{prefill}: caching changed tokens"
+            assert on.pages_shared > 0  # sharing actually engaged
+            assert off.pages_shared == 0
+            # warm requests hold fewer fresh pages than the no-share path
+            assert on.pool.peak_in_use < off.pool.peak_in_use + \
+                on.prefix.pages
+
+    def test_multistep_window_with_prefix_cache(self, rng):
+        """sync_every > 1 over shared-prefix traffic: the device-resident
+        window composes with attached cache pages, byte-identically."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = self._shared_prompts(cfg, rng)
+        base = dict(slots=2, max_len=48, max_new_tokens=6, page_size=4)
+        ref, _, _ = _run_engine(cfg, params, prompts, prefix_cache=False,
+                                **base)
+        out, _, eng = _run_engine(cfg, params, prompts, sync_every=4, **base)
+        assert out == ref
+        assert eng.decode_windows > 0 and eng.pages_shared > 0
+
+    def test_preemption_with_shared_pages_lossless(self, rng):
+        """Mid-generation preemption while prefix pages are shared: the
+        victim's references drop without disturbing the survivor or the
+        index, and recompute resume (which re-matches the cache) stays
+        byte-identical to isolated runs."""
+        cfg = _qwen()
+        params = _params(cfg)
+        # shared first page, divergent second page: the shared page stays
+        # pinned (refcount > 1) so eviction cannot relieve the pressure and
+        # the scheduler must preempt the younger request mid-generation
+        head = rng.integers(0, cfg.vocab_size, size=4).tolist()
+        prompts = [head + rng.integers(0, cfg.vocab_size, size=4).tolist()
+                   for _ in range(2)]
+        refs = [_run_engine(cfg, params, [p], slots=1, max_len=16,
+                            max_new_tokens=6, page_size=4)[0][0]
+                for p in prompts]
+        out, reqs, eng = _run_engine(
+            cfg, params, prompts, slots=2, max_len=16,
+            max_new_tokens=6, page_size=4, num_blocks=5)
+        assert eng.preemptions >= 1
+        assert reqs[1].preemptions >= 1
+        assert out == refs
+        assert eng.pages_shared > 0
+
+    def test_cow_on_divergent_write_chunked(self, rng):
+        """A write landing in a genuinely shared page triggers exactly one
+        copy-on-write — fresh page, device copy, repoint — with outputs
+        byte-identical to an unshared run.  (The scheduler's page-aligned
+        sharing never produces this naturally, so the test constructs the
+        alias directly.)"""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompt = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        ref, _, _ = _run_engine(cfg, params, [prompt], slots=1, max_len=32,
+                                max_new_tokens=4, page_size=4)
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=2, max_len=32, max_new_tokens=4, page_size=4,
+            prefix_cache=False))
+        r1, r2 = eng.submit(prompt), eng.submit(prompt)
+        eng._admit()  # both resident, nothing dispatched yet
+        # alias slot 1's first page onto slot 0's: the first prefill write
+        # into it must now copy
+        eng.tables.repoint(1, 0, eng.tables.blocks(0)[0])
+        eng._tables_dirty = True
+        eng.run()
+        assert eng.pages_copied == 1
+        assert r1.output == ref[0] and r2.output == ref[0]
+        assert eng.pool.in_use == 0  # the COW copy was released too
+
+    def test_cow_on_divergent_write_multistep(self, rng):
+        """COW under the sync_every>1 decode window: a page shared
+        mid-generation is copied before the on-device loop dispatches."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompt = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        ref, _, _ = _run_engine(cfg, params, [prompt], slots=1, max_len=32,
+                                max_new_tokens=6, page_size=4)
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=2, max_len=32, max_new_tokens=6, page_size=4,
+            sync_every=4, prefix_cache=False))
+        r1, r2 = eng.submit(prompt), eng.submit(prompt)
+        eng.step()  # prefill tick: both slots transition to gen
+        assert all(st == "gen" for st in eng.slot_state)
+        # identical prompts -> identical KV: alias slot 1's live tail page
+        # onto slot 0's (content-preserving), forcing COW at the next write
+        eng.tables.repoint(1, 1, eng.tables.blocks(0)[1])
+        eng._tables_dirty = True
+        eng.run()
+        assert eng.pages_copied >= 1
+        assert eng.decode_windows > 0
+        assert r1.output == ref[0] and r2.output == ref[0]
+
+    def test_pool_pressure_evicts_cold_cache_pages(self, rng):
+        """Graceful degradation: when fresh requests need blocks the cold
+        cached pages hold, eviction reclaims them (LRU) instead of refusing
+        admission — the hot pool serves like an uncached engine."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = [rng.integers(0, cfg.vocab_size, size=8).tolist()
+                   for _ in range(3)]
+        out, reqs, eng = _run_engine(
+            cfg, params, prompts, slots=1, max_len=16, max_new_tokens=2,
+            page_size=4, num_blocks=4)
+        assert all(r.error is None for r in reqs)
+        assert [len(o) for o in out] == [2, 2, 2]
+        assert eng.prefix.evictions >= 1  # cold pages made room
+        assert eng.pool.in_use == eng.prefix.pages
+
+    def test_contiguous_and_recurrent_archs_skip_the_index(self):
+        cfg = _qwen()
+        eng = ServingEngine(cfg, _params(cfg), ServeConfig(
+            slots=1, max_len=16, cache="contiguous"))
+        assert eng.prefix is None
+        cfg2 = get_config("mamba2_2_7b").reduced()
+        eng2 = ServingEngine(cfg2, _params(cfg2), ServeConfig(
+            slots=1, max_len=16, cache="contiguous"))
+        assert eng2.prefix is None
 
 
 # ---------------------------------------------------------------------------
@@ -583,13 +996,36 @@ def test_mla_paged_kernel_matches_oracle(rng):
         parity_inputs,
     )
 
+    for name, cfg in PARITY_CASES:
+        if not name.startswith("mla_paged"):
+            continue
+        prog = mla_paged_program(**cfg)
+        kern = tl_compile(prog, Schedule(interpret=True), target="pallas")
+        tbl, lens, q, qpe, ckv, kpe = parity_inputs(name, prog, rng)
+        out = np.asarray(kern(tbl, lens, q, qpe, ckv, kpe))
+        oracle = np.asarray(
+            ref.mla_paged(q, qpe, ckv, kpe, tbl, lens,
+                          window=cfg.get("window"))
+        )
+        np.testing.assert_allclose(out, oracle, rtol=1e-4, atol=2e-3)
+
+
+def test_mla_soft_cap_routes_to_oracle(rng):
+    """Soft-capped MLA decode takes the oracle path (same policy as GQA
+    paged_attention) and the cap visibly changes the scores."""
+    from repro.kernels import ops, ref
+    from repro.kernels.mla import PARITY_CASES, parity_inputs, mla_paged_program
+
     cfg = dict(PARITY_CASES)["mla_paged"]
     prog = mla_paged_program(**cfg)
-    kern = tl_compile(prog, Schedule(interpret=True), target="pallas")
     tbl, lens, q, qpe, ckv, kpe = parity_inputs("mla_paged", prog, rng)
-    out = np.asarray(kern(tbl, lens, q, qpe, ckv, kpe))
-    oracle = np.asarray(ref.mla_paged(q, qpe, ckv, kpe, tbl, lens))
-    np.testing.assert_allclose(out, oracle, rtol=1e-4, atol=2e-3)
+    capped = ops.mla_paged(q, qpe, ckv, kpe, tbl, lens,
+                           logit_soft_cap=1.0, backend="pallas")
+    oracle = ref.mla_paged(q, qpe, ckv, kpe, tbl, lens, logit_soft_cap=1.0)
+    np.testing.assert_allclose(np.asarray(capped), np.asarray(oracle),
+                               rtol=1e-5, atol=1e-6)
+    uncapped = ref.mla_paged(q, qpe, ckv, kpe, tbl, lens)
+    assert not np.allclose(np.asarray(capped), np.asarray(uncapped), atol=1e-4)
 
 
 def test_paged_attention_kernel_matches_oracle(rng):

@@ -21,8 +21,11 @@ python -m pytest -x -q -W 'error::DeprecationWarning:repro\.serving' "$@"
 # ceil(prompt/chunk)+gen engine ticks where replay needs prompt+gen, with
 # byte-identical tokens), the device-resident multi-step decode loop
 # (byte-identical outputs across sync_every in {1,4,16} and both layouts),
-# and the MLA serving matrix (paged latent cache + chunked prefill
-# byte-identical to contiguous/replay).  The loc table rides along so the
+# the MLA serving matrix (paged latent cache + chunked prefill
+# byte-identical to contiguous/replay), the shared-system-prompt prefix
+# caching workload (warm TTFT <= 25% of cold, fewer block allocations per
+# request, byte-identical outputs with caching on/off), and the MLA
+# decode-heavy multi-step loop.  The loc table rides along so the
 # paper's MLA line-budget claim and the attention-core net-simplification
 # claim are pinned by the same gate.
 # --json records the perf trajectory rows; --compare gates fresh derived
