@@ -8,16 +8,32 @@ two claims in CI (via the ``--compare`` gate in tools/ci.sh):
   the four attention programs *plus* the shared online-softmax template
   (kernels/attention_core.py, counted once) together are no larger than
   the pre-refactor hand-rolled loops, even though the template also
-  powers two brand-new kernels (paged MLA decode, MLA chunked prefill).
+  powers two brand-new kernels (paged MLA decode, MLA chunked prefill);
+* the quantized KV variants (ISSUE-7) stay cheap: the dequant stage is
+  written once (``attention_core.DequantStage``, counted once) and each
+  quantized kernel adds bounded marginal lines over its fp twin — the
+  unpack/scale logic never gets copy-pasted per kernel.
 """
 from repro.kernels import attention_core
 from repro.kernels.dequant_matmul import dequant_matmul_program
 from repro.kernels.flash_attention import flash_attention_program
 from repro.kernels.linear_attention import chunk_scan_program, chunk_state_program
 from repro.kernels.matmul import matmul_program
-from repro.kernels.mla import mla_paged_program, mla_prefill_program, mla_program
-from repro.kernels.paged_attention import paged_attention_program
-from repro.kernels.prefill_attention import prefill_attention_program
+from repro.kernels.mla import (
+    mla_paged_program,
+    mla_paged_quant_program,
+    mla_prefill_program,
+    mla_prefill_quant_program,
+    mla_program,
+)
+from repro.kernels.paged_attention import (
+    paged_attention_program,
+    paged_attention_quant_program,
+)
+from repro.kernels.prefill_attention import (
+    prefill_attention_program,
+    prefill_attention_quant_program,
+)
 
 from .common import Row, check, emit
 
@@ -29,6 +45,18 @@ PRE_REFACTOR_ATTENTION_LOC = 291
 # The programs sharing the online-softmax template.
 ATTENTION_KERNELS = ("flash_attention", "flash_mla", "paged_attention",
                      "prefill_attention")
+
+# (quantized variant, fp twin) pairs sharing the dequant stage; the budget
+# bounds the *marginal* cost of quantization per kernel (stage calls, scale
+# params, page-write plumbing) — the unpack loops themselves live in
+# DequantStage and are counted once.
+QUANT_KERNEL_PAIRS = (
+    ("paged_attention_quant", "paged_attention"),
+    ("prefill_attention_quant", "prefill_attention"),
+    ("mla_paged_quant", "mla_paged"),
+    ("mla_prefill_quant", "mla_prefill"),
+)
+QUANT_MARGINAL_LOC_BUDGET = 40  # max extra lines per quantized variant
 
 
 def run():
@@ -43,14 +71,21 @@ def run():
         "dequant_int4": dequant_matmul_program(64, 64, 128, "int4", block_M=32, block_N=32, block_K=64),
         "chunk_state": chunk_state_program(1, 2, 64, 32, 64),
         "chunk_scan": chunk_scan_program(1, 2, 64, 32, 64),
+        "paged_attention_quant": paged_attention_quant_program(4, 8, 2, 64, 64, 8, 32, "int8"),
+        "prefill_attention_quant": prefill_attention_quant_program(4, 8, 2, 64, 128, 64, 8, 64, "int8"),
+        "mla_paged_quant": mla_paged_quant_program(4, 16, 64, 16, 64, 8, 32),
+        "mla_prefill_quant": mla_prefill_quant_program(4, 16, 64, 16, 128, 64, 8, 64),
     }
     template = attention_core.source_lines()
+    dequant_stage = attention_core.dequant_stage_lines()
     rows = [
         Row(f"loc_{name}", float(p.source_lines), f"source_lines={p.source_lines}")
         for name, p in programs.items()
     ]
     rows.append(Row("loc_attention_template", float(template),
                     f"source_lines={template} (shared, counted once)"))
+    rows.append(Row("loc_dequant_stage", float(dequant_stage),
+                    f"source_lines={dequant_stage} (shared, counted once)"))
     attention_total = template + sum(
         programs[k].source_lines for k in ATTENTION_KERNELS
     )
@@ -58,11 +93,22 @@ def run():
         "loc_attention_net", float(attention_total),
         f"4 kernels + template vs {PRE_REFACTOR_ATTENTION_LOC} pre-refactor",
     ))
+    quant_marginal = max(
+        programs[q].source_lines - programs[fp].source_lines
+        for q, fp in QUANT_KERNEL_PAIRS
+    )
+    rows.append(Row(
+        "loc_quant_marginal_max", float(quant_marginal),
+        f"max extra lines of a quantized variant over its fp twin "
+        f"(budget {QUANT_MARGINAL_LOC_BUDGET})",
+    ))
 
     check(lambda: programs["flash_mla"].source_lines <= 80,
           "mla-loc-within-paper-claim")
     check(lambda: attention_total <= PRE_REFACTOR_ATTENTION_LOC,
           "attention-refactor-net-simplification")
+    check(lambda: quant_marginal <= QUANT_MARGINAL_LOC_BUDGET,
+          "quant-kernels-bounded-marginal-loc")
     emit(rows, "Fig 14 (right): kernel lines of code")
     return rows
 
@@ -76,6 +122,10 @@ def derived_metrics(rows):
         "mla_loc_headroom": round(80.0 / max(by["loc_flash_mla"], 1.0), 3),
         "attention_refactor_loc_ratio": round(
             PRE_REFACTOR_ATTENTION_LOC / max(by["loc_attention_net"], 1.0), 3
+        ),
+        "quant_marginal_loc_headroom": round(
+            QUANT_MARGINAL_LOC_BUDGET
+            / max(by["loc_quant_marginal_max"], 1.0), 3
         ),
     }
 

@@ -52,6 +52,13 @@ loop composes with paged latent attention, reported as wall-clock tok/s,
 delivery-latency percentiles and the deterministic dispatch-amortization
 ratio.
 
+Workload 7 — *quantized KV cache* (ISSUE-7): the same requests through fp,
+int8 and int4 page pools.  Reports the memory ratios (asserted <= 0.55x /
+<= 0.30x of fp), the accuracy story (greedy token-match rate vs the fp
+engine plus the teacher-forced max logit error), and a pool-pressure run
+where fp and int8 pools are sized to the *same byte budget* — the
+quantized pool holds ~3x the pages, so preemptions drop at fixed memory.
+
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json]
 """
 from __future__ import annotations
@@ -498,6 +505,141 @@ def _mla_decode_workload(smoke: bool):
     return rows
 
 
+def _teacher_forced_logits(cfg, params, seq, max_len, page_size=16):
+    """Per-position logits for ``seq`` replayed one token at a time against
+    a single-slot paged cache — the probe the logit-error metric uses.
+    Identical code path for fp and quantized configs (the storage format
+    lives in the cache pytree), so any logit difference is attributable to
+    KV quantization alone."""
+    import jax.numpy as jnp
+
+    max_pages = -(-max_len // page_size)
+    cache = lm.init_cache(cfg, 1, max_len, layout="paged",
+                          page_size=page_size, num_blocks=max_pages + 1)
+    cache = cache.with_tables(jnp.arange(1, max_pages + 1,
+                                         dtype=jnp.int32)[None, :])
+    step = jax.jit(lambda c, tok, pos: lm.decode_step(params, cfg, c, tok, pos))
+    logits = []
+    for i, tok in enumerate(seq[:-1]):
+        lg, cache = step(cache, jnp.asarray([tok], jnp.int32),
+                         jnp.asarray(i, jnp.int32))
+        logits.append(np.asarray(lg[0], np.float32))
+    return np.stack(logits)
+
+
+def _quant_workload(cfg, params, smoke: bool):
+    """Workload 7 — quantized KV cache (ISSUE-7): int8/int4 page pools with
+    inline dequantization at the attention gather.
+
+    Three measurements per format:
+
+    * **memory** — ``kv_bytes`` vs the fp pool, asserted at the acceptance
+      ratios (int8 <= 0.55x, int4 <= 0.30x: packed bytes + one fp scale
+      column per token per pool);
+    * **accuracy** — end-to-end greedy token match rate vs the fp engine on
+      the same requests, plus the max teacher-forced logit error replaying
+      one request's full token stream against each cache format;
+    * **capacity** — a fixed byte budget converts to pool blocks through
+      each format's ``page_bytes`` (``blocks_for_bytes``): the quantized
+      pool holds ~3x the pages, so the same over-committed workload
+      preempts less (asserted strictly fewer than fp)."""
+    from repro.serving.paged_cache import blocks_for_bytes
+
+    if smoke:
+        slots, max_len, n_req, prompt_len, max_new = 2, 64, 5, 10, 10
+    else:
+        slots, max_len, n_req, prompt_len, max_new = 2, 128, 8, 16, 16
+    ps = 8
+    rng = np.random.default_rng(6)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=prompt_len).tolist()
+        for _ in range(n_req)
+    ]
+    base = dict(slots=slots, max_len=max_len, max_new_tokens=max_new,
+                page_size=ps, cache="paged")
+    formats = [("kv_fp", None), ("kv_int8", "int8"), ("kv_int4", "int4")]
+    rows = []
+    for label, fmt in formats:
+        r = _drive(cfg, params, prompts, dict(base, kv_dtype=fmt), label)
+        r["kv_dtype"] = fmt or "fp"
+        rows.append(r)
+    by = {r["mode"]: r for r in rows}
+    fp = by["kv_fp"]
+    total = sum(len(o) for o in fp["outputs"])
+    for r in rows:
+        match = sum(
+            a == b
+            for of, oq in zip(fp["outputs"], r["outputs"])
+            for a, b in zip(of, oq)
+        )
+        r["token_match"] = round(match / max(total, 1), 4)
+    r8 = by["kv_int8"]["kv_bytes"] / max(fp["kv_bytes"], 1)
+    r4 = by["kv_int4"]["kv_bytes"] / max(fp["kv_bytes"], 1)
+    if r8 > 0.55:
+        raise AssertionError(f"int8 kv_bytes ratio {r8:.3f} > 0.55")
+    if r4 > 0.30:
+        raise AssertionError(f"int4 kv_bytes ratio {r4:.3f} > 0.30")
+    if by["kv_int8"]["token_match"] < 0.95:
+        raise AssertionError(
+            f"int8 token match {by['kv_int8']['token_match']} < 0.95"
+        )
+
+    # teacher-forced max logit error on one request's full token stream
+    import dataclasses as _dc
+
+    seq = prompts[0] + fp["outputs"][0]
+    ref_logits = _teacher_forced_logits(cfg, params, seq, max_len, ps)
+    for r, fmt in zip(rows, [f for _, f in formats]):
+        if fmt is None:
+            r["max_logit_err"] = 0.0
+            continue
+        qcfg = _dc.replace(cfg, kv_dtype=fmt)
+        q_logits = _teacher_forced_logits(qcfg, params, seq, max_len, ps)
+        r["max_logit_err"] = round(
+            float(np.max(np.abs(q_logits - ref_logits))), 4)
+
+    # pool pressure at a fixed byte budget: size each pool to the same
+    # bytes, let the engine over-commit, count preemptions
+    def page_bytes_of(fmt):
+        probe = ServingEngine(cfg, params, ServeConfig(
+            **dict(base, kv_dtype=fmt, num_blocks=2)))
+        return probe.pool.page_bytes
+
+    fp_pb = page_bytes_of(None)
+    budget = (5 if smoke else 9) * fp_pb  # tight for fp, roomy quantized
+    pressure_prompts = prompts + prompts  # double the load
+    for label, fmt in (("kv_fp_pressure", None), ("kv_int8_pressure", "int8")):
+        nb = blocks_for_bytes(budget, page_bytes_of(fmt))
+        r = _drive(cfg, params, pressure_prompts,
+                   dict(base, kv_dtype=fmt, num_blocks=nb,
+                        prefix_cache=False), label)
+        r["kv_dtype"] = fmt or "fp"
+        r["num_blocks"] = nb
+        r["token_match"] = None
+        r["max_logit_err"] = None
+        rows.append(r)
+    by = {r["mode"]: r for r in rows}
+    fp_pre = by["kv_fp_pressure"]["preemptions"]
+    q_pre = by["kv_int8_pressure"]["preemptions"]
+    if not (fp_pre > q_pre):
+        raise AssertionError(
+            f"quantized pool did not reduce preemptions at fixed memory "
+            f"(fp={fp_pre}, int8={q_pre})"
+        )
+    print(f"# serving: quantized KV cache fp vs int8 vs int4 "
+          f"({n_req} reqs x {prompt_len} prompt + {max_new} gen, slots={slots}, "
+          f"page_size={ps}; pressure runs at a {budget}-byte pool budget)")
+    print("mode,tok_per_s,kv_bytes,preemptions,token_match,max_logit_err")
+    for r in rows:
+        print(f"{r['mode']},{r['tok_per_s']},{r['kv_bytes']},"
+              f"{r['preemptions']},{r['token_match']},{r['max_logit_err']}")
+    print(f"# kv_bytes: int8 {r8:.3f}x / int4 {r4:.3f}x of fp; pressure "
+          f"preemptions {fp_pre} -> {q_pre} at fixed bytes; int8 token "
+          f"match {by['kv_int8']['token_match']:.0%}")
+    print()
+    return rows
+
+
 def derived_metrics(rows):
     """Cross-row metrics for the BENCH_serving.json trajectory record.
 
@@ -554,6 +696,26 @@ def derived_metrics(rows):
         out["mla_decode_dispatch_amortization"] = round(
             by_mode["mla_decode_sync1_paged"]["dispatches"]
             / max(by_mode["mla_decode_sync16_paged"]["dispatches"], 1), 2)
+    if "kv_fp" in by_mode and "kv_int8" in by_mode:
+        # memory compression (fp bytes over quantized bytes) and fidelity:
+        # greedy token agreement with the fp cache, and a bounded transform
+        # of the teacher-forced max logit error (1/(1+err): 1.0 = exact)
+        out["int8_kv_saving"] = round(
+            by_mode["kv_fp"]["kv_bytes"]
+            / max(by_mode["kv_int8"]["kv_bytes"], 1), 2)
+        out["int8_token_match"] = by_mode["kv_int8"]["token_match"]
+        out["int8_logit_fidelity"] = round(
+            1.0 / (1.0 + by_mode["kv_int8"]["max_logit_err"]), 4)
+    if "kv_fp" in by_mode and "kv_int4" in by_mode:
+        out["int4_kv_saving"] = round(
+            by_mode["kv_fp"]["kv_bytes"]
+            / max(by_mode["kv_int4"]["kv_bytes"], 1), 2)
+    if ("kv_fp_pressure" in by_mode and "kv_int8_pressure" in by_mode):
+        # capacity win at fixed bytes: +1 smoothing keeps the ratio finite
+        # when the quantized pool preempts nothing at all (the usual case)
+        out["quant_pressure_preemption_drop"] = round(
+            (by_mode["kv_fp_pressure"]["preemptions"] + 1)
+            / (by_mode["kv_int8_pressure"]["preemptions"] + 1), 2)
     return out
 
 
@@ -566,6 +728,7 @@ def run(smoke: bool = False):
     rows += _mla_workload(smoke)
     rows += _prefix_workload(cfg, params, smoke)
     rows += _mla_decode_workload(smoke)
+    rows += _quant_workload(cfg, params, smoke)
     # outputs are asserted above; keep the JSON/return rows lean
     for r in rows:
         r.pop("outputs", None)

@@ -18,9 +18,18 @@ from .dequant_matmul import dequant_matmul_program
 from .flash_attention import flash_attention_program
 from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program, tune_matmul
-from .mla import mla_paged_program, mla_prefill_program, mla_program
-from .paged_attention import paged_attention_program
-from .prefill_attention import prefill_attention_program
+from .mla import (
+    mla_paged_program,
+    mla_paged_quant_program,
+    mla_prefill_program,
+    mla_prefill_quant_program,
+    mla_program,
+)
+from .paged_attention import paged_attention_program, paged_attention_quant_program
+from .prefill_attention import (
+    prefill_attention_program,
+    prefill_attention_quant_program,
+)
 
 
 def parity_modules():
@@ -75,9 +84,13 @@ __all__ = [
     "flash_attention_program",
     "mla_program",
     "mla_paged_program",
+    "mla_paged_quant_program",
     "mla_prefill_program",
+    "mla_prefill_quant_program",
     "paged_attention_program",
+    "paged_attention_quant_program",
     "prefill_attention_program",
+    "prefill_attention_quant_program",
     "dequant_matmul_program",
     "chunk_state_program",
     "chunk_scan_program",

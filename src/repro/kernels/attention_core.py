@@ -118,6 +118,63 @@ class OnlineSoftmax:
         T.copy(self.acc_o, out_region)
 
 
+# Packed KV storage: values per int8 byte, per format (the KV-cache subset
+# of dequant_matmul's _PACK — nf4/int2 stay weight-only; see DESIGN.md §5.6).
+KV_PACK = {"int8": 1, "int4": 2}
+
+
+class DequantStage:
+    """Quantized KV source: the dequant composition point for ``load_kv``.
+
+    Stages a packed int8 tile plus its per-row scales into shared memory,
+    unpacks on the VPU with the shift/mask idiom (dequant_matmul.py's
+    Fig. 15/17 fast-dequant loop lifted to the KV path), applies the scales,
+    and lands the compute-dtype tile in a shared buffer ready for the MXU —
+    so a quantized paged kernel differs from its fp twin only by routing
+    ``load_kv`` through :meth:`load` instead of a plain ``T.copy``.
+
+    The packed bytes and scales stay resident in ``packed_shared`` /
+    ``scale_shared`` after a load: the prefill kernels re-copy those slices
+    straight into the page pools (write path stores what was read, no
+    re-quantization).
+    """
+
+    def __init__(self, rows, feat, fmt, dtype="float32"):
+        if fmt not in KV_PACK:
+            raise ValueError(f"unsupported KV quant format {fmt}")
+        self.rows, self.feat, self.fmt, self.dtype = rows, feat, fmt, dtype
+        self.pack = KV_PACK[fmt]
+        if feat % self.pack:
+            raise ValueError("feature dim must be a multiple of the pack factor")
+        self.packed_shared = T.alloc_shared((rows, feat // self.pack), "int8")
+        self.packed_local = T.alloc_fragment((rows, feat // self.pack), "int8")
+        self.scale_shared = T.alloc_shared((rows, 1), dtype)
+        self.deq = T.alloc_fragment((rows, feat), dtype)
+        self.out = T.alloc_shared((rows, feat), dtype)
+
+    def load(self, packed_region, scale_region):
+        """Stage one packed tile + scales and return the dequantized tile."""
+        T.copy(packed_region, self.packed_shared)
+        T.copy(scale_region, self.scale_shared)
+        return self.dequant()
+
+    def dequant(self):
+        """Unpack + scale whatever is staged in ``packed_shared``."""
+        T.copy(self.packed_shared, self.packed_local)
+        if self.fmt == "int4":
+            for i, j in T.Parallel(self.rows, self.feat):
+                v = (self.packed_local[i, j // 2] >> ((j % 2) * 4)) & 15
+                v = T.if_then_else(v >= 8, v - 16, v)
+                self.deq[i, j] = T.cast(v, self.dtype)
+        else:  # int8: straight cast
+            for i, j in T.Parallel(self.rows, self.feat):
+                self.deq[i, j] = T.cast(self.packed_local[i, j], self.dtype)
+        for i, j in T.Parallel(self.rows, self.feat):
+            self.deq[i, j] = self.deq[i, j] * self.scale_shared[i, 0]
+        T.copy(self.deq, self.out)
+        return self.out
+
+
 def scores(acc_s, q, k, extra=()):
     """Fill ``acc_s`` with Q·Kᵀ — the Q-packing composition point.
 
@@ -179,16 +236,13 @@ def both(a, b):
     return lambda i, j: a(i, j) & b(i, j)
 
 
-def source_lines() -> int:
-    """Executable source lines of this template — comments and docstrings
+def _executable_lines(src: str) -> set:
+    """Line numbers carrying executable tokens — comments and docstrings
     excluded, matching what ``TileProgram.source_lines`` measures for the
-    (docstring-free) kernel bodies.  bench_loc counts the template once
-    against the pre-refactor sum of the hand-rolled softmax loops."""
-    import inspect
+    (docstring-free) kernel bodies."""
     import io
     import tokenize
 
-    src = inspect.getsource(inspect.getmodule(source_lines))
     skip = {tokenize.COMMENT, tokenize.STRING, tokenize.NL, tokenize.NEWLINE,
             tokenize.INDENT, tokenize.DEDENT, tokenize.ENCODING,
             tokenize.ENDMARKER}
@@ -196,4 +250,29 @@ def source_lines() -> int:
     for tok in tokenize.generate_tokens(io.StringIO(src).readline):
         if tok.type not in skip:
             lines.add(tok.start[0])
-    return len(lines)
+    return lines
+
+
+def source_lines() -> int:
+    """Executable source lines of the online-softmax template.  bench_loc
+    counts the template once against the pre-refactor sum of the
+    hand-rolled softmax loops.  :class:`DequantStage` is excluded — it is
+    the *quantized* kernels' composition point, charged separately
+    (:func:`dequant_stage_lines`) against the four quantized variants."""
+    import inspect
+
+    mod_src, mod_start = inspect.getsource(inspect.getmodule(source_lines)), 1
+    lines = _executable_lines(mod_src)
+    dq_src, dq_start = inspect.getsourcelines(DequantStage)
+    dq_range = set(range(dq_start, dq_start + len(dq_src)))
+    return len(lines - dq_range)
+
+
+def dequant_stage_lines() -> int:
+    """Executable source lines of :class:`DequantStage` alone — the dequant
+    KV-source composition point shared by the quantized paged / prefill /
+    MLA kernels (and written once instead of four unpack loops)."""
+    import inspect
+
+    src, start = inspect.getsourcelines(DequantStage)
+    return len(_executable_lines("".join(src)))

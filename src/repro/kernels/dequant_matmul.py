@@ -40,8 +40,8 @@ def dequant_matmul_program(
     if fmt not in _PACK:
         raise ValueError(f"unknown quant format {fmt}")
     pack = _PACK[fmt]
-    if K % (block_K * pack) and fmt != "int8":
-        raise ValueError("K must divide block_K * pack factor")
+    if block_K % pack:
+        raise ValueError("block_K must be a multiple of the pack factor")
     storage_dtype = "int8"
     if M % block_M or N % block_N or K % block_K:
         raise ValueError("blocks must divide problem shape")
@@ -126,15 +126,30 @@ def dequant_matmul_program(
 
 # Tiny-shape configs for the pallas-vs-reference parity suite
 # (tests/test_pipeline.py); int4 exercises the vectorized sub-byte unpack,
-# int8 the straight cast path.
+# int8 the straight cast path, int2 the 4-way sub-byte unpack, nf4 the
+# codebook lookup via the T.call_tile_lib escape hatch.  The odd-K int4
+# case (K=48 -> 3 K-blocks) covers shapes the old K % (block_K * pack)
+# guard wrongly rejected.
 PARITY_CASES = [
     (
         "dequant_matmul_int4",
         dict(M=16, N=16, K=32, fmt="int4", block_M=16, block_N=16, block_K=16),
     ),
     (
+        "dequant_matmul_int4_oddk",
+        dict(M=16, N=16, K=48, fmt="int4", block_M=16, block_N=16, block_K=16),
+    ),
+    (
         "dequant_matmul_int8",
         dict(M=16, N=16, K=32, fmt="int8", block_M=16, block_N=16, block_K=16),
+    ),
+    (
+        "dequant_matmul_int2",
+        dict(M=16, N=16, K=32, fmt="int2", block_M=16, block_N=16, block_K=16),
+    ),
+    (
+        "dequant_matmul_nf4",
+        dict(M=16, N=16, K=32, fmt="nf4", block_M=16, block_N=16, block_K=16),
     ),
 ]
 

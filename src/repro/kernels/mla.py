@@ -298,11 +298,211 @@ def mla_prefill_program(
     return PrefillMLA
 
 
+def mla_paged_quant_program(
+    slots: int,
+    heads: int,
+    dim: int,
+    pe_dim: int,
+    page_size: int,
+    max_pages: int,
+    num_pages: int,
+    block_H: int = 64,
+    fmt: str = "int8",
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> TileProgram:
+    """Quantized paged MLA decode: latent *and* rope pools stored packed
+    int8 with per-token scales, dequantized inline through the
+    :class:`attention_core.DequantStage` composition point.  V is the
+    dequantized latent — exactly the fp kernel with ``load_kv`` swapped."""
+    bh = min(block_H, heads)
+    if heads % bh:
+        raise ValueError("the head block must divide heads")
+    pack = AC.KV_PACK[fmt]
+    scale = (
+        sm_scale if sm_scale is not None else 1.0 / math.sqrt(dim + pe_dim)
+    ) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def PagedMLAQuant(
+        Tables: T.ScalarTensor((slots, max_pages), "int32"),
+        Lens: T.ScalarTensor((slots,), "int32"),
+        Q: T.Tensor((slots, heads, dim), dtype),
+        Q_pe: T.Tensor((slots, heads, pe_dim), dtype),
+        KVPages: T.Tensor((num_pages, page_size, dim // pack), "int8"),
+        KPePages: T.Tensor((num_pages, page_size, pe_dim // pack), "int8"),
+        KVScales: T.Tensor((num_pages, page_size, 1), dtype),
+        KPeScales: T.Tensor((num_pages, page_size, 1), dtype),
+        Output: T.Tensor((slots, heads, dim), dtype),
+    ):
+        with T.Kernel(heads // bh, slots) as (by, bz):
+            Q_shared = T.alloc_shared((bh, dim), dtype)
+            Q_pe_shared = T.alloc_shared((bh, pe_dim), dtype)
+            kvq = AC.DequantStage(page_size, dim, fmt, dtype)
+            peq = AC.DequantStage(page_size, pe_dim, fmt, dtype)
+            acc_s = T.alloc_fragment((bh, page_size), accum_dtype)
+            ons = AC.OnlineSoftmax(bh, dim, scale, accum_dtype, safe_div=True)
+
+            T.copy(Q[bz, by * bh, 0], Q_shared)
+            T.copy(Q_pe[bz, by * bh, 0], Q_pe_shared)
+
+            def load_kv(k):
+                kv = kvq.load(KVPages[Tables[bz, k], 0, 0],
+                              KVScales[Tables[bz, k], 0, 0])
+                peq.load(KPePages[Tables[bz, k], 0, 0],
+                         KPeScales[Tables[bz, k], 0, 0])
+                return kv, kv  # V is the dequantized latent itself
+
+            def mask(k):
+                return AC.ragged(Lens[bz], lambda j: k * page_size + j, window)
+
+            AC.attend(
+                ons, acc_s, page_size, max_pages, load_kv,
+                lambda s, ks, k: AC.scores(
+                    s, Q_shared, ks, extra=[(Q_pe_shared, peq.out)]
+                ),
+                mask, num_stages=num_stages,
+            )
+            ons.finalize(Output[bz, by * bh, 0])
+
+    return PagedMLAQuant
+
+
+def mla_prefill_quant_program(
+    slots: int,
+    heads: int,
+    dim: int,
+    pe_dim: int,
+    chunk: int,
+    page_size: int,
+    max_pages: int,
+    num_pages: int,
+    fmt: str = "int8",
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> TileProgram:
+    """Quantized MLA chunked prefill: the chunk's latents/rope arrive
+    pre-quantized (ops.py packs them), attend as the dequantized roundtrip,
+    and the packed bytes + scales are written into the pools exactly as
+    staged — the prefill_attention_quant composition with MLA's score
+    split and the latent as V."""
+    if chunk % page_size:
+        raise ValueError("chunk must be a multiple of page_size")
+    cpp = chunk // page_size
+    rows = page_size * heads
+    pack = AC.KV_PACK[fmt]
+    scale = (
+        sm_scale if sm_scale is not None else 1.0 / math.sqrt(dim + pe_dim)
+    ) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def PrefillMLAQuant(
+        Tables: T.ScalarTensor((slots, max_pages), "int32"),
+        Starts: T.ScalarTensor((slots,), "int32"),  # prior tokens (page-aligned)
+        Lens: T.ScalarTensor((slots,), "int32"),  # live tokens in the chunk
+        Q: T.Tensor((slots, chunk * heads, dim), dtype),
+        Q_pe: T.Tensor((slots, chunk * heads, pe_dim), dtype),
+        CKV: T.Tensor((slots, chunk, dim // pack), "int8"),
+        KPE: T.Tensor((slots, chunk, pe_dim // pack), "int8"),
+        CKVScale: T.Tensor((slots, chunk, 1), dtype),
+        KPEScale: T.Tensor((slots, chunk, 1), dtype),
+        KVPages: T.Tensor((num_pages, page_size, dim // pack), "int8"),
+        KPePages: T.Tensor((num_pages, page_size, pe_dim // pack), "int8"),
+        KVScales: T.Tensor((num_pages, page_size, 1), dtype),
+        KPeScales: T.Tensor((num_pages, page_size, 1), dtype),
+        Output: T.Tensor((slots, chunk * heads, dim), dtype),
+    ):
+        with T.Kernel(cpp, slots) as (bq, bz):
+            Q_shared = T.alloc_shared((rows, dim), dtype)
+            Q_pe_shared = T.alloc_shared((rows, pe_dim), dtype)
+            kc = AC.DequantStage(chunk, dim, fmt, dtype)
+            pc = AC.DequantStage(chunk, pe_dim, fmt, dtype)
+            kpq = AC.DequantStage(page_size, dim, fmt, dtype)
+            ppq = AC.DequantStage(page_size, pe_dim, fmt, dtype)
+            acc_s = T.alloc_fragment((rows, page_size), accum_dtype)
+            acc_c = T.alloc_fragment((rows, chunk), accum_dtype)
+            ons = AC.OnlineSoftmax(rows, dim, scale, accum_dtype,
+                                   safe_div=True)
+
+            T.copy(Q[bz, bq * rows, 0], Q_shared)
+            T.copy(Q_pe[bz, bq * rows, 0], Q_pe_shared)
+            Kc = kc.load(CKV[bz, 0, 0], CKVScale[bz, 0, 0])
+            Pc = pc.load(KPE[bz, 0, 0], KPEScale[bz, 0, 0])
+
+            # ---- prior latents: paged gather + inline dequant ------------
+            def load_prior(kp):
+                ks = kpq.load(KVPages[Tables[bz, kp], 0, 0],
+                              KVScales[Tables[bz, kp], 0, 0])
+                ppq.load(KPePages[Tables[bz, kp], 0, 0],
+                         KPeScales[Tables[bz, kp], 0, 0])
+                return ks, ks  # V is the dequantized latent itself
+
+            q_pos = lambda r: Starts[bz] + bq * page_size + r // heads
+
+            def prior_mask(kp):
+                k_pos = lambda j: kp * page_size + j
+                m = AC.ragged(Starts[bz], k_pos)
+                if window is not None:
+                    m = AC.both(m, AC.banded(q_pos, k_pos, window))
+                return m
+
+            AC.attend(
+                ons, acc_s, page_size, max_pages, load_prior,
+                lambda s, ks, kp: AC.scores(
+                    s, Q_shared, ks, extra=[(Q_pe_shared, ppq.out)]
+                ),
+                prior_mask, num_stages=num_stages,
+            )
+
+            # ---- the chunk itself (dequantized roundtrip) ----------------
+            AC.scores(acc_c, Q_shared, Kc, extra=[(Q_pe_shared, Pc)])
+            in_pos = lambda r: bq * page_size + r // heads
+            cmask = AC.both(
+                AC.causal(in_pos, lambda j: j),
+                AC.ragged(Lens[bz], lambda j: j),
+            )
+            if window is not None:
+                cmask = AC.both(cmask, AC.banded(in_pos, lambda j: j, window))
+            ons.update(acc_c, chunk, Kc, cmask)
+
+            ons.finalize(Output[bz, bq * rows, 0])
+
+            # ---- the paged write: packed bytes + scales as staged --------
+            live_page = (bq * page_size) < Lens[bz]
+            tidx = T.minimum(Starts[bz] // page_size + bq, max_pages - 1)
+            dst_page = T.if_then_else(live_page, Tables[bz, tidx], 0)
+            T.copy(
+                kc.packed_shared[bq * page_size : bq * page_size + page_size, :],
+                KVPages[dst_page, 0, 0],
+            )
+            T.copy(
+                pc.packed_shared[bq * page_size : bq * page_size + page_size, :],
+                KPePages[dst_page, 0, 0],
+            )
+            T.copy(
+                kc.scale_shared[bq * page_size : bq * page_size + page_size, :],
+                KVScales[dst_page, 0, 0],
+            )
+            T.copy(
+                pc.scale_shared[bq * page_size : bq * page_size + page_size, :],
+                KPeScales[dst_page, 0, 0],
+            )
+
+    return PrefillMLAQuant
+
+
 # Tiny-shape configs for the pallas-vs-reference parity suite
 # (tests/test_pipeline.py): the contiguous Fig. 18 kernel, the paged decode
 # kernel (ragged lens through a block table) and the chunked-prefill kernel
 # (multi-page chunk, in-kernel page writes).  The paged cases take their
-# inputs from the override below — tables must hold valid page ids.
+# inputs from the override below — tables must hold valid page ids.  The
+# _quant cases store both latent and rope pools packed (int8 / int4).
 PARITY_CASES = [
     (
         "mla",
@@ -329,6 +529,26 @@ PARITY_CASES = [
         dict(slots=2, heads=2, dim=16, pe_dim=8, chunk=32, page_size=16,
              max_pages=4, num_pages=10, window=20),
     ),
+    (
+        "mla_paged_quant_int8",
+        dict(slots=3, heads=4, dim=16, pe_dim=8, page_size=16, max_pages=2,
+             num_pages=8, block_H=2, fmt="int8"),
+    ),
+    (
+        "mla_paged_quant_int4",
+        dict(slots=2, heads=4, dim=16, pe_dim=8, page_size=16, max_pages=2,
+             num_pages=8, block_H=2, fmt="int4"),
+    ),
+    (
+        "mla_prefill_quant_int8",
+        dict(slots=2, heads=2, dim=16, pe_dim=8, chunk=32, page_size=16,
+             max_pages=4, num_pages=10, fmt="int8"),
+    ),
+    (
+        "mla_prefill_quant_int4",
+        dict(slots=2, heads=2, dim=16, pe_dim=8, chunk=32, page_size=16,
+             max_pages=4, num_pages=10, fmt="int4"),
+    ),
 ]
 
 
@@ -336,8 +556,12 @@ def parity_programs():
     for name, cfg in PARITY_CASES:
         if name == "mla":
             yield name, mla_program(**cfg)
+        elif name.startswith("mla_paged_quant"):
+            yield name, mla_paged_quant_program(**cfg)
         elif name.startswith("mla_paged"):
             yield name, mla_paged_program(**cfg)
+        elif name.startswith("mla_prefill_quant"):
+            yield name, mla_prefill_quant_program(**cfg)
         else:
             yield name, mla_prefill_program(**cfg)
 
@@ -368,11 +592,19 @@ def parity_inputs(name, program, rng):
         lens = rng.integers(chunk - ps + 1, chunk + 1, size=slots).astype("int32")
         scalars = [pages, starts, lens]
         nskip = 3
+
+    def fill(p):
+        if str(p.dtype).startswith("int"):
+            return rng.integers(-128, 128, size=p.shape).astype(p.dtype)
+        if p.name.endswith(("Scale", "Scales")):
+            return rng.uniform(0.05, 0.2, size=p.shape).astype(p.dtype)
+        return rng.standard_normal(p.shape).astype(p.dtype)
+
     args = list(scalars)
     for p in program.input_params()[nskip:]:
-        args.append(rng.standard_normal(p.shape).astype(p.dtype))
+        args.append(fill(p))
     # in-out page pools ride after the pure inputs (aliased operands)
     for p in program.output_params():
-        if p.name in ("KVPages", "KPePages"):
-            args.append(rng.standard_normal(p.shape).astype(p.dtype))
+        if p.name in ("KVPages", "KPePages", "KVScales", "KPeScales"):
+            args.append(fill(p))
     return args

@@ -34,9 +34,18 @@ from .dequant_matmul import dequant_matmul_program
 from .flash_attention import flash_attention_program
 from .linear_attention import chunk_scan_program, chunk_state_program
 from .matmul import matmul_program
-from .mla import mla_paged_program, mla_prefill_program, mla_program
-from .paged_attention import paged_attention_program
-from .prefill_attention import prefill_attention_program
+from .mla import (
+    mla_paged_program,
+    mla_paged_quant_program,
+    mla_prefill_program,
+    mla_prefill_quant_program,
+    mla_program,
+)
+from .paged_attention import paged_attention_program, paged_attention_quant_program
+from .prefill_attention import (
+    prefill_attention_program,
+    prefill_attention_quant_program,
+)
 
 _DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
 _CACHE: dict = {}
@@ -233,6 +242,113 @@ def prefill_attention(q, k_new, v_new, k_pages, v_pages, block_tables,
     return out, kp, vp
 
 
+def paged_attention_quant(q, k_pages, v_pages, k_scales, v_scales,
+                          block_tables, seq_lens, *, fmt: str = "int8",
+                          sm_scale=None, window: Optional[int] = None,
+                          logit_soft_cap=None, backend: Optional[str] = None,
+                          num_stages: int = 2):
+    """Quantized paged decode: packed int8 K/V pools + per-token scale
+    columns (see kernels/paged_attention.py).  The Pallas path dequantizes
+    page-at-a-time inside the kernel (DequantStage); the XLA path is
+    ref.paged_attention_quant (dequantize pools, then the fp oracle)."""
+    be = _resolve(backend)
+    if be == "xla" or logit_soft_cap is not None:
+        return ref.paged_attention_quant(
+            q, k_pages, v_pages, k_scales, v_scales, block_tables, seq_lens,
+            fmt=fmt, sm_scale=sm_scale, window=window,
+            logit_soft_cap=logit_soft_cap,
+        )
+    b, hq, d = q.shape
+    hkv, num_pages, page_size, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    key = ("paged_q", fmt, b, hq, hkv, num_pages, page_size, max_pages, d,
+           window, str(q.dtype), num_stages, sm_scale)
+    kern = _cached(
+        key,
+        lambda: paged_attention_quant_program(
+            b, hq, hkv, d, page_size, max_pages, num_pages, fmt, window,
+            str(q.dtype), "float32", num_stages, sm_scale,
+        ),
+    )
+    return kern(block_tables, seq_lens, q, k_pages, v_pages, k_scales, v_scales)
+
+
+def prefill_attention_quant(q, k_new, v_new, k_pages, v_pages, k_scales,
+                            v_scales, block_tables, start_lens, chunk_lens, *,
+                            fmt: str = "int8", sm_scale=None,
+                            window: Optional[int] = None, logit_soft_cap=None,
+                            backend: Optional[str] = None, num_stages: int = 2):
+    """Quantized chunked prefill: quantizes the chunk's fp K/V per token
+    here (the write-time quantization point), then either the tile kernel
+    (packed chunk in, packed page + scale writes from inside the kernel) or
+    the XLA masked scatter + oracle.  Both paths attend the *dequantized
+    roundtrip* of the chunk — what every later decode step will read back —
+    so prefill and decode see one consistent cache.
+
+    Returns ``(out, k_pages', v_pages', k_scales', v_scales')``.
+    """
+    be = _resolve(backend)
+    b, hq, chunk, d = q.shape
+    hkv, num_pages, page_size, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    kq, ks_new = ref.quantize_rows(k_new, fmt)
+    vq, vs_new = ref.quantize_rows(v_new, fmt)
+    if be != "xla" and logit_soft_cap is None and chunk % page_size == 0 \
+            and chunk // page_size <= max_pages:
+        group = hq // hkv
+        key = ("prefill_q", fmt, b, hq, hkv, num_pages, page_size, max_pages,
+               chunk, d, window, str(q.dtype), num_stages, sm_scale)
+        kern = _cached(
+            key,
+            lambda: prefill_attention_quant_program(
+                b, hq, hkv, d, chunk, page_size, max_pages, num_pages, fmt,
+                window, str(q.dtype), "float32", num_stages, sm_scale,
+            ),
+        )
+        # pack queries chunk-major with their GQA group: row = i*group + g
+        qp = q.reshape(b, hkv, group, chunk, d).transpose(0, 1, 3, 2, 4)
+        qp = qp.reshape(b, hkv, chunk * group, d)
+        kp, vp, ksp, vsp, out = kern(
+            block_tables, start_lens, chunk_lens, qp, kq, vq, ks_new, vs_new,
+            k_pages, v_pages, k_scales, v_scales,
+        )
+        out = out.reshape(b, hkv, chunk, group, d).transpose(0, 1, 3, 2, 4)
+        return out.reshape(b, hq, chunk, d), kp, vp, ksp, vsp
+
+    # ---- XLA path: masked scatter of packed bytes + scales, then the
+    # oracle over the dequantized gather -----------------------------------
+    pos = start_lens[:, None].astype(jnp.int32) + jnp.arange(chunk, dtype=jnp.int32)
+    logical = jnp.clip(pos // page_size, 0, max_pages - 1)
+    phys = jnp.take_along_axis(block_tables, logical, axis=1)  # (B, C)
+    valid = jnp.arange(chunk)[None, :] < chunk_lens[:, None]
+    phys = jnp.where(valid, phys, 0)  # dead tail -> reserved garbage page
+    off = pos % page_size
+    k_pages, v_pages = jnp.asarray(k_pages), jnp.asarray(v_pages)
+    k_scales, v_scales = jnp.asarray(k_scales), jnp.asarray(v_scales)
+    kp = k_pages.at[:, phys, off].set(kq.transpose(1, 0, 2, 3))
+    vp = v_pages.at[:, phys, off].set(vq.transpose(1, 0, 2, 3))
+    sdt = k_scales.dtype
+    ksp = k_scales.at[:, phys, off].set(ks_new.transpose(1, 0, 2, 3).astype(sdt))
+    vsp = v_scales.at[:, phys, off].set(vs_new.transpose(1, 0, 2, 3).astype(sdt))
+
+    def gathered(pages, scales):
+        g = ref.dequantize_rows(pages, scales, fmt).astype(q.dtype)
+        g = g[:, block_tables]  # (Hkv, B, max_pages, page_size, D)
+        return jnp.moveaxis(g, 0, 1).reshape(b, hkv, -1, d)
+
+    k_new_dq = ref.dequantize_rows(kq, ks_new, fmt).astype(q.dtype)
+    v_new_dq = ref.dequantize_rows(vq, vs_new, fmt).astype(q.dtype)
+    s_total = max_pages * page_size
+    si = jnp.arange(s_total, dtype=jnp.int32)
+    ctx_pos = jnp.where(si[None, :] < start_lens[:, None], si[None, :], -1)
+    out = ref.prefill_attention(
+        q, k_new_dq, v_new_dq, gathered(kp, ksp), gathered(vp, vsp), ctx_pos,
+        pos, chunk_lens, sm_scale=sm_scale, window=window,
+        logit_soft_cap=logit_soft_cap,
+    )
+    return out, kp, vp, ksp, vsp
+
+
 def mla(q, q_pe, kv, k_pe, *, sm_scale=None, backend: Optional[str] = None,
         block_n: Optional[int] = None, block_h: int = 64, num_stages: int = 2):
     be = _resolve(backend)
@@ -356,6 +472,115 @@ def mla_prefill(q_lat, q_pe, ckv_new, kpe_new, ckv_pages, kpe_pages,
         logit_soft_cap=logit_soft_cap,
     )
     return out, ckv_p, kpe_p
+
+
+def mla_paged_quant(q_lat, q_pe, ckv_pages, kpe_pages, ckv_scales, kpe_scales,
+                    block_tables, seq_lens, *, fmt: str = "int8",
+                    sm_scale=None, window: Optional[int] = None,
+                    logit_soft_cap: Optional[float] = None,
+                    backend: Optional[str] = None, block_h: int = 64,
+                    num_stages: int = 2):
+    """Quantized paged MLA decode: packed latent + rope pools with
+    per-token scale columns.  Pallas path dequantizes inline
+    (DequantStage); XLA path is ref.mla_paged_quant."""
+    be = _resolve(backend)
+    if be == "xla" or logit_soft_cap is not None:
+        return ref.mla_paged_quant(
+            q_lat, q_pe, ckv_pages, kpe_pages, ckv_scales, kpe_scales,
+            block_tables, seq_lens, fmt=fmt, sm_scale=sm_scale, window=window,
+            logit_soft_cap=logit_soft_cap,
+        )
+    b, h, r = q_lat.shape
+    pe = q_pe.shape[-1]
+    num_pages, page_size, _ = ckv_pages.shape
+    max_pages = block_tables.shape[1]
+    bh = min(block_h, h)
+    while h % bh:
+        bh -= 1
+    key = ("mla_paged_q", fmt, b, h, r, pe, num_pages, page_size, max_pages,
+           str(q_lat.dtype), bh, num_stages, sm_scale, window)
+    kern = _cached(
+        key,
+        lambda: mla_paged_quant_program(
+            b, h, r, pe, page_size, max_pages, num_pages, bh, fmt,
+            str(q_lat.dtype), "float32", num_stages, sm_scale, window,
+        ),
+    )
+    return kern(block_tables, seq_lens, q_lat, q_pe, ckv_pages, kpe_pages,
+                ckv_scales, kpe_scales)
+
+
+def mla_prefill_quant(q_lat, q_pe, ckv_new, kpe_new, ckv_pages, kpe_pages,
+                      ckv_scales, kpe_scales, block_tables, start_lens,
+                      chunk_lens, *, fmt: str = "int8", sm_scale=None,
+                      window: Optional[int] = None,
+                      logit_soft_cap: Optional[float] = None,
+                      backend: Optional[str] = None, num_stages: int = 2):
+    """Quantized MLA chunked prefill: quantizes the chunk's latents/rope per
+    token here (write-time quantization), attends the dequantized roundtrip
+    and writes packed pages + scales.  Returns
+    ``(out, ckv_pages', kpe_pages', ckv_scales', kpe_scales')``."""
+    be = _resolve(backend)
+    b, h, chunk, r = q_lat.shape
+    pe = q_pe.shape[-1]
+    num_pages, page_size, _ = ckv_pages.shape
+    max_pages = block_tables.shape[1]
+    cq, cs_new = ref.quantize_rows(ckv_new, fmt)
+    pq, ps_new = ref.quantize_rows(kpe_new, fmt)
+    if be != "xla" and logit_soft_cap is None and chunk % page_size == 0 \
+            and chunk // page_size <= max_pages:
+        key = ("mla_prefill_q", fmt, b, h, r, pe, num_pages, page_size,
+               max_pages, chunk, str(q_lat.dtype), num_stages, sm_scale, window)
+        kern = _cached(
+            key,
+            lambda: mla_prefill_quant_program(
+                b, h, r, pe, chunk, page_size, max_pages, num_pages, fmt,
+                str(q_lat.dtype), "float32", num_stages, sm_scale, window,
+            ),
+        )
+        # pack queries chunk-major with their head: row = i*heads + h
+        qp = q_lat.transpose(0, 2, 1, 3).reshape(b, chunk * h, r)
+        qpep = q_pe.transpose(0, 2, 1, 3).reshape(b, chunk * h, pe)
+        ckv_p, kpe_p, cs_p, ps_p, out = kern(
+            block_tables, start_lens, chunk_lens, qp, qpep, cq, pq, cs_new,
+            ps_new, ckv_pages, kpe_pages, ckv_scales, kpe_scales,
+        )
+        out = out.reshape(b, chunk, h, r).transpose(0, 2, 1, 3)
+        return out, ckv_p, kpe_p, cs_p, ps_p
+
+    # ---- XLA path: masked scatter of packed bytes + scales, then the
+    # oracle over the dequantized gather -----------------------------------
+    pos = start_lens[:, None].astype(jnp.int32) + jnp.arange(chunk, dtype=jnp.int32)
+    logical = jnp.clip(pos // page_size, 0, max_pages - 1)
+    phys = jnp.take_along_axis(block_tables, logical, axis=1)  # (B, C)
+    valid = jnp.arange(chunk)[None, :] < chunk_lens[:, None]
+    phys = jnp.where(valid, phys, 0)  # dead tail -> reserved garbage page
+    off = pos % page_size
+    ckv_pages, kpe_pages = jnp.asarray(ckv_pages), jnp.asarray(kpe_pages)
+    ckv_scales, kpe_scales = jnp.asarray(ckv_scales), jnp.asarray(kpe_scales)
+    ckv_p = ckv_pages.at[phys, off].set(cq)
+    kpe_p = kpe_pages.at[phys, off].set(pq)
+    sdt = ckv_scales.dtype
+    cs_p = ckv_scales.at[phys, off].set(cs_new.astype(sdt))
+    ps_p = kpe_scales.at[phys, off].set(ps_new.astype(sdt))
+
+    ckv_new_dq = ref.dequantize_rows(cq, cs_new, fmt).astype(q_lat.dtype)
+    kpe_new_dq = ref.dequantize_rows(pq, ps_new, fmt).astype(q_lat.dtype)
+    s_total = max_pages * page_size
+    si = jnp.arange(s_total, dtype=jnp.int32)
+    ctx_pos = jnp.where(si[None, :] < start_lens[:, None], si[None, :], -1)
+    out = ref.mla_prefill(
+        q_lat, q_pe, ckv_new_dq, kpe_new_dq,
+        ref.dequantize_rows(ckv_p, cs_p, fmt).astype(q_lat.dtype)[
+            block_tables
+        ].reshape(b, -1, r),
+        ref.dequantize_rows(kpe_p, ps_p, fmt).astype(q_lat.dtype)[
+            block_tables
+        ].reshape(b, -1, pe),
+        ctx_pos, pos, chunk_lens, sm_scale=sm_scale, window=window,
+        logit_soft_cap=logit_soft_cap,
+    )
+    return out, ckv_p, kpe_p, cs_p, ps_p
 
 
 # ---------------------------------------------------------------------------

@@ -90,10 +90,81 @@ def paged_attention_program(
     return PagedAttn
 
 
+def paged_attention_quant_program(
+    slots: int,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    page_size: int,
+    max_pages: int,
+    num_pages: int,
+    fmt: str = "int8",
+    window: Optional[int] = None,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+) -> TileProgram:
+    """Quantized paged decode: the fp kernel with ``load_kv`` routed through
+    the :class:`attention_core.DequantStage` composition point.  Pages hold
+    packed int8 K/V (``head_dim // pack`` bytes per token) plus a per-token
+    scale column; the unpack+scale runs on the VPU between the page DMA and
+    the score GEMM.  Everything else — grid, masks, online softmax — is the
+    fp kernel unchanged."""
+    if heads % kv_heads:
+        raise ValueError("GQA requires heads % kv_heads == 0")
+    group = heads // kv_heads
+    pack = AC.KV_PACK[fmt]
+    scale = (sm_scale if sm_scale is not None else 1.0 / math.sqrt(head_dim)) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def PagedAttnQuant(
+        Tables: T.ScalarTensor((slots, max_pages), "int32"),
+        Lens: T.ScalarTensor((slots,), "int32"),
+        Q: T.Tensor((slots, heads, head_dim), dtype),
+        KPages: T.Tensor((kv_heads, num_pages, page_size, head_dim // pack), "int8"),
+        VPages: T.Tensor((kv_heads, num_pages, page_size, head_dim // pack), "int8"),
+        KScales: T.Tensor((kv_heads, num_pages, page_size, 1), dtype),
+        VScales: T.Tensor((kv_heads, num_pages, page_size, 1), dtype),
+        Output: T.Tensor((slots, heads, head_dim), dtype),
+    ):
+        with T.Kernel(kv_heads, slots) as (bh, bz):
+            Q_shared = T.alloc_shared((group, head_dim), dtype)
+            kq = AC.DequantStage(page_size, head_dim, fmt, dtype)
+            vq = AC.DequantStage(page_size, head_dim, fmt, dtype)
+            acc_s = T.alloc_fragment((group, page_size), accum_dtype)
+            ons = AC.OnlineSoftmax(group, head_dim, scale, accum_dtype,
+                                   safe_div=True)
+
+            T.copy(Q[bz, bh * group, 0], Q_shared)
+
+            def load_kv(k):
+                # paged gather + inline dequant (page index from the table)
+                ks = kq.load(KPages[bh, Tables[bz, k], 0, 0],
+                             KScales[bh, Tables[bz, k], 0, 0])
+                vs = vq.load(VPages[bh, Tables[bz, k], 0, 0],
+                             VScales[bh, Tables[bz, k], 0, 0])
+                return ks, vs
+
+            def mask(k):
+                return AC.ragged(Lens[bz], lambda j: k * page_size + j, window)
+
+            AC.attend(
+                ons, acc_s, page_size, max_pages, load_kv,
+                lambda s, ks, k: AC.scores(s, Q_shared, ks), mask,
+                num_stages=num_stages,
+            )
+            ons.finalize(Output[bz, bh * group, 0])
+
+    return PagedAttnQuant
+
+
 # Tiny-shape configs for the pallas-vs-reference parity suite
 # (tests/test_pipeline.py); covers GQA + MQA head groupings, a sliding
 # window, and the ragged case (block tables of different live lengths per
-# slot — exercised through the input override below).
+# slot — exercised through the input override below).  The _quant cases run
+# the same shapes through the DequantStage KV source (int8 and the packed
+# int4 sub-byte unpack).
 PARITY_CASES = [
     (
         "paged_attention_mqa",
@@ -110,12 +181,23 @@ PARITY_CASES = [
         dict(slots=2, heads=2, kv_heads=2, head_dim=16, page_size=16,
              max_pages=2, num_pages=4, window=12),
     ),
+    (
+        "paged_attention_quant_int8",
+        dict(slots=3, heads=4, kv_heads=2, head_dim=16, page_size=16,
+             max_pages=2, num_pages=8, fmt="int8"),
+    ),
+    (
+        "paged_attention_quant_int4",
+        dict(slots=2, heads=2, kv_heads=1, head_dim=16, page_size=16,
+             max_pages=2, num_pages=4, fmt="int4"),
+    ),
 ]
 
 
 def parity_programs():
     for name, cfg in PARITY_CASES:
-        yield name, paged_attention_program(**cfg)
+        maker = paged_attention_quant_program if "quant" in name else paged_attention_program
+        yield name, maker(**cfg)
 
 
 def parity_inputs(name, program, rng):
@@ -123,6 +205,7 @@ def parity_inputs(name, program, rng):
     ids and lens must be in range — random bytes won't do.  Tables are drawn
     without replacement (each physical page owned by one slot) and lens are
     ragged: every slot at a different fill level, including a partial page.
+    Quantized cases get full-range packed bytes and positive scales.
     """
     cfg = dict(PARITY_CASES)[name]
     slots, mp, np_ = cfg["slots"], cfg["max_pages"], cfg["num_pages"]
@@ -131,5 +214,10 @@ def parity_inputs(name, program, rng):
     lens = (rng.integers(1, max_len + 1, size=slots)).astype("int32")
     args = [pages, lens]
     for p in program.input_params()[2:]:
-        args.append(rng.standard_normal(p.shape).astype(p.dtype))
+        if str(p.dtype).startswith("int"):
+            args.append(rng.integers(-128, 128, size=p.shape).astype(p.dtype))
+        elif p.name.endswith("Scales"):
+            args.append(rng.uniform(0.05, 0.2, size=p.shape).astype(p.dtype))
+        else:
+            args.append(rng.standard_normal(p.shape).astype(p.dtype))
     return args

@@ -154,10 +154,145 @@ def prefill_attention_program(
     return PrefillAttn
 
 
+def prefill_attention_quant_program(
+    slots: int,
+    heads: int,
+    kv_heads: int,
+    head_dim: int,
+    chunk: int,
+    page_size: int,
+    max_pages: int,
+    num_pages: int,
+    fmt: str = "int8",
+    window: Optional[int] = None,
+    dtype: str = "float32",
+    accum_dtype: str = "float32",
+    num_stages: int = 2,
+    sm_scale: Optional[float] = None,
+) -> TileProgram:
+    """Quantized chunked prefill: the fp kernel with both KV paths routed
+    through :class:`attention_core.DequantStage`.
+
+    The chunk's own K/V arrive *pre-quantized* (packed int8 + per-token
+    scales — ops.py quantizes at the jnp level before the call) so the
+    paged write stores exactly the bytes that were staged: the packed
+    shared slices and scale slices are copied straight into the packed
+    pools and scale pools through the block table, and the chunk's own
+    attention reads the dequantized roundtrip (what every later decode
+    step will see).  Prior pages dequantize page-at-a-time as in the
+    quantized decode kernel."""
+    if heads % kv_heads:
+        raise ValueError("GQA requires heads % kv_heads == 0")
+    if chunk % page_size:
+        raise ValueError("chunk must be a multiple of page_size")
+    group = heads // kv_heads
+    cpp = chunk // page_size
+    rows = page_size * group
+    pack = AC.KV_PACK[fmt]
+    scale = (sm_scale if sm_scale is not None else 1.0 / math.sqrt(head_dim)) * 1.44269504  # log2(e)
+
+    @T.prim_func
+    def PrefillAttnQuant(
+        Tables: T.ScalarTensor((slots, max_pages), "int32"),
+        Starts: T.ScalarTensor((slots,), "int32"),  # prior tokens (page-aligned)
+        Lens: T.ScalarTensor((slots,), "int32"),  # live tokens in the chunk
+        Q: T.Tensor((slots, kv_heads, chunk * group, head_dim), dtype),
+        K: T.Tensor((slots, kv_heads, chunk, head_dim // pack), "int8"),
+        V: T.Tensor((slots, kv_heads, chunk, head_dim // pack), "int8"),
+        KScale: T.Tensor((slots, kv_heads, chunk, 1), dtype),
+        VScale: T.Tensor((slots, kv_heads, chunk, 1), dtype),
+        KPages: T.Tensor((kv_heads, num_pages, page_size, head_dim // pack), "int8"),
+        VPages: T.Tensor((kv_heads, num_pages, page_size, head_dim // pack), "int8"),
+        KScales: T.Tensor((kv_heads, num_pages, page_size, 1), dtype),
+        VScales: T.Tensor((kv_heads, num_pages, page_size, 1), dtype),
+        Output: T.Tensor((slots, kv_heads, chunk * group, head_dim), dtype),
+    ):
+        with T.Kernel(kv_heads, cpp, slots) as (bh, bq, bz):
+            Q_shared = T.alloc_shared((rows, head_dim), dtype)
+            kc = AC.DequantStage(chunk, head_dim, fmt, dtype)
+            vc = AC.DequantStage(chunk, head_dim, fmt, dtype)
+            kp = AC.DequantStage(page_size, head_dim, fmt, dtype)
+            vp = AC.DequantStage(page_size, head_dim, fmt, dtype)
+            acc_s = T.alloc_fragment((rows, page_size), accum_dtype)
+            acc_c = T.alloc_fragment((rows, chunk), accum_dtype)
+            # safe_div: rows past Lens are fully masked -> zeros, not nan
+            ons = AC.OnlineSoftmax(rows, head_dim, scale, accum_dtype,
+                                   safe_div=True)
+
+            T.copy(Q[bz, bh, bq * rows, 0], Q_shared)
+            # stage + dequantize the chunk once (the roundtrip every later
+            # decode step will read back from the pages)
+            Kc = kc.load(K[bz, bh, 0, 0], KScale[bz, bh, 0, 0])
+            Vc = vc.load(V[bz, bh, 0, 0], VScale[bz, bh, 0, 0])
+
+            q_pos = lambda r: Starts[bz] + bq * page_size + r // group
+
+            # ---- prior KV: paged gather + inline dequant -----------------
+            def load_prior(kpg):
+                ks = kp.load(KPages[bh, Tables[bz, kpg], 0, 0],
+                             KScales[bh, Tables[bz, kpg], 0, 0])
+                vs = vp.load(VPages[bh, Tables[bz, kpg], 0, 0],
+                             VScales[bh, Tables[bz, kpg], 0, 0])
+                return ks, vs
+
+            def prior_mask(kpg):
+                k_pos = lambda j: kpg * page_size + j
+                m = AC.ragged(Starts[bz], k_pos)
+                if window is not None:
+                    m = AC.both(m, AC.banded(q_pos, k_pos, window))
+                return m
+
+            AC.attend(
+                ons, acc_s, page_size, max_pages, load_prior,
+                lambda s, ks, k: AC.scores(s, Q_shared, ks), prior_mask,
+                num_stages=num_stages,
+            )
+
+            # ---- the chunk itself (dequantized roundtrip, never read back
+            # through the pages being written) -----------------------------
+            AC.scores(acc_c, Q_shared, Kc)
+            in_pos = lambda r: bq * page_size + r // group
+            cmask = AC.both(
+                AC.causal(in_pos, lambda j: j),
+                AC.ragged(Lens[bz], lambda j: j),
+            )
+            if window is not None:
+                cmask = AC.both(cmask, AC.banded(in_pos, lambda j: j, window))
+            ons.update(acc_c, chunk, Vc, cmask)
+
+            ons.finalize(Output[bz, bh, bq * rows, 0])
+
+            # ---- the paged write: packed bytes + scales, exactly as they
+            # were staged (same table-directed self-defense as the fp
+            # kernel: dead chunk pages land in garbage page 0) --------------
+            live_page = (bq * page_size) < Lens[bz]
+            tidx = T.minimum(Starts[bz] // page_size + bq, max_pages - 1)
+            dst_page = T.if_then_else(live_page, Tables[bz, tidx], 0)
+            T.copy(
+                kc.packed_shared[bq * page_size : bq * page_size + page_size, :],
+                KPages[bh, dst_page, 0, 0],
+            )
+            T.copy(
+                vc.packed_shared[bq * page_size : bq * page_size + page_size, :],
+                VPages[bh, dst_page, 0, 0],
+            )
+            T.copy(
+                kc.scale_shared[bq * page_size : bq * page_size + page_size, :],
+                KScales[bh, dst_page, 0, 0],
+            )
+            T.copy(
+                vc.scale_shared[bq * page_size : bq * page_size + page_size, :],
+                VScales[bh, dst_page, 0, 0],
+            )
+
+    return PrefillAttnQuant
+
+
 # Tiny-shape configs for the pallas-vs-reference parity suite
 # (tests/test_pipeline.py): MQA grouping, a multi-page chunk under GQA, and
 # a sliding window.  Inputs come from the override below — tables must hold
-# distinct live page ids and starts must be page-aligned.
+# distinct live page ids and starts must be page-aligned.  The _quant cases
+# route both KV paths through the DequantStage and write packed pages.
 PARITY_CASES = [
     (
         "prefill_attention_mqa",
@@ -174,12 +309,23 @@ PARITY_CASES = [
         dict(slots=2, heads=2, kv_heads=2, head_dim=16, chunk=16,
              page_size=16, max_pages=4, num_pages=8, window=20),
     ),
+    (
+        "prefill_attention_quant_int8",
+        dict(slots=2, heads=4, kv_heads=2, head_dim=16, chunk=32,
+             page_size=16, max_pages=4, num_pages=8, fmt="int8"),
+    ),
+    (
+        "prefill_attention_quant_int4",
+        dict(slots=2, heads=2, kv_heads=1, head_dim=16, chunk=16,
+             page_size=16, max_pages=4, num_pages=8, fmt="int4"),
+    ),
 ]
 
 
 def parity_programs():
     for name, cfg in PARITY_CASES:
-        yield name, prefill_attention_program(**cfg)
+        maker = prefill_attention_quant_program if "quant" in name else prefill_attention_program
+        yield name, maker(**cfg)
 
 
 def parity_inputs(name, program, rng):
@@ -202,11 +348,19 @@ def parity_inputs(name, program, rng):
     # dead-page path is covered by tests/test_prefill.py, which excludes
     # page 0 from comparison).
     lens = rng.integers(chunk - ps + 1, chunk + 1, size=slots).astype("int32")
+
+    def fill(p):
+        if str(p.dtype).startswith("int"):
+            return rng.integers(-128, 128, size=p.shape).astype(p.dtype)
+        if p.name.endswith(("Scale", "Scales")):
+            return rng.uniform(0.05, 0.2, size=p.shape).astype(p.dtype)
+        return rng.standard_normal(p.shape).astype(p.dtype)
+
     args = [pages, starts, lens]
     for p in program.input_params()[3:]:
-        args.append(rng.standard_normal(p.shape).astype(p.dtype))
+        args.append(fill(p))
     # in-out page pools ride after the pure inputs (aliased operands)
     for p in program.output_params():
-        if p.name in ("KPages", "VPages"):
-            args.append(rng.standard_normal(p.shape).astype(p.dtype))
+        if p.name in ("KPages", "VPages", "KScales", "VScales"):
+            args.append(fill(p))
     return args

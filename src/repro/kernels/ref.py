@@ -108,6 +108,93 @@ def dequant_matmul(
 
 
 # ---------------------------------------------------------------------------
+# KV-cache quantization: symmetric per-row (per-token) scales, packed along
+# the feature axis.  The storage layout of the quantized paged pools
+# (DESIGN.md §5.6): packed int8 data + a (rows, 1) scale column per page.
+# ---------------------------------------------------------------------------
+
+KV_QMAX = {"int8": 127.0, "int4": 7.0}
+KV_PACK = {"int8": 1, "int4": 2}
+
+
+def pack_int4(vals: jax.Array) -> jax.Array:
+    """(..., K) int8 in [-8, 7] -> (..., K//2) int8, low nibble first
+    (the byte order unpack_int4 and the kernel unpack loop expect)."""
+    lo = vals[..., 0::2].astype(jnp.int32) & 0xF
+    hi = vals[..., 1::2].astype(jnp.int32) & 0xF
+    return jax.lax.bitcast_convert_type((lo | (hi << 4)).astype(jnp.uint8), jnp.int8)
+
+
+def quantize_rows(x: jax.Array, fmt: str = "int8"):
+    """Symmetric per-row quantization over the last axis.
+
+    Returns ``(packed, scales)``: packed int8 data (last axis divided by the
+    pack factor) and (..., 1) scales in ``x``'s dtype.  All-zero rows get
+    scale 1 so dequantization stays exact (0 * 1 = 0).
+    """
+    qmax = KV_QMAX[fmt]
+    xf = jnp.asarray(x).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int8)
+    if fmt == "int4":
+        q = pack_int4(q)
+    return q, scale.astype(jnp.asarray(x).dtype)
+
+
+def dequantize_rows(packed: jax.Array, scales: jax.Array, fmt: str = "int8") -> jax.Array:
+    """Inverse of :func:`quantize_rows` -> float32."""
+    vals = unpack_int4(packed) if fmt == "int4" else packed
+    return vals.astype(jnp.float32) * scales.astype(jnp.float32)
+
+
+def paged_attention_quant(
+    q: jax.Array,  # (B, Hq, D)
+    k_pages: jax.Array,  # (Hkv, P, page_size, D//pack) packed int8
+    v_pages: jax.Array,
+    k_scales: jax.Array,  # (Hkv, P, page_size, 1)
+    v_scales: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+    fmt: str = "int8",
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Quantized paged-decode oracle: dequantize the pools, then the fp
+    oracle — the composition the tile kernel performs page-at-a-time."""
+    kf = dequantize_rows(k_pages, k_scales, fmt).astype(q.dtype)
+    vf = dequantize_rows(v_pages, v_scales, fmt).astype(q.dtype)
+    return paged_attention(q, kf, vf, block_tables, seq_lens, sm_scale=sm_scale,
+                           window=window, logit_soft_cap=logit_soft_cap,
+                           out_dtype=out_dtype)
+
+
+def mla_paged_quant(
+    q_lat: jax.Array,  # (B, H, R)
+    q_pe: jax.Array,
+    ckv_pages: jax.Array,  # (P, page_size, R//pack) packed int8
+    kpe_pages: jax.Array,  # (P, page_size, Dpe//pack) packed int8
+    ckv_scales: jax.Array,  # (P, page_size, 1)
+    kpe_scales: jax.Array,
+    block_tables: jax.Array,
+    seq_lens: jax.Array,
+    fmt: str = "int8",
+    sm_scale: Optional[float] = None,
+    window: Optional[int] = None,
+    logit_soft_cap: Optional[float] = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Quantized paged MLA decode oracle (latent + rope pools both packed)."""
+    ckv = dequantize_rows(ckv_pages, ckv_scales, fmt).astype(q_lat.dtype)
+    kpe = dequantize_rows(kpe_pages, kpe_scales, fmt).astype(q_lat.dtype)
+    return mla_paged(q_lat, q_pe, ckv, kpe, block_tables, seq_lens,
+                     sm_scale=sm_scale, window=window,
+                     logit_soft_cap=logit_soft_cap, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
 # FlashAttention (MHA/GQA, optional causal) — paper Table 3
 # ---------------------------------------------------------------------------
 

@@ -76,6 +76,11 @@ class ModelConfig:
     frontend_seq: int = 0  # prefix length delivered by the stub frontend
     dtype: str = "bfloat16"
     kernel_backend: str = "auto"  # pallas | xla | auto (see kernels.ops)
+    # Paged-KV storage format: None = store cfg.dtype; "int8"/"int4" = packed
+    # symmetric per-token quantization with per-row scales kept in the page
+    # pools (see kernels.ref.quantize_rows / DESIGN.md §5.6).  Only the paged
+    # layouts support this; contiguous caches reject it loudly.
+    kv_dtype: Optional[str] = None
 
     # -- derived -----------------------------------------------------------
     def __post_init__(self):

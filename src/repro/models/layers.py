@@ -175,7 +175,16 @@ def attention_full(params, x, cfg: ModelConfig, positions, window=None,
     return jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
 
 
+def _require_fp_cache(cfg: ModelConfig, layout: str):
+    if cfg.kv_dtype is not None:
+        raise ValueError(
+            f"kv_dtype={cfg.kv_dtype!r} requires a paged cache layout; "
+            f"the {layout} cache stores {cfg.dtype} only"
+        )
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window=None):
+    _require_fp_cache(cfg, "contiguous")
     size = min(max_len, window) if window else max_len
     return {
         "k": jnp.zeros((batch, cfg.num_kv_heads, size, cfg.head_dim), cfg.dtype),
@@ -189,7 +198,22 @@ def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, page_size: int):
     Unlike the contiguous cache there is no per-layer ring sizing — sliding
     windows are enforced by the attention mask over gathered pages, so every
     layer shares one pool geometry.  (Layer *stacking* still requires
-    uniform windows: the scanned decode body bakes the window statically.)"""
+    uniform windows: the scanned decode body bakes the window statically.)
+
+    With ``cfg.kv_dtype`` set ("int8"/"int4") the pools store packed int8
+    bytes plus per-row scales (``*_scale_pages``, fp, shape ``(..., ps, 1)``).
+    Scale leaves keep the page axis at ``ndim - 3`` so the serving layer's
+    ``copy_pages`` COW treats them like any other ``*_pages`` leaf."""
+    if cfg.kv_dtype is not None:
+        pack = ref.KV_PACK[cfg.kv_dtype]
+        pshape = (cfg.num_kv_heads, num_blocks, page_size, cfg.head_dim // pack)
+        sshape = (cfg.num_kv_heads, num_blocks, page_size, 1)
+        return {
+            "k_pages": jnp.zeros(pshape, jnp.int8),
+            "v_pages": jnp.zeros(pshape, jnp.int8),
+            "k_scale_pages": jnp.zeros(sshape, cfg.dtype),
+            "v_scale_pages": jnp.zeros(sshape, cfg.dtype),
+        }
     shape = (cfg.num_kv_heads, num_blocks, page_size, cfg.head_dim)
     return {
         "k_pages": jnp.zeros(shape, cfg.dtype),
@@ -216,6 +240,26 @@ def attention_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables,
     logical = posb // page_size
     offset = posb % page_size
     phys = jnp.take_along_axis(tables, logical[:, None], axis=1)[:, 0]
+    backend = cfg.kernel_backend if cfg.kernel_backend != "auto" else None
+    if cfg.kv_dtype is not None:
+        # Quantize the appended row per (head, slot) and scatter packed bytes
+        # plus the per-token scale; attention dequantizes inline at gather.
+        sdt = cache["k_scale_pages"].dtype
+        kq, ks = ref.quantize_rows(k[:, 0].transpose(1, 0, 2), cfg.kv_dtype)
+        vq, vs = ref.quantize_rows(v[:, 0].transpose(1, 0, 2), cfg.kv_dtype)
+        knew = cache["k_pages"].at[:, phys, offset].set(kq)
+        vnew = cache["v_pages"].at[:, phys, offset].set(vq)
+        ksnew = cache["k_scale_pages"].at[:, phys, offset].set(ks.astype(sdt))
+        vsnew = cache["v_scale_pages"].at[:, phys, offset].set(vs.astype(sdt))
+        out = ops.paged_attention_quant(
+            q[:, 0], knew, vnew, ksnew, vsnew, tables, posb + 1,
+            fmt=cfg.kv_dtype, window=window,
+            logit_soft_cap=cfg.logit_soft_cap, backend=backend,
+        )
+        out = out.reshape(b, 1, h * hd)
+        proj = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
+        return proj, {"k_pages": knew, "v_pages": vnew,
+                      "k_scale_pages": ksnew, "v_scale_pages": vsnew}
     # (b, 1, hkv, hd) -> (hkv, b, hd) scatter rows into their pages
     kdt = cache["k_pages"].dtype
     knew = cache["k_pages"].at[:, phys, offset].set(
@@ -226,8 +270,7 @@ def attention_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables,
     )
     out = ops.paged_attention(
         q[:, 0], knew, vnew, tables, posb + 1, window=window,
-        logit_soft_cap=cfg.logit_soft_cap,
-        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+        logit_soft_cap=cfg.logit_soft_cap, backend=backend,
     )
     out = out.reshape(b, 1, h * hd)
     proj = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
@@ -252,12 +295,24 @@ def attention_prefill_paged(params, x, cfg: ModelConfig, cache, pos, tables,
     posmat = posb[:, None] + jnp.arange(c, dtype=jnp.int32)
     q = apply_rope(q, posmat, cfg.rope_theta, rope_fraction)
     k = apply_rope(k, posmat, cfg.rope_theta, rope_fraction)
+    backend = cfg.kernel_backend if cfg.kernel_backend != "auto" else None
+    if cfg.kv_dtype is not None:
+        out, kp, vp, ksp, vsp = ops.prefill_attention_quant(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), cache["k_pages"], cache["v_pages"],
+            cache["k_scale_pages"], cache["v_scale_pages"],
+            tables, posb, jnp.asarray(lens, jnp.int32), fmt=cfg.kv_dtype,
+            window=window, logit_soft_cap=cfg.logit_soft_cap, backend=backend,
+        )
+        out = out.transpose(0, 2, 1, 3).reshape(b, c, h * hd)
+        proj = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
+        return proj, {"k_pages": kp, "v_pages": vp,
+                      "k_scale_pages": ksp, "v_scale_pages": vsp}
     out, kp, vp = ops.prefill_attention(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
         v.transpose(0, 2, 1, 3), cache["k_pages"], cache["v_pages"],
         tables, posb, jnp.asarray(lens, jnp.int32), window=window,
-        logit_soft_cap=cfg.logit_soft_cap,
-        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+        logit_soft_cap=cfg.logit_soft_cap, backend=backend,
     )
     out = out.transpose(0, 2, 1, 3).reshape(b, c, h * hd)
     proj = jnp.einsum("bse,ed->bsd", out.astype(x.dtype), params["wo"])
@@ -402,6 +457,7 @@ def mla_full(params, x, cfg: ModelConfig, positions):
 
 
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int):
+    _require_fp_cache(cfg, "contiguous latent")
     m = cfg.mla
     return {
         "c_kv": jnp.zeros((batch, max_len, 1, m.kv_lora_rank), cfg.dtype),
@@ -414,8 +470,21 @@ def init_mla_paged_cache(cfg: ModelConfig, num_blocks: int, page_size: int):
     head, so pages carry no head axis — ``(num_blocks, page_size, rank)``
     plus the rope part.  The per-token footprint is ``rank + rope_dim``
     instead of ``2 * heads * head_dim``: latent paging keeps MLA's KV
-    compression through the block pool."""
+    compression through the block pool.
+
+    With ``cfg.kv_dtype`` set the latent and rope pools store packed int8
+    plus per-row scale pools, same contract as :func:`init_paged_kv_cache`."""
     m = cfg.mla
+    if cfg.kv_dtype is not None:
+        pack = ref.KV_PACK[cfg.kv_dtype]
+        return {
+            "ckv_pages": jnp.zeros(
+                (num_blocks, page_size, m.kv_lora_rank // pack), jnp.int8),
+            "kpe_pages": jnp.zeros(
+                (num_blocks, page_size, m.qk_rope_head_dim // pack), jnp.int8),
+            "ckv_scale_pages": jnp.zeros((num_blocks, page_size, 1), cfg.dtype),
+            "kpe_scale_pages": jnp.zeros((num_blocks, page_size, 1), cfg.dtype),
+        }
     return {
         "ckv_pages": jnp.zeros((num_blocks, page_size, m.kv_lora_rank), cfg.dtype),
         "kpe_pages": jnp.zeros((num_blocks, page_size, m.qk_rope_head_dim), cfg.dtype),
@@ -507,16 +576,34 @@ def mla_decode_paged(params, x, cfg: ModelConfig, cache, pos, tables,
     logical = posb // page_size
     offset = posb % page_size
     phys = jnp.take_along_axis(tables, logical[:, None], axis=1)[:, 0]
+    q_lat = _mla_absorbed_q(params, q_nope, cfg)
+    sm = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    backend = cfg.kernel_backend if cfg.kernel_backend != "auto" else None
+    if cfg.kv_dtype is not None:
+        sdt = cache["ckv_scale_pages"].dtype
+        cq, cs = ref.quantize_rows(c_kv, cfg.kv_dtype)
+        pq, ps = ref.quantize_rows(k_pe[:, 0], cfg.kv_dtype)
+        ckv_pages = cache["ckv_pages"].at[phys, offset].set(cq)
+        kpe_pages = cache["kpe_pages"].at[phys, offset].set(pq)
+        ckv_scales = cache["ckv_scale_pages"].at[phys, offset].set(cs.astype(sdt))
+        kpe_scales = cache["kpe_scale_pages"].at[phys, offset].set(ps.astype(sdt))
+        out_lat = ops.mla_paged_quant(
+            q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), ckv_pages,
+            kpe_pages, ckv_scales, kpe_scales, tables, posb + 1,
+            fmt=cfg.kv_dtype, sm_scale=sm, window=window,
+            logit_soft_cap=cfg.logit_soft_cap, backend=backend,
+        )
+        proj = _mla_out_proj(params, out_lat, x.dtype, cfg)[:, None]
+        return proj, {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages,
+                      "ckv_scale_pages": ckv_scales,
+                      "kpe_scale_pages": kpe_scales}
     cdt = cache["ckv_pages"].dtype
     ckv_pages = cache["ckv_pages"].at[phys, offset].set(c_kv.astype(cdt))
     kpe_pages = cache["kpe_pages"].at[phys, offset].set(k_pe[:, 0].astype(cdt))
-    q_lat = _mla_absorbed_q(params, q_nope, cfg)
-    sm = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     out_lat = ops.mla_paged(
         q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), ckv_pages, kpe_pages,
         tables, posb + 1, sm_scale=sm, window=window,
-        logit_soft_cap=cfg.logit_soft_cap,
-        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+        logit_soft_cap=cfg.logit_soft_cap, backend=backend,
     )
     proj = _mla_out_proj(params, out_lat, x.dtype, cfg)[:, None]
     return proj, {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages}
@@ -557,12 +644,27 @@ def mla_prefill_paged(params, x, cfg: ModelConfig, cache, pos, tables, lens,
     posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     posmat = posb[:, None] + jnp.arange(c, dtype=jnp.int32)
     q_lat, q_pe, c_kv, k_pe, sm = _mla_prefill_qkv(params, x, cfg, posmat)
+    backend = cfg.kernel_backend if cfg.kernel_backend != "auto" else None
+    if cfg.kv_dtype is not None:
+        out_lat, ckv_pages, kpe_pages, ckv_scales, kpe_scales = (
+            ops.mla_prefill_quant(
+                q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), c_kv, k_pe,
+                cache["ckv_pages"], cache["kpe_pages"],
+                cache["ckv_scale_pages"], cache["kpe_scale_pages"],
+                tables, posb, jnp.asarray(lens, jnp.int32), fmt=cfg.kv_dtype,
+                sm_scale=sm, window=window,
+                logit_soft_cap=cfg.logit_soft_cap, backend=backend,
+            )
+        )
+        proj = _mla_out_proj(params, out_lat.transpose(0, 2, 1, 3), x.dtype, cfg)
+        return proj, {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages,
+                      "ckv_scale_pages": ckv_scales,
+                      "kpe_scale_pages": kpe_scales}
     out_lat, ckv_pages, kpe_pages = ops.mla_prefill(
         q_lat.astype(cfg.dtype), q_pe.astype(cfg.dtype), c_kv, k_pe,
         cache["ckv_pages"], cache["kpe_pages"], tables, posb,
         jnp.asarray(lens, jnp.int32), sm_scale=sm, window=window,
-        logit_soft_cap=cfg.logit_soft_cap,
-        backend=cfg.kernel_backend if cfg.kernel_backend != "auto" else None,
+        logit_soft_cap=cfg.logit_soft_cap, backend=backend,
     )
     proj = _mla_out_proj(params, out_lat.transpose(0, 2, 1, 3), x.dtype, cfg)
     return proj, {"ckv_pages": ckv_pages, "kpe_pages": kpe_pages}

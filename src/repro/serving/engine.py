@@ -256,6 +256,12 @@ class ServeConfig:
     # parity with the contiguous footprint.  Size it below that to actually
     # oversubscribe memory (that's the point of paging).
     num_blocks: Optional[int] = None
+    # KV storage format for the page pools: None = model dtype; "int8"/"int4"
+    # = packed per-token quantization with per-row scales (paged mode only).
+    # Overrides ModelConfig.kv_dtype for this engine; the attention kernels
+    # dequantize inline at gather, so quality degrades gracefully while
+    # per-page bytes shrink ~2-4x (see BlockPool.page_bytes).
+    kv_dtype: Optional[str] = None
     # -- prefill fast path ------------------------------------------------
     prefill: str = "chunked"  # "chunked" | "replay"
     # prompt tokens per chunk-wide forward pass; clamped at engine init to
@@ -318,6 +324,11 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        if serve_cfg.kv_dtype is not None and cfg.kv_dtype != serve_cfg.kv_dtype:
+            # the storage format is a property of the cache pytree the step
+            # functions trace over, so it lives on the model config (and so
+            # inside the jit-cache keys) — the engine just forwards it
+            cfg = dataclasses.replace(cfg, kv_dtype=serve_cfg.kv_dtype)
         self.cfg = cfg
         self.params = params
         self.scfg = serve_cfg
@@ -325,6 +336,10 @@ class ServingEngine:
         mode = serve_cfg.cache
         if mode not in ("paged", "contiguous"):
             raise ValueError(f"unknown cache mode {mode!r}")
+        if cfg.kv_dtype is not None and mode != "paged":
+            raise ValueError(
+                f"kv_dtype={cfg.kv_dtype!r} requires cache='paged'"
+            )
         # no silent downgrades: every attention family pages (GQA/MQA
         # through KV pages, MLA through latent pages); an arch with no
         # attention KV state fails loudly inside lm.init_cache instead of
@@ -338,12 +353,16 @@ class ServingEngine:
             # physical page 0 is reserved (padding/garbage page), so the
             # device pool holds nb + 1 pages and the allocator hands out
             # ids 1..nb.
-            self.pool = BlockPool(nb, ps, base=1)
-            self.tables = SlotTables(self.pool, b, self.max_pages)
             self.cache = lm.init_cache(
                 cfg, b, serve_cfg.max_len, layout="paged", page_size=ps,
                 num_blocks=nb + 1,
             )
+            # bytes one physical page costs across every layer's pool leaves
+            # (packed data + scale columns for quantized caches) — the unit
+            # byte-budget sizing works in (paged_cache.blocks_for_bytes)
+            page_bytes = self.cache.kv_bytes() // (nb + 1)
+            self.pool = BlockPool(nb, ps, base=1, page_bytes=page_bytes)
+            self.tables = SlotTables(self.pool, b, self.max_pages)
         else:
             self.pool = None
             self.tables = None

@@ -62,6 +62,18 @@ def blocks_for(num_tokens: int, page_size: int) -> int:
     return -(-num_tokens // page_size)
 
 
+def blocks_for_bytes(budget_bytes: int, page_bytes: int) -> int:
+    """Blocks a byte budget affords at ``page_bytes`` per block (floor).
+
+    This is how a quantized cache converts its smaller per-page footprint
+    into *capacity*: at a fixed byte budget, fewer bytes per page means more
+    pages in the pool, which means later preemption under pressure.  Pair
+    with :attr:`BlockPool.page_bytes` for accounting."""
+    if page_bytes <= 0:
+        raise ValueError("page_bytes must be positive")
+    return int(budget_bytes) // int(page_bytes)
+
+
 class BlockPool:
     """Fixed pool of refcounted KV blocks with owner tracking and peak
     accounting.
@@ -78,12 +90,17 @@ class BlockPool:
     inactive slots harmlessly write to.
     """
 
-    def __init__(self, num_blocks: int, page_size: int, base: int = 0):
+    def __init__(self, num_blocks: int, page_size: int, base: int = 0,
+                 page_bytes: Optional[int] = None):
         if num_blocks <= 0 or page_size <= 0:
             raise ValueError("num_blocks and page_size must be positive")
         self.num_blocks = int(num_blocks)
         self.page_size = int(page_size)
         self.base = int(base)
+        # bytes one physical page occupies across every pool leaf (packed
+        # data + scales for quantized caches); purely advisory accounting
+        # used by byte-budget sizing (``blocks_for_bytes``) and benchmarks
+        self.page_bytes = None if page_bytes is None else int(page_bytes)
         # stack of free ids; reversed so .pop() hands out ascending ids first
         self._free: List[int] = list(
             range(base + self.num_blocks - 1, base - 1, -1)

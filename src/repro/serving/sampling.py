@@ -24,14 +24,20 @@ def sample(
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature
+    vocab = logits.shape[-1]
     if top_k is not None:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        # top_k > V would make the negative index wrap around to a high
+        # logit and silently truncate the distribution; >= V keeps it all.
+        k = min(int(top_k), vocab)
+        kth = jnp.sort(logits, axis=-1)[:, -k][:, None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     if top_p is not None:
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
         probs = jax.nn.softmax(sorted_logits, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
-        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+        # top_p >= 1.0 makes every cum < top_p, pushing the index to V;
+        # clamp instead of relying on gather's silent index clipping.
+        cutoff_idx = jnp.minimum(jnp.sum(cum < top_p, axis=-1), vocab - 1)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -177,6 +177,185 @@ class TestDequantMatmul:
         expect = np.asarray(ref.dequant_matmul(a, bp, "int4", sc, bk)).T
         np.testing.assert_allclose(out, expect, atol=2e-3)
 
+    def test_odd_k_blocks_accepted(self, rng):
+        # K=48, block_K=16, pack=2: three K-blocks.  The old guard rejected
+        # K % (block_K * pack) != 0 even though block_K already divides K.
+        M, N, K = 16, 16, 48
+        prog = dequant_matmul_program(
+            M, N, K, "int4", block_M=16, block_N=16, block_K=16
+        )
+        kern = tl_compile(prog, Schedule(interpret=True))
+        a = rng.standard_normal((M, K), dtype=np.float32)
+        bp = rng.integers(-128, 128, size=(N, K // 2)).astype(np.int8)
+        out = np.asarray(kern(a, bp))
+        expect = np.asarray(ref.dequant_matmul(a, bp, "int4")).T
+        np.testing.assert_allclose(out, expect, atol=2e-2)
+
+    def test_block_k_must_cover_pack(self):
+        # The real packing constraint: a block must hold whole packed bytes.
+        with pytest.raises(ValueError, match="pack factor"):
+            dequant_matmul_program(16, 16, 32, "int2", block_M=16, block_N=16,
+                                   block_K=2)
+
+    def test_k_must_divide_blocks(self):
+        with pytest.raises(ValueError, match="divide problem shape"):
+            dequant_matmul_program(16, 16, 40, "int4", block_M=16, block_N=16,
+                                   block_K=16)
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV cache (dequant KV source): ops-level pallas vs xla, which
+# pins both the DequantStage kernels against the ref oracles and the
+# in-out page/scale ordering of the prefill writes.
+# ---------------------------------------------------------------------------
+
+
+class TestQuantKV:
+    @pytest.mark.parametrize("fmt", ["int8", "int4"])
+    def test_paged_decode(self, rng, fmt):
+        from repro.kernels.ref import KV_PACK
+
+        slots, heads, hkv, d, ps, mp, np_ = 3, 4, 2, 16, 16, 2, 8
+        pack = KV_PACK[fmt]
+        tables = rng.permutation(np_)[: slots * mp].reshape(slots, mp).astype(np.int32)
+        lens = rng.integers(1, mp * ps + 1, size=slots).astype(np.int32)
+        q = rng.standard_normal((slots, heads, d), dtype=np.float32)
+        kf = rng.standard_normal((hkv, np_, ps, d), dtype=np.float32)
+        vf = rng.standard_normal((hkv, np_, ps, d), dtype=np.float32)
+        kp, ks = ref.quantize_rows(kf, fmt)
+        vp, vs = ref.quantize_rows(vf, fmt)
+        x = ops.paged_attention_quant(q, kp, vp, ks, vs, tables, lens,
+                                      fmt=fmt, backend="xla")
+        p = ops.paged_attention_quant(q, kp, vp, ks, vs, tables, lens,
+                                      fmt=fmt, backend="pallas")
+        np.testing.assert_allclose(np.asarray(p), np.asarray(x), atol=2e-3)
+        # and the quantized cache stays close to the fp attention
+        full = np.asarray(
+            ref.paged_attention(q, kf, vf, tables, lens)
+        )
+        atol = 0.05 if fmt == "int8" else 0.35
+        np.testing.assert_allclose(np.asarray(x), full, atol=atol)
+
+    @staticmethod
+    def _live_rows(pool, tables, starts, lens, page_size):
+        """Pool rows at live token positions (page axis at ndim-3).
+
+        Dead-tail rows of a partially-live page and the reserved garbage
+        page 0 legitimately differ between the kernel path (writes whole
+        pages) and the XLA masked scatter (redirects dead rows to page 0)
+        — same split as the fp twins — so equivalence is asserted on what
+        the serving engine can ever read back: live positions only.
+        """
+        pool = np.moveaxis(np.asarray(pool), pool.ndim - 3, 0)
+        rows = []
+        for z in range(tables.shape[0]):
+            for pos in range(int(starts[z]), int(starts[z] + lens[z])):
+                rows.append(pool[tables[z, pos // page_size], ..., pos % page_size, :])
+        return np.stack(rows)
+
+    @pytest.mark.parametrize("fmt", ["int8", "int4"])
+    def test_prefill(self, rng, fmt):
+        slots, heads, hkv, d, chunk, ps, mp, np_ = 2, 4, 2, 16, 32, 16, 4, 9
+        cpp = chunk // ps
+        # page 0 is the engine's reserved garbage page — never owned
+        tables = (rng.permutation(np_ - 1)[: slots * mp] + 1).reshape(
+            slots, mp
+        ).astype(np.int32)
+        starts = (rng.integers(0, mp - cpp + 1, size=slots) * ps).astype(np.int32)
+        lens = rng.integers(chunk - ps + 1, chunk + 1, size=slots).astype(np.int32)
+        q = rng.standard_normal((slots, heads, chunk, d), dtype=np.float32)
+        k_new = rng.standard_normal((slots, hkv, chunk, d), dtype=np.float32)
+        v_new = rng.standard_normal((slots, hkv, chunk, d), dtype=np.float32)
+        kprior = rng.standard_normal((hkv, np_, ps, d), dtype=np.float32)
+        vprior = rng.standard_normal((hkv, np_, ps, d), dtype=np.float32)
+        kp, ks = ref.quantize_rows(kprior, fmt)
+        vp, vs = ref.quantize_rows(vprior, fmt)
+        outs = {}
+        for be in ("xla", "pallas"):
+            outs[be] = ops.prefill_attention_quant(
+                q, k_new, v_new, kp, vp, ks, vs, tables, starts, lens,
+                fmt=fmt, backend=be,
+            )
+        np.testing.assert_allclose(
+            np.asarray(outs["pallas"][0]), np.asarray(outs["xla"][0]), atol=2e-3
+        )
+        ends = starts + lens
+        for i in range(1, 5):
+            a = self._live_rows(outs["xla"][i], tables, starts * 0, ends, ps)
+            b = self._live_rows(outs["pallas"][i], tables, starts * 0, ends, ps)
+            np.testing.assert_allclose(
+                b.astype(np.float32), a.astype(np.float32), atol=1e-6
+            )
+
+    @pytest.mark.parametrize("fmt", ["int8", "int4"])
+    def test_mla_paged_decode(self, rng, fmt):
+        slots, heads, r, pe, ps, mp, np_ = 3, 4, 16, 8, 16, 2, 8
+        tables = (rng.permutation(np_ - 1)[: slots * mp] + 1).reshape(
+            slots, mp
+        ).astype(np.int32)
+        lens = rng.integers(1, mp * ps + 1, size=slots).astype(np.int32)
+        q_lat = rng.standard_normal((slots, heads, r), dtype=np.float32)
+        q_pe = rng.standard_normal((slots, heads, pe), dtype=np.float32)
+        ckvf = rng.standard_normal((np_, ps, r), dtype=np.float32)
+        kpef = rng.standard_normal((np_, ps, pe), dtype=np.float32)
+        cp, cs = ref.quantize_rows(ckvf, fmt)
+        pp, pss = ref.quantize_rows(kpef, fmt)
+        x = ops.mla_paged_quant(q_lat, q_pe, cp, pp, cs, pss, tables, lens,
+                                fmt=fmt, backend="xla", block_h=2)
+        p = ops.mla_paged_quant(q_lat, q_pe, cp, pp, cs, pss, tables, lens,
+                                fmt=fmt, backend="pallas", block_h=2)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(x), atol=2e-3)
+
+    @pytest.mark.parametrize("fmt", ["int8", "int4"])
+    def test_mla_prefill(self, rng, fmt):
+        slots, heads, r, pe, chunk, ps, mp, np_ = 2, 2, 16, 8, 32, 16, 4, 10
+        cpp = chunk // ps
+        tables = (rng.permutation(np_ - 1)[: slots * mp] + 1).reshape(
+            slots, mp
+        ).astype(np.int32)
+        starts = (rng.integers(0, mp - cpp + 1, size=slots) * ps).astype(np.int32)
+        lens = rng.integers(chunk - ps + 1, chunk + 1, size=slots).astype(np.int32)
+        q_lat = rng.standard_normal((slots, heads, chunk, r), dtype=np.float32)
+        q_pe = rng.standard_normal((slots, heads, chunk, pe), dtype=np.float32)
+        ckv_new = rng.standard_normal((slots, chunk, r), dtype=np.float32)
+        kpe_new = rng.standard_normal((slots, chunk, pe), dtype=np.float32)
+        ckvf = rng.standard_normal((np_, ps, r), dtype=np.float32)
+        kpef = rng.standard_normal((np_, ps, pe), dtype=np.float32)
+        cp, cs = ref.quantize_rows(ckvf, fmt)
+        pp, pss = ref.quantize_rows(kpef, fmt)
+        outs = {}
+        for be in ("xla", "pallas"):
+            outs[be] = ops.mla_prefill_quant(
+                q_lat, q_pe, ckv_new, kpe_new, cp, pp, cs, pss, tables,
+                starts, lens, fmt=fmt, backend=be,
+            )
+        np.testing.assert_allclose(
+            np.asarray(outs["pallas"][0]), np.asarray(outs["xla"][0]), atol=2e-3
+        )
+        ends = starts + lens
+        for i in range(1, 5):
+            a = self._live_rows(outs["xla"][i], tables, starts * 0, ends, ps)
+            b = self._live_rows(outs["pallas"][i], tables, starts * 0, ends, ps)
+            np.testing.assert_allclose(
+                b.astype(np.float32), a.astype(np.float32), atol=1e-6
+            )
+
+    @pytest.mark.parametrize("fmt", ["int8", "int4"])
+    def test_quantize_roundtrip(self, rng, fmt):
+        x = rng.standard_normal((5, 7, 16), dtype=np.float32)
+        packed, scales = ref.quantize_rows(x, fmt)
+        back = np.asarray(ref.dequantize_rows(packed, scales, fmt))
+        qmax = ref.KV_QMAX[fmt]
+        # symmetric per-row quantization: error bounded by scale/2 per entry
+        bound = np.asarray(scales) / 2 + 1e-7
+        assert np.all(np.abs(back - x) <= bound)
+        # packed size really shrinks by the pack factor
+        assert packed.shape[-1] == x.shape[-1] // ref.KV_PACK[fmt]
+        # all-zero rows survive exactly
+        z = np.zeros((2, 16), np.float32)
+        zp, zs = ref.quantize_rows(z, fmt)
+        np.testing.assert_array_equal(np.asarray(ref.dequantize_rows(zp, zs, fmt)), z)
+
 
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD chunk kernels

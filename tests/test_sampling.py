@@ -1,0 +1,76 @@
+"""Regression tests for the top-k / top-p edge cases in serving.sampling.
+
+top_k > V used to wrap the negative sort index (``sorted[:, -top_k]``)
+around to a *high* logit, silently truncating the distribution; top_p >=
+1.0 pushed the cumulative cutoff index to V and leaned on gather's silent
+index clamping.  Both are now clamped explicitly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import sampling
+
+
+def _logits(rng, b=4, v=8):
+    return jnp.asarray(rng.normal(size=(b, v)).astype(np.float32))
+
+
+class TestTopKClamp:
+    @pytest.mark.parametrize("top_k", [8, 9, 100])  # V and > V
+    def test_top_k_at_or_above_vocab_keeps_full_distribution(self, rng, top_k):
+        logits = _logits(rng, v=8)
+        key = jax.random.PRNGKey(0)
+        got = sampling.sample(logits, key, temperature=1.0, top_k=top_k)
+        want = sampling.sample(logits, key, temperature=1.0, top_k=None)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_top_k_one_is_greedy(self, rng):
+        logits = _logits(rng)
+        key = jax.random.PRNGKey(1)
+        got = sampling.sample(logits, key, temperature=1.0, top_k=1)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(jnp.argmax(logits, axis=-1))
+        )
+
+    def test_top_k_above_vocab_no_wraparound_truncation(self, rng):
+        # Pre-fix, top_k = V + 1 indexed sorted[:, -V-1] == sorted[:, -1]
+        # (the max), masking everything below the argmax: categorical then
+        # always returned the argmax.  With a flat-ish distribution and
+        # many draws, a correct sampler must produce non-argmax tokens.
+        logits = jnp.zeros((64, 8), jnp.float32)
+        key = jax.random.PRNGKey(2)
+        got = np.asarray(sampling.sample(logits, key, temperature=1.0, top_k=9))
+        assert len(np.unique(got)) > 1
+
+
+class TestTopPClamp:
+    def test_top_p_one_keeps_full_distribution(self, rng):
+        logits = _logits(rng)
+        key = jax.random.PRNGKey(3)
+        got = sampling.sample(logits, key, temperature=1.0, top_p=1.0)
+        want = sampling.sample(logits, key, temperature=1.0, top_p=None)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_top_p_one_cutoff_is_min_logit(self, rng):
+        # At top_p = 1.0 the clamped cutoff index is V - 1: the cutoff is
+        # the smallest logit and nothing is masked.  Verify via the fused
+        # step too (jit'd path used by the engine).
+        logits = _logits(rng)
+        key = jax.random.PRNGKey(4)
+        step = jax.jit(
+            lambda lg, k: sampling.sample_step(lg, k, temperature=0.7, top_p=1.0)
+        )
+        tok, new_key = step(logits, key)
+        assert tok.shape == (logits.shape[0],)
+        assert not np.array_equal(np.asarray(new_key), np.asarray(key))
+
+    def test_top_p_small_masks_tail(self, rng):
+        # A tiny top_p keeps only the argmax head.
+        logits = jnp.asarray(
+            np.array([[10.0, 0.0, 0.0, 0.0]], np.float32).repeat(16, axis=0)
+        )
+        key = jax.random.PRNGKey(5)
+        got = np.asarray(sampling.sample(logits, key, temperature=1.0, top_p=0.1))
+        np.testing.assert_array_equal(got, np.zeros(16, np.int32))
