@@ -59,6 +59,16 @@ engine plus the teacher-forced max logit error), and a pool-pressure run
 where fp and int8 pools are sized to the *same byte budget* — the
 quantized pool holds ~3x the pages, so preemptions drop at fixed memory.
 
+Workload 8 — *chaos + crash-safe restore* (ISSUE-8): the fault-tolerance
+contract as numbers.  Phase A replays a shared-prefix workload fault-free,
+then again under an injected fault schedule (pool exhaustion, failed
+grow-ahead grants, one poisoned logits row) plus a cancel and an expiring
+deadline, with the invariant auditor on every tick — asserting every
+unaffected request finishes byte-identical and shutdown leaves zero
+allocated pages.  Phase B snapshots the warm prefix cache, restores it
+into a fresh engine, and checks the restored warm TTFT matches the
+pre-restart warm hit instead of paying the cold prefill.
+
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json]
 """
 from __future__ import annotations
@@ -640,6 +650,124 @@ def _quant_workload(cfg, params, smoke: bool):
     return rows
 
 
+def _chaos_workload(cfg, params, smoke: bool):
+    """Workload 8 — chaos + crash-safe restore (ISSUE-8)."""
+    from repro.serving import Fault, FaultInjector
+    from repro.serving.faults import audit_engine
+
+    if smoke:
+        n_req, max_new = 6, 5
+    else:
+        n_req, max_new = 9, 7
+    rng = np.random.default_rng(8)
+    shared = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab_size, size=int(t)).tolist()
+               for t in rng.integers(2, 7, size=n_req)]
+    base = dict(slots=2, max_len=48, max_new_tokens=max_new, page_size=4,
+                num_blocks=14, sync_every=4)
+
+    def drive(label, injector=None, chaos=False, **kw):
+        eng = ServingEngine(cfg, params, ServeConfig(**dict(base, **kw)),
+                            injector=injector)
+        reqs = [eng.submit(p) for p in prompts]
+        if chaos:
+            reqs[2].cancel()  # lifecycle exits ride along with the faults
+            reqs[-1].deadline_ticks = 2  # expires while queued (slots=2)
+        t0 = time.time()
+        eng.run(max_steps=10_000)
+        eng.drain()
+        eng.shutdown()
+        dt = time.time() - t0
+        toks = sum(len(r.output) for r in reqs)
+        return eng, reqs, {
+            "mode": label,
+            "tok_per_s": round(toks / max(dt, 1e-9), 2),
+            "steps": eng.steps_run,
+            "n_req": n_req,
+            "preemptions": eng.preemptions,
+            "poisoned_rows": eng.poisoned_rows,
+            "audits_run": eng.audits_run,
+            "leaked_pages": eng.pool.in_use,  # after shutdown: must be 0
+            "outputs": [r.output for r in reqs],
+        }
+
+    # phase A: fault-free reference, then the same workload under fire
+    _, ref_reqs, ref_row = drive("chaos_faultfree")
+    schedule = [
+        Fault("pool_alloc", tick=1), Fault("poison", tick=3, slot=0),
+        Fault("pool_alloc", tick=5), Fault("grant", tick=6),
+        Fault("pool_alloc", tick=8),
+    ]
+    eng, reqs, row = drive("chaos_injected", injector=FaultInjector(schedule),
+                           chaos=True, audit=True)
+    completed = [r for r in reqs if r.status == "completed"]
+    identical = sum(r.output == ref_reqs[reqs.index(r)].output
+                    for r in completed)
+    row["completed"] = len(completed)
+    row["affected"] = n_req - len(completed)
+    row["unaffected_identical"] = round(identical / max(len(completed), 1), 4)
+    row["faults_fired"] = sum(eng.injector.fired.values())
+    if identical != len(completed):
+        raise AssertionError(
+            f"{len(completed) - identical} unaffected requests diverged "
+            "under injected faults")
+    if row["leaked_pages"] != 0:
+        raise AssertionError(f"shutdown leaked {row['leaked_pages']} pages")
+    if not any(r.status == "cancelled" for r in reqs):
+        raise AssertionError("the cancelled request did not exit CANCELLED")
+    if not any(r.status == "timed_out" for r in reqs):
+        raise AssertionError("the deadline request did not time out")
+
+    # phase B: snapshot the warm prefix index, restore into a fresh engine
+    snap_kw = dict(slots=1, max_len=48, max_new_tokens=3, page_size=4,
+                   prefill_chunk=4, token_budget=5)
+    prompt = rng.integers(0, cfg.vocab_size, size=20).tolist()
+    warm_eng = ServingEngine(cfg, params, ServeConfig(**snap_kw))
+    cold = warm_eng.submit(prompt)
+    warm = warm_eng.submit(prompt)
+    warm_eng.run()
+    snap = warm_eng.snapshot()
+    restored_eng = ServingEngine.restore(cfg, params, ServeConfig(**snap_kw),
+                                         snap)
+    audit_engine(restored_eng)
+    restored = restored_eng.submit(prompt)
+    restored_eng.run()
+    if restored.output != cold.output:
+        raise AssertionError("restored engine changed tokens")
+    if restored.ttft_admit_ticks != warm.ttft_admit_ticks:
+        raise AssertionError(
+            f"restored warm TTFT {restored.ttft_admit_ticks} != pre-restart "
+            f"warm {warm.ttft_admit_ticks}")
+    snap_row = {
+        "mode": "snapshot_restore",
+        "tok_per_s": None,
+        "steps": restored_eng.steps_run,
+        "pages_restored": len(snap["nodes"]),
+        "ttft_cold_ticks": cold.ttft_admit_ticks,
+        "ttft_warm_ticks": warm.ttft_admit_ticks,
+        "ttft_restored_ticks": restored.ttft_admit_ticks,
+    }
+    rows = [ref_row, row, snap_row]
+    print(f"# serving: chaos + crash-safe restore ({n_req} reqs x shared "
+          f"prefix, {len(schedule)} injected faults + cancel + deadline, "
+          "audit every tick)")
+    print("mode,tok_per_s,steps,preemptions,poisoned_rows,leaked_pages,"
+          "completed,affected,unaffected_identical,faults_fired")
+    for r in rows[:2]:
+        print(f"{r['mode']},{r['tok_per_s']},{r['steps']},"
+              f"{r['preemptions']},{r['poisoned_rows']},{r['leaked_pages']},"
+              f"{r.get('completed', n_req)},{r.get('affected', 0)},"
+              f"{r.get('unaffected_identical', 1.0)},"
+              f"{r.get('faults_fired', 0)}")
+    print(f"# snapshot/restore: {snap_row['pages_restored']} pages; TTFT "
+          f"cold {snap_row['ttft_cold_ticks']} / warm "
+          f"{snap_row['ttft_warm_ticks']} / restored "
+          f"{snap_row['ttft_restored_ticks']} ticks — restored == warm; "
+          "unaffected outputs byte-identical; shutdown leaked 0 pages")
+    print()
+    return rows
+
+
 def derived_metrics(rows):
     """Cross-row metrics for the BENCH_serving.json trajectory record.
 
@@ -716,6 +844,22 @@ def derived_metrics(rows):
         out["quant_pressure_preemption_drop"] = round(
             (by_mode["kv_fp_pressure"]["preemptions"] + 1)
             / (by_mode["kv_int8_pressure"]["preemptions"] + 1), 2)
+    if "chaos_injected" in by_mode:
+        c = by_mode["chaos_injected"]
+        # fraction of fault-survivor requests byte-identical to the
+        # fault-free run (1.0 = pool/grant faults fully output-preserving)
+        out["chaos_unaffected_byte_identity"] = c["unaffected_identical"]
+        # freed-page guarantee as a bounded ratio: 1.0 = zero pages still
+        # allocated after shutdown (a raw leak count would be lower-is-
+        # better and slip past the regression gate)
+        out["drain_leaked_pages"] = round(
+            1.0 / (1.0 + c["leaked_pages"]), 4)
+    if "snapshot_restore" in by_mode:
+        s = by_mode["snapshot_restore"]
+        # crash-safety payoff: cold prefill ticks over the restored
+        # engine's warm-hit ticks (== the pre-restart warm hit, asserted)
+        out["restore_warm_ttft_speedup"] = round(
+            s["ttft_cold_ticks"] / max(s["ttft_restored_ticks"], 1e-9), 2)
     return out
 
 
@@ -729,6 +873,7 @@ def run(smoke: bool = False):
     rows += _prefix_workload(cfg, params, smoke)
     rows += _mla_decode_workload(smoke)
     rows += _quant_workload(cfg, params, smoke)
+    rows += _chaos_workload(cfg, params, smoke)
     # outputs are asserted above; keep the JSON/return rows lean
     for r in rows:
         r.pop("outputs", None)

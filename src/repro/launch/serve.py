@@ -48,6 +48,14 @@ def main(argv=None):
                          "device-resident jax.lax.scan loop when every "
                          "active slot is generating (scheduler runs at "
                          "sync boundaries only)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the serving invariant auditor after every "
+                         "tick (page conservation, refcounts, radix "
+                         "reachability, slot hygiene); raises AuditError "
+                         "at the tick the books diverge")
+    ap.add_argument("--deadline-ticks", type=int, default=None,
+                    help="per-request deadline in engine ticks; expired "
+                         "requests exit TIMED_OUT with partial output")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -66,12 +74,12 @@ def main(argv=None):
                     num_blocks=args.num_blocks, prefill=args.prefill,
                     prefill_chunk=args.prefill_chunk,
                     token_budget=args.token_budget,
-                    sync_every=args.sync_every),
+                    sync_every=args.sync_every, audit=args.audit),
     )
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
         prompt = rng.integers(0, cfg.vocab_size, size=args.prompt_len).tolist()
-        engine.submit(prompt)
+        engine.submit(prompt, deadline_ticks=args.deadline_ticks)
 
     t0 = time.time()
     done = engine.run()
@@ -91,6 +99,12 @@ def main(argv=None):
     ttfts = [r.ttft_ticks for r in done if r.ttft_ticks is not None]
     if ttfts:
         extra += f", mean TTFT {sum(ttfts)/len(ttfts):.1f} ticks"
+    if args.audit:
+        extra += f", {engine.audits_run} audits clean"
+    not_completed = [r for r in done if r.status != "completed"]
+    if not_completed:
+        extra += f", {len(not_completed)} not completed (" + ", ".join(
+            f"{r.uid}:{r.status}" for r in not_completed[:4]) + ")"
     print(
         f"served {len(done)} requests, {total_tokens} tokens in {dt:.2f}s "
         f"({total_tokens/max(dt,1e-9):.1f} tok/s, {engine.steps_run} engine steps"

@@ -18,6 +18,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import layers as L
 from .config import ModelConfig
@@ -383,8 +384,7 @@ def copy_pages(cache: Cache, src, dst) -> Cache:
     dst = jnp.asarray(dst, jnp.int32)
 
     def visit(path, leaf):
-        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
-        if not any(str(n).endswith("_pages") for n in names):
+        if not _is_pool_leaf(path):
             return leaf
         pool = jnp.moveaxis(leaf, leaf.ndim - 3, 0)
         pool = pool.at[dst].set(pool[src])
@@ -394,6 +394,83 @@ def copy_pages(cache: Cache, src, dst) -> Cache:
     rest = jax.tree_util.tree_map_with_path(visit, cache.rest)
     return Cache(prefix, rest, cache.stacked, cache.max_len, cache.layout,
                  cache.page_size, cache.tables)
+
+
+def _is_pool_leaf(path) -> bool:
+    """A cache leaf is a physical page pool iff some dict key on its path
+    ends in ``_pages`` (GQA's k/v pools, MLA's latent/rope pools, and the
+    quantized variants' ``*_scale_pages``) — the same contract
+    :func:`copy_pages` keys on, with the page axis at ``ndim - 3``."""
+    return any(
+        str(p.key).endswith("_pages")
+        for p in path if isinstance(p, jax.tree_util.DictKey)
+    )
+
+
+def gather_pages(cache: Cache, pages) -> list:
+    """Contents of physical ``pages`` from every pool leaf, page axis
+    leading — ``(len(pages), *per_page_shape)`` numpy arrays in the
+    cache's flatten order (prefix leaves then rest), matching
+    :func:`scatter_pages` and :func:`page_leaf_shapes`.  This is the
+    serializable payload of the serving engine's ``snapshot()``."""
+    if cache.layout != "paged":
+        raise ValueError("gather_pages needs a paged cache")
+    idx = jnp.asarray(list(pages), jnp.int32)
+    out: list = []
+
+    def visit(path, leaf):
+        if _is_pool_leaf(path):
+            pool = jnp.moveaxis(leaf, leaf.ndim - 3, 0)
+            out.append(np.asarray(pool[idx]))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, cache.prefix)
+    jax.tree_util.tree_map_with_path(visit, cache.rest)
+    return out
+
+
+def scatter_pages(cache: Cache, pages, values) -> Cache:
+    """Inverse of :func:`gather_pages`: write ``values`` (one array per
+    pool leaf, page axis leading) into physical ``pages`` of every pool
+    leaf.  The engine's snapshot restore path — page *ids* are remapped by
+    the caller, contents land wherever the fresh pool allocated them."""
+    if cache.layout != "paged":
+        raise ValueError("scatter_pages needs a paged cache")
+    idx = jnp.asarray(list(pages), jnp.int32)
+    vals = iter(values)
+
+    def visit(path, leaf):
+        if not _is_pool_leaf(path):
+            return leaf
+        v = jnp.asarray(next(vals)).astype(leaf.dtype)
+        pool = jnp.moveaxis(leaf, leaf.ndim - 3, 0)
+        pool = pool.at[idx].set(v)
+        return jnp.moveaxis(pool, 0, leaf.ndim - 3)
+
+    prefix = jax.tree_util.tree_map_with_path(visit, cache.prefix)
+    rest = jax.tree_util.tree_map_with_path(visit, cache.rest)
+    return Cache(prefix, rest, cache.stacked, cache.max_len, cache.layout,
+                 cache.page_size, cache.tables)
+
+
+def page_leaf_shapes(cache: Cache) -> list:
+    """``(per_page_shape, dtype_name)`` for every pool leaf in gather
+    order — the layout fingerprint snapshot loading validates before
+    scattering foreign page contents into this cache."""
+    if cache.layout != "paged":
+        raise ValueError("page_leaf_shapes needs a paged cache")
+    out: list = []
+
+    def visit(path, leaf):
+        if _is_pool_leaf(path):
+            dims = list(leaf.shape)
+            dims.pop(leaf.ndim - 3)
+            out.append((tuple(dims), str(leaf.dtype)))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, cache.prefix)
+    jax.tree_util.tree_map_with_path(visit, cache.rest)
+    return out
 
 
 def _per_slot(mask, tree_a, tree_b):

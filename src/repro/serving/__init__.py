@@ -1,11 +1,24 @@
-from .engine import Request, ServeConfig, ServingEngine, plan_prefill_chunks
+from .engine import (
+    TERMINAL,
+    Request,
+    ServeConfig,
+    ServingEngine,
+    plan_prefill_chunks,
+)
+from .faults import AuditError, Fault, FaultInjector, audit_engine, random_schedule
 from .sampling import sample, sample_step
 
 __all__ = [
+    "AuditError",
+    "Fault",
+    "FaultInjector",
     "Request",
     "ServeConfig",
     "ServingEngine",
+    "TERMINAL",
+    "audit_engine",
     "plan_prefill_chunks",
+    "random_schedule",
     "sample",
     "sample_step",
 ]

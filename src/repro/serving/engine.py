@@ -77,6 +77,18 @@ The decode hot loop is **device-resident** (``ServeConfig.sync_every``):
   pre-granted grow-ahead pages for the worst-case window, all-or-nothing;
   when the pool is too tight the engine falls back to per-tick stepping
   for that boundary, so scheduling fidelity is never traded for speed.
+
+**Failure model** (DESIGN.md §5.7): every request ends in exactly one
+terminal status (COMPLETED / TIMED_OUT / CANCELLED / FAILED / REJECTED)
+through one exit path (``_terminate``) that releases its pages — requests
+carry ``deadline_ticks``/``max_retries`` declaratively and expose
+``cancel()``; ``drain()``/``shutdown()`` wind the engine down to an empty
+pool.  A :class:`serving.faults.FaultInjector` can force pool exhaustion,
+grant failure or logits poisoning at the real allocation/dispatch sites,
+and ``ServeConfig.audit=True`` re-checks page conservation, refcount
+consistency, radix reachability and slot hygiene after every tick.
+``snapshot()``/``restore()`` persist the radix index plus its page
+contents across engine restarts so warm-prefix TTFT survives a crash.
 """
 from __future__ import annotations
 
@@ -93,6 +105,7 @@ import numpy as np
 from repro.models import lm
 from repro.models.config import ModelConfig
 
+from .faults import FaultInjector, audit_engine
 from .paged_cache import (
     BlockPool,
     PoolExhausted,
@@ -137,15 +150,21 @@ def _cached_fn(key, build):
 
 def _decode_step_fn(cfg: ModelConfig, temperature: float):
     """Fused decode tick: model step + sampling in one jit'd program.
-    Returns ``(tokens, cache, key)`` — logits stay on device."""
+    Returns ``(tokens, bad, cache, key)`` — logits stay on device.
+    ``poison`` is the fault injector's NaN overwrite mask (all-False in
+    normal operation) and ``bad`` flags rows whose logits held no finite
+    value — injected or genuine — so the engine can fail exactly the
+    affected request instead of emitting garbage."""
 
     def build():
         snap = copy.deepcopy(cfg)
 
-        def step(p, c, tok, pos, key, live):
+        def step(p, c, tok, pos, key, live, poison):
             logits, c = lm.decode_step(p, snap, c, tok, pos, live=live)
+            logits = jnp.where(poison[:, None], jnp.nan, logits)
+            bad = ~jnp.any(jnp.isfinite(logits), axis=-1)
             tok, key = sample_step(logits, key, temperature=temperature)
-            return tok, c, key
+            return tok, bad, c, key
 
         return jax.jit(step, donate_argnums=(1,))
 
@@ -157,15 +176,17 @@ def _prefill_step_fn(cfg: ModelConfig, temperature: float):
     is a trace-time shape, so differing ``prefill_chunk`` values simply
     trace separate entries under the same wrapper).  Sampling is fused like
     the decode step: the returned tokens are what a chunk that completes
-    its prompt emits."""
+    its prompt emits.  ``poison``/``bad`` mirror the decode step."""
 
     def build():
         snap = copy.deepcopy(cfg)
 
-        def step(p, c, toks, pos, lens, key):
+        def step(p, c, toks, pos, lens, key, poison):
             logits, c = lm.prefill_step(p, snap, c, toks, pos, lens)
+            logits = jnp.where(poison[:, None], jnp.nan, logits)
+            bad = ~jnp.any(jnp.isfinite(logits), axis=-1)
             tok, key = sample_step(logits, key, temperature=temperature)
-            return tok, c, key
+            return tok, bad, c, key
 
         return jax.jit(step, donate_argnums=(1,))
 
@@ -287,6 +308,64 @@ class ServeConfig:
     # all-or-nothing grow-ahead page grant for the worst-case window, else
     # that boundary falls back to a per-tick step.
     sync_every: int = 1
+    # -- fault tolerance --------------------------------------------------
+    # run the invariant auditor (serving.faults.audit_engine) after every
+    # tick: page conservation, refcount consistency, radix reachability,
+    # no orphaned slots.  O(pool) per tick — chaos/debug machinery.
+    audit: bool = False
+    # base ticks a preemption victim waits before re-admission, doubling
+    # per preemption (capped at 32x).  0 = legacy immediate re-admission.
+    # Under a preemption storm, backoff lets the slots drain instead of
+    # thrashing the same victims through recompute-resume every tick.
+    retry_backoff: int = 0
+
+    def __post_init__(self):
+        # loud at construction, not a shape error three layers down
+        for name in ("slots", "max_len", "max_new_tokens", "page_size",
+                     "prefill_chunk"):
+            v = getattr(self, name)
+            if v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+        if self.num_blocks is not None and self.num_blocks <= 0:
+            raise ValueError(
+                f"num_blocks must be positive, got {self.num_blocks}"
+            )
+        if self.token_budget is not None and self.token_budget < self.slots:
+            raise ValueError(
+                f"token_budget={self.token_budget} < slots={self.slots}: "
+                "a full generation batch could never fit in one tick"
+            )
+        if self.kv_dtype not in (None, "int8", "int4"):
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r} "
+                "(expected None, 'int8' or 'int4')"
+            )
+        if self.cache not in ("paged", "contiguous"):
+            raise ValueError(f"unknown cache mode {self.cache!r}")
+        if self.prefill not in ("chunked", "replay"):
+            raise ValueError(f"unknown prefill mode {self.prefill!r}")
+        if self.retry_backoff < 0:
+            raise ValueError(
+                f"retry_backoff must be >= 0, got {self.retry_backoff}"
+            )
+
+
+# Request lifecycle: QUEUED <-> RUNNING (preemption re-queues), ending in
+# exactly one terminal status.  Reaching *any* terminal status releases
+# every block the request held — the freed-page guarantee lives in the
+# engine's single exit path (``_terminate``) and is checked live by the
+# auditor (serving.faults).
+QUEUED = "queued"
+RUNNING = "running"
+COMPLETED = "completed"  # EOS / token limit reached
+TIMED_OUT = "timed_out"  # deadline_ticks expired before completion
+CANCELLED = "cancelled"  # cancel() honored, or engine shutdown
+FAILED = "failed"  # poisoned logits, retry budget, or outgrew the pool
+REJECTED = "rejected"  # could never be served (admission fail-fast)
+TERMINAL = (COMPLETED, TIMED_OUT, CANCELLED, FAILED, REJECTED)
+
+# snapshot()/restore() wire format version (DESIGN.md §5.7)
+SNAPSHOT_FORMAT = 1
 
 
 @dataclasses.dataclass
@@ -295,15 +374,31 @@ class Request:
     prompt: List[int]
     max_new_tokens: Optional[int] = None
     priority: int = 0  # higher survives preemption longer
+    # ticks from submission before the request times out wherever it is
+    # (queued or mid-generation); None = no deadline.  Partial output is
+    # preserved on the request when the deadline fires.
+    deadline_ticks: Optional[int] = None
+    # preemption re-admissions before the request fails instead of
+    # retrying; None = retry forever (the legacy behavior)
+    max_retries: Optional[int] = None
     # filled by the engine:
+    status: str = QUEUED  # QUEUED <-> RUNNING -> one of TERMINAL
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     preemptions: int = 0
-    error: Optional[str] = None  # set when the request can never be served
+    error: Optional[str] = None  # why a non-COMPLETED request ended
     submit_step: int = 0  # engine tick at submission
     first_token_step: Optional[int] = None  # tick that produced output[0]
     admit_step: Optional[int] = None  # tick of first admission into a slot
     cached_tokens: int = 0  # prompt tokens covered by prefix-cache hits
+    _cancel: bool = dataclasses.field(default=False, repr=False)
+
+    def cancel(self) -> None:
+        """Request cancellation; honored at the next scheduler boundary
+        (the engine frees the slot/queue entry and marks the request
+        CANCELLED).  A no-op once the request is terminal."""
+        if not self.done:
+            self._cancel = True
 
     @property
     def ttft_ticks(self) -> Optional[int]:
@@ -323,7 +418,8 @@ class Request:
 
 
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                 injector: Optional[FaultInjector] = None):
         if serve_cfg.kv_dtype is not None and cfg.kv_dtype != serve_cfg.kv_dtype:
             # the storage format is a property of the cache pytree the step
             # functions trace over, so it lives on the model config (and so
@@ -439,12 +535,23 @@ class ServingEngine:
         self.completed: List[Request] = []
         self.steps_run = 0
         self.preemptions = 0
+        # -- fault tolerance --------------------------------------------
+        self.admission_open = True  # drain()/shutdown() close intake
+        self.poisoned_rows = 0  # logits rows with no finite value seen
+        self.audits_run = 0  # invariant audits executed (scfg.audit)
+        self.injector = injector
+        if injector is not None:
+            injector.bind_clock(lambda: self.steps_run)
+            if self.pool is not None:
+                self.pool.injector = injector
 
     # ------------------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens=None,
-               priority: int = 0) -> Request:
+               priority: int = 0, deadline_ticks: Optional[int] = None,
+               max_retries: Optional[int] = None) -> Request:
         req = Request(next(self._uid), list(prompt), max_new_tokens,
-                      priority=priority, submit_step=self.steps_run)
+                      priority=priority, deadline_ticks=deadline_ticks,
+                      max_retries=max_retries, submit_step=self.steps_run)
         self.queue.append(req)
         return req
 
@@ -457,24 +564,34 @@ class ServingEngine:
     def _admit(self):
         """FIFO admission into free slots; paged mode additionally gates on
         free-block count, allocating the request's replay footprint up front
-        (no head-of-line skipping — deterministic order)."""
+        (no head-of-line skipping — deterministic order).  The one sanctioned
+        exception: preemption victims still in retry backoff step aside and
+        let younger requests pass until their wait expires.  Closed entirely
+        once ``drain()``/``shutdown()`` stops intake."""
+        if not self.admission_open:
+            return
         for s in range(self.scfg.slots):
             if self.slot_req[s] is not None or not self.queue:
                 continue
-            req = self.queue[0]
+            req = None
+            for cand in self.queue:
+                if getattr(cand, "_not_before", 0) > self.steps_run:
+                    continue  # backing off after a preemption storm
+                req = cand
+                break
+            if req is None:
+                break  # everyone queued is backing off
             if self.pool is not None:
                 need = blocks_for(self._resident_tokens(req), self.pool.page_size)
                 if need > min(self.pool.num_blocks, self.max_pages):
                     # can never fit — pool too small, or prompt beyond the
                     # per-slot table (max_len): fail fast instead of wedging
                     # the queue head forever (or crashing ensure_capacity).
-                    self.queue.popleft()
-                    req.error = (
+                    self.queue.remove(req)
+                    self._terminate(req, REJECTED, error=(
                         f"needs {need} KV blocks; pool holds "
                         f"{self.pool.num_blocks}, table holds {self.max_pages}"
-                    )
-                    req.done = True
-                    self.completed.append(req)
+                    ))
                     continue
                 matched: List[int] = []
                 if self.prefix is not None:
@@ -494,9 +611,10 @@ class ServingEngine:
                     break
             else:
                 matched = []
-            self.queue.popleft()
+            self.queue.remove(req)
             self.slot_req[s] = req
             self.slot_state[s] = "prefill"
+            req.status = RUNNING
             start = len(matched) * self.pool.page_size if matched else 0
             self.pos[s] = start
             req._cursor = start  # type: ignore[attr-defined]
@@ -510,16 +628,34 @@ class ServingEngine:
                     self.tables.attach(s, matched)
                     self.pages_shared += len(matched)
                     self._tables_dirty = True
-                if self.tables.ensure_capacity(
-                    s, self._resident_tokens(req), req.uid
-                ):
+                try:
+                    if self.tables.ensure_capacity(
+                        s, self._resident_tokens(req), req.uid
+                    ):
+                        self._tables_dirty = True
+                except PoolExhausted:
+                    # an injected alloc fault fired past the free-count
+                    # gate: roll the whole admission back (matched pages
+                    # return their references) and retry next tick
+                    self.tables.release_slot(s)
                     self._tables_dirty = True
+                    self.slot_req[s] = None
+                    self.slot_state[s] = None
+                    self.pos[s] = 0
+                    req._cursor = 0  # type: ignore[attr-defined]
+                    req.cached_tokens = 0
+                    req.status = QUEUED
+                    self.queue.appendleft(req)
+                    break
 
-    def _pick_victim(self, exclude: int) -> Optional[int]:
-        """Preemption victim: lowest priority, then youngest admission."""
+    def _pick_victim(self, exclude) -> Optional[int]:
+        """Preemption victim: lowest priority, then youngest admission.
+        ``exclude`` is a slot or a collection of slots never picked (e.g.
+        every slot in the dispatch currently being assembled)."""
+        excluded = {exclude} if isinstance(exclude, int) else set(exclude)
         best = None
         for s in range(self.scfg.slots):
-            if s == exclude or self.slot_req[s] is None:
+            if s in excluded or self.slot_req[s] is None:
                 continue
             r = self.slot_req[s]
             key = (r.priority, -r._admit_seq)  # type: ignore[attr-defined]
@@ -529,16 +665,31 @@ class ServingEngine:
 
     def _preempt(self, s: int):
         """Evict slot ``s``: blocks back to the pool, request to the front of
-        the queue (recompute resume — prompt + generated tokens replay)."""
+        the queue (recompute resume — prompt + generated tokens replay).
+        A victim past its ``max_retries`` budget fails instead of retrying;
+        with ``retry_backoff`` set, storm victims wait out an exponential
+        backoff before re-admission."""
         req = self.slot_req[s]
+        req.preemptions += 1
+        self.preemptions += 1
+        if req.max_retries is not None and req.preemptions > req.max_retries:
+            self._terminate(req, FAILED, slot=s, error=(
+                f"preempted {req.preemptions} times "
+                f"(max_retries={req.max_retries})"
+            ))
+            return
         self.tables.release_slot(s)
         self._tables_dirty = True
         self.slot_req[s] = None
         self.slot_state[s] = None
         self.pos[s] = 0
         req._cursor = 0  # type: ignore[attr-defined]
-        req.preemptions += 1
-        self.preemptions += 1
+        req.status = QUEUED
+        if self.scfg.retry_backoff > 0:
+            wait = self.scfg.retry_backoff * (
+                1 << min(req.preemptions - 1, 5)
+            )
+            req._not_before = self.steps_run + wait  # type: ignore[attr-defined]
         self.queue.appendleft(req)
 
     def _reclaim(self, want: int) -> int:
@@ -568,13 +719,8 @@ class ServingEngine:
         req = self.slot_req[s]
         if blocks_for(int(self.pos[s]) + 1, self.pool.page_size) > self.pool.num_blocks:
             # outgrew the entire pool mid-generation; no preemption can help
-            self.tables.release_slot(s)
-            self._tables_dirty = True
-            self.slot_req[s] = None
-            self.slot_state[s] = None
-            req.error = "request outgrew the KV block pool"
-            req.done = True
-            self.completed.append(req)
+            self._terminate(req, FAILED, slot=s,
+                            error="request outgrew the KV block pool")
             return False
         while True:
             if self._ensure_with_evict(s, int(self.pos[s]) + 1, req.uid):
@@ -590,14 +736,55 @@ class ServingEngine:
                 return False
             self._preempt(victim)
 
-    def _finish(self, s: int, req: Request):
+    def _terminate(self, req: Request, status: str,
+                   slot: Optional[int] = None,
+                   error: Optional[str] = None):
+        """The single request exit path: every request ends exactly once,
+        through here, with its slot's pages released — whatever the reason
+        (COMPLETED / TIMED_OUT / CANCELLED / FAILED / REJECTED).  The
+        freed-page guarantee the auditor checks lives here, not scattered
+        per exit site."""
+        if slot is not None:
+            self.slot_req[slot] = None
+            self.slot_state[slot] = None
+            self.pos[slot] = 0
+            if self.tables is not None:
+                self.tables.release_slot(slot)  # blocks recycle immediately
+                self._tables_dirty = True
+        if error is not None:
+            req.error = error
+        req.status = status
         req.done = True
         self.completed.append(req)
-        self.slot_req[s] = None
-        self.slot_state[s] = None
-        if self.tables is not None:
-            self.tables.release_slot(s)  # blocks recycle immediately at EOS
-            self._tables_dirty = True
+
+    def _sweep_lifecycle(self):
+        """Honor ``cancel()`` and ``deadline_ticks`` before dispatching: an
+        expired or cancelled request exits through ``_terminate`` wherever
+        it currently lives (queue or slot), freeing its pages on the spot.
+        Partial output stays on the request."""
+        now = self.steps_run
+        for req in list(self.queue):
+            verdict = self._lifecycle_verdict(req, now)
+            if verdict is not None:
+                self.queue.remove(req)
+                self._terminate(req, verdict[0], error=verdict[1])
+        for s in range(self.scfg.slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            verdict = self._lifecycle_verdict(req, now)
+            if verdict is not None:
+                self._terminate(req, verdict[0], slot=s, error=verdict[1])
+
+    @staticmethod
+    def _lifecycle_verdict(req: Request, now: int):
+        if req._cancel:
+            return (CANCELLED, "cancelled by caller")
+        if (req.deadline_ticks is not None
+                and now - req.submit_step >= req.deadline_ticks):
+            return (TIMED_OUT,
+                    f"deadline of {req.deadline_ticks} ticks exceeded")
+        return None
 
     def _emit_token(self, s: int, req: Request, tok: int):
         """Record a generated token and apply the stop conditions."""
@@ -610,7 +797,7 @@ class ServingEngine:
             or len(req.output) >= limit
             or self.pos[s] >= self.scfg.max_len
         ):
-            self._finish(s, req)
+            self._terminate(req, COMPLETED, slot=s)
 
     # ------------------------------------------------------------------
     def _fresh_cache(self):
@@ -647,7 +834,17 @@ class ServingEngine:
         slots plus prompt chunks for prefilling slots, together bounded by
         ``token_budget``.  With ``sync_every > 1`` and every active slot
         generating, one dispatch runs up to ``sync_every`` decode ticks on
-        device.  Returns #active slots."""
+        device.  Cancellations and deadlines are honored before the
+        dispatch; with ``ServeConfig.audit`` the invariant auditor runs
+        after it.  Returns #active slots."""
+        self._sweep_lifecycle()
+        n = self._step_inner()
+        if self.scfg.audit:
+            self.audits_run += 1
+            audit_engine(self)
+        return n
+
+    def _step_inner(self) -> int:
         self._admit()
         if self.tables is not None:
             for s in range(self.scfg.slots):
@@ -656,9 +853,22 @@ class ServingEngine:
             self._admit()  # preemption may have freed blocks for the queue head
         active = [s for s in range(self.scfg.slots) if self.slot_req[s] is not None]
         if not active:
+            if self.queue and self.admission_open:
+                # every queued request is waiting out a retry backoff: the
+                # clock must still advance or backoffs (and deadlines)
+                # would never expire
+                self.steps_run += 1
             return 0
         self.dispatches += 1
-        if self.sync_every > 1 and all(self._gen_ready(s) for s in active):
+        window_ok = (
+            self.sync_every > 1 and all(self._gen_ready(s) for s in active)
+        )
+        if (window_ok and self.injector is not None
+                and self.injector.pending("poison")):
+            # poison faults land per-tick, where per-row detection runs;
+            # the window has no mid-scan logits check
+            window_ok = False
+        if window_ok:
             done = self._step_window(active)
             if done is not None:
                 return done
@@ -679,6 +889,8 @@ class ServingEngine:
         failed grant costs no table re-upload — and the boundary falls
         back to per-tick stepping.  The grant itself never preempts, so a
         tight pool degrades throughput, not scheduling."""
+        if self.injector is not None and self.injector.fire("grant"):
+            return False  # injected mid-window grant failure
         pre = {s: self.tables.num_blocks(s) for s in active}
         dirty_before = self._tables_dirty
         for s in active:
@@ -727,11 +939,23 @@ class ServingEngine:
             if not self._grant_window(active, n, rem):
                 return None
             pairs: List[Tuple[int, int]] = []
-            for s in active:
-                span = min(n, int(rem[s]) + 1)
-                target = min(int(self.pos[s]) + span, self.scfg.max_len)
-                last = max(int(self.pos[s]), target - 1)
-                pairs += self._cow_range(s, last)
+            try:
+                for s in active:
+                    span = min(n, int(rem[s]) + 1)
+                    target = min(int(self.pos[s]) + span, self.scfg.max_len)
+                    last = max(int(self.pos[s]), target - 1)
+                    self._cow_range(s, last, protect=frozenset(active),
+                                    out=pairs)
+            except PoolExhausted:
+                # a COW copy could not be satisfied even after eviction:
+                # apply the copies already repointed (their tables
+                # reference the fresh pages), give back the grow-ahead,
+                # and fall back to per-tick — where COW failure preempts
+                self._apply_cow(pairs)
+                for s in active:
+                    if self.tables.trim(s, int(self.pos[s]) + 1):
+                        self._tables_dirty = True
+                return None
             self._apply_cow(pairs)
         loop = self._loop_fns.get(n)
         if loop is None:
@@ -792,31 +1016,85 @@ class ServingEngine:
             self.pages_deduped += 1
             self._tables_dirty = True
 
-    def _cow_range(self, s: int, last_pos: int) -> List[Tuple[int, int]]:
+    def _cow_range(self, s: int, last_pos: int,
+                   protect: frozenset = frozenset(),
+                   out: Optional[List[Tuple[int, int]]] = None,
+                   ) -> List[Tuple[int, int]]:
         """Copy-on-write guard for the pages slot ``s`` may write this
         dispatch (positions ``pos[s]..last_pos``).  Shared pages (refcount
         > 1) are swapped for fresh private copies and the table repointed;
-        returns the (src, dst) page pairs still needing a device-side copy.
+        returns the (src, dst) page pairs still needing a device-side copy
+        (appended to ``out`` when given, so a caller that must recover from
+        ``PoolExhausted`` still sees the pairs already repointed).
 
-        In the normal flow this never fires: only *full* prompt pages are
-        published to the index and matches are capped so the divergent tail
-        starts page-aligned — a shared page is never written.  The guard
-        exists so sharing stays safe by construction (tests pin it via
-        manually attached partial pages), not by scheduler luck."""
-        pairs: List[Tuple[int, int]] = []
+        Exhaustion during a copy tries, in order: prefix-cache eviction,
+        then preempting a victim outside ``protect | {s}``; when neither
+        frees a block ``PoolExhausted`` propagates and the caller decides
+        (per-tick paths preempt ``s`` itself, the window path rolls back
+        its grant and falls back to per-tick).
+
+        In the normal flow the copy never fires: only *full* prompt pages
+        are published to the index and matches are capped so the divergent
+        tail starts page-aligned — a shared page is never written.  The
+        guard exists so sharing stays safe by construction (tests pin it
+        via manually attached partial pages), not by scheduler luck."""
+        pairs = out if out is not None else []
         ps = self.pool.page_size
         req = self.slot_req[s]
         first = int(self.pos[s]) // ps
         last = min(last_pos // ps, self.tables.num_blocks(s) - 1)
         for pidx in range(first, last + 1):
-            try:
-                pair = self.tables.ensure_writable(s, pidx, req.uid)
-            except PoolExhausted:
-                self._reclaim(1)
-                pair = self.tables.ensure_writable(s, pidx, req.uid)
+            while True:
+                try:
+                    pair = self.tables.ensure_writable(s, pidx, req.uid)
+                    break
+                except PoolExhausted:
+                    if self._reclaim(1):
+                        continue
+                    victim = self._pick_victim(exclude=protect | {s})
+                    if victim is None:
+                        raise
+                    self._preempt(victim)
             if pair:
                 pairs.append(pair)
         return pairs
+
+    def _cow_or_preempt(self, work: List[Tuple[int, int]],
+                        ) -> Tuple[List[int], List[Tuple[int, int]]]:
+        """Run the COW gate for each ``(slot, last_pos)`` about to be
+        dispatched.  A slot whose copy cannot be satisfied even after
+        eviction and victim preemption is preempted itself and dropped
+        from the dispatch — its partially-repointed pages roll back with
+        its table, so the surviving slots' pairs stay valid.  Returns
+        (surviving slots, device copy pairs)."""
+        dispatch = frozenset(s for s, _ in work)
+        survivors: List[int] = []
+        pairs: List[Tuple[int, int]] = []
+        for s, last in work:
+            if self.slot_req[s] is None:
+                continue  # became a victim earlier in this loop
+            try:
+                local = self._cow_range(s, last, protect=dispatch)
+            except PoolExhausted:
+                self._preempt(s)  # recompute resume replays it cleanly
+                continue
+            survivors.append(s)
+            pairs += local
+        return survivors, pairs
+
+    def _poison_mask(self, rows: List[int]) -> np.ndarray:
+        """(slots,) bool — rows the injector poisons this dispatch.  A due
+        poison fault targets ``fault.slot`` mod the dispatched rows, so a
+        schedule stays meaningful whatever the slot occupancy is by then."""
+        mask = np.zeros((self.scfg.slots,), bool)
+        if self.injector is None or not rows:
+            return mask
+        while True:
+            f = self.injector.fire("poison")
+            if f is None:
+                break
+            mask[rows[f.slot % len(rows)]] = True
+        return mask
 
     def _apply_cow(self, pairs: List[Tuple[int, int]]):
         """Run the device-side page copies for COW repoints.  Pairs are
@@ -840,6 +1118,14 @@ class ServingEngine:
 
     # -- per-tick paths -------------------------------------------------
     def _step_replay(self, active: List[int]) -> int:
+        if self.tables is not None:
+            active, pairs = self._cow_or_preempt(
+                [(s, int(self.pos[s])) for s in active]
+            )
+            if not active:
+                self.dispatches -= 1  # nothing actually dispatched
+                return 0
+            self._apply_cow(pairs)
         feed = np.zeros((self.scfg.slots,), np.int32)
         live = np.zeros((self.scfg.slots,), bool)
         full_len: Dict[int, int] = {}
@@ -852,21 +1138,24 @@ class ServingEngine:
                 req.prompt[cur] if cur < np_ else req.output[cur - np_]
             )
             live[s] = True
-        if self.tables is not None:
-            pairs: List[Tuple[int, int]] = []
-            for s in active:
-                pairs += self._cow_range(s, int(self.pos[s]))
-            self._apply_cow(pairs)
-        next_tok, self.cache, self._key = self._step(
+        poison = self._poison_mask(active)
+        next_tok, bad, self.cache, self._key = self._step(
             self.params, self._fresh_cache(), jnp.asarray(feed),
             jnp.asarray(self.pos), self._key, jnp.asarray(live),
+            jnp.asarray(poison),
         )
         next_tok = np.asarray(next_tok)
+        bad = np.asarray(bad)
         for s in active:
             req = self.slot_req[s]
             cur = req._cursor  # type: ignore[attr-defined]
             self.pos[s] += 1
             req._cursor = cur + 1  # type: ignore[attr-defined]
+            if bad[s]:
+                self.poisoned_rows += 1
+                self._terminate(req, FAILED, slot=s,
+                                error="poisoned logits row (no finite value)")
+                continue
             if cur + 1 >= full_len[s]:  # this step produced a real token
                 self._register_prefix(s, req)
                 self._emit_token(s, req, int(next_tok[s]))
@@ -890,6 +1179,11 @@ class ServingEngine:
             self.token_budget, len(gen), pending, self.prefill_chunk
         )
 
+        if gen and self.tables is not None:
+            gen, pairs = self._cow_or_preempt(
+                [(s, int(self.pos[s])) for s in gen]
+            )
+            self._apply_cow(pairs)
         if gen:
             feed = np.zeros((self.scfg.slots,), np.int32)
             live = np.zeros((self.scfg.slots,), bool)
@@ -897,22 +1191,35 @@ class ServingEngine:
                 req = self.slot_req[s]
                 feed[s] = req.output[-1]
                 live[s] = True
-            if self.tables is not None:
-                pairs: List[Tuple[int, int]] = []
-                for s in gen:
-                    pairs += self._cow_range(s, int(self.pos[s]))
-                self._apply_cow(pairs)
-            next_tok, self.cache, self._key = self._step(
+            poison = self._poison_mask(gen)
+            next_tok, bad, self.cache, self._key = self._step(
                 self.params, self._fresh_cache(), jnp.asarray(feed),
                 jnp.asarray(self.pos), self._key, jnp.asarray(live),
+                jnp.asarray(poison),
             )
             next_tok = np.asarray(next_tok)
+            bad = np.asarray(bad)
             for s in gen:
                 req = self.slot_req[s]
                 self.pos[s] += 1
                 req._cursor += 1  # type: ignore[attr-defined]
+                if bad[s]:
+                    self.poisoned_rows += 1
+                    self._terminate(
+                        req, FAILED, slot=s,
+                        error="poisoned logits row (no finite value)")
+                    continue
                 self._emit_token(s, req, int(next_tok[s]))
 
+        # COW during the gen dispatch may have preempted a prefilling slot
+        chunk_lens = {s: n for s, n in chunk_lens.items()
+                      if self.slot_req[s] is not None}
+        if chunk_lens and self.tables is not None:
+            ok, pairs = self._cow_or_preempt(
+                [(s, int(self.pos[s]) + n - 1) for s, n in chunk_lens.items()]
+            )
+            chunk_lens = {s: chunk_lens[s] for s in ok}
+            self._apply_cow(pairs)
         if chunk_lens:
             width = self.prefill_chunk
             toks = np.zeros((self.scfg.slots, width), np.int32)
@@ -923,20 +1230,24 @@ class ServingEngine:
                 replay = (req.prompt + req.output)[cur : cur + n]
                 toks[s, :n] = replay
                 lens[s] = n
-            if self.tables is not None:
-                cow_pairs: List[Tuple[int, int]] = []
-                for s, n in chunk_lens.items():
-                    cow_pairs += self._cow_range(s, int(self.pos[s]) + n - 1)
-                self._apply_cow(cow_pairs)
-            ptok, self.cache, self._key = self._prefill(
+            poison = self._poison_mask(sorted(chunk_lens))
+            ptok, pbad, self.cache, self._key = self._prefill(
                 self.params, self._fresh_cache(), jnp.asarray(toks),
                 jnp.asarray(self.pos), jnp.asarray(lens), self._key,
+                jnp.asarray(poison),
             )
             ptok = np.asarray(ptok)
+            pbad = np.asarray(pbad)
             for s, n in chunk_lens.items():
                 req = self.slot_req[s]
                 self.pos[s] += n
                 req._cursor += n  # type: ignore[attr-defined]
+                if pbad[s]:
+                    self.poisoned_rows += 1
+                    self._terminate(
+                        req, FAILED, slot=s,
+                        error="poisoned logits row (no finite value)")
+                    continue
                 if req._cursor >= len(req.prompt) + len(req.output):  # type: ignore[attr-defined]
                     # the chunk reached the end of the replay stream: its
                     # last live logits produce the next real token
@@ -954,6 +1265,140 @@ class ServingEngine:
             if self.step() == 0 and not self.queue:
                 break
         return self.completed
+
+    # -- lifecycle: drain / shutdown ------------------------------------
+    def drain(self, max_steps: int = 10_000) -> List[Request]:
+        """Stop admission and finish every request already holding a slot.
+        Queued requests stay queued — drain stops intake, it does not
+        cancel.  Afterwards the pool holds only prefix-cache pages (and
+        admission stays closed; reopen by setting ``admission_open``)."""
+        self.admission_open = False
+        for _ in range(max_steps):
+            if self.step() == 0:
+                break
+        return self.completed
+
+    def shutdown(self) -> List[Request]:
+        """Drain in-flight work, cancel everything still queued, and flush
+        the prefix index: afterwards the pool holds **zero** allocated
+        blocks — the freed-page guarantee the chaos harness asserts."""
+        self.drain()
+        for s in range(self.scfg.slots):
+            req = self.slot_req[s]
+            if req is not None:  # drain ran out of its step budget
+                self._terminate(req, CANCELLED, slot=s,
+                                error="engine shutdown")
+        while self.queue:
+            self._terminate(self.queue.popleft(), CANCELLED,
+                            error="engine shutdown")
+        if self.prefix is not None:
+            self.prefix.flush()
+            self._tables_dirty = True
+        if self.scfg.audit:
+            self.audits_run += 1
+            audit_engine(self)
+        return self.completed
+
+    # -- crash-safe persistence -----------------------------------------
+    def snapshot(self, path: Optional[str] = None) -> dict:
+        """Serialize the prefix-cache radix index *and* the KV contents of
+        its pages — the warm state an engine restart would otherwise lose.
+        In-flight slots are deliberately not captured: requests are
+        re-submittable, the cached prefix KV is not.  Returns the snapshot
+        dict; ``path`` additionally pickles it to disk."""
+        if self.prefix is None:
+            raise ValueError(
+                "snapshot() needs the prefix cache enabled "
+                "(paged cache + an attention family)"
+            )
+        entries = self.prefix.export()
+        snap = {
+            "format": SNAPSHOT_FORMAT,
+            "model": self.cfg.name,
+            "page_size": self.pool.page_size,
+            "kv_dtype": self.cfg.kv_dtype,
+            "nodes": [(parent, list(blk)) for parent, blk, _ in entries],
+            "leaves": lm.gather_pages(
+                self.cache, [page for _, _, page in entries]
+            ),
+        }
+        if path is not None:
+            import pickle
+
+            with open(path, "wb") as f:
+                pickle.dump(snap, f)
+        return snap
+
+    def load_snapshot(self, snap) -> int:
+        """Graft a snapshot's cached page chains into this engine (normally
+        a fresh one — see :meth:`restore`).  Config mismatches (model, page
+        size, kv dtype, page-pool layout) are loud ``ValueError``s —
+        silently serving stale KV would be wrong tokens, not an error
+        message.  When the pool is smaller than the snapshot, the longest
+        chain prefixes that fit are restored (children of a skipped node
+        are skipped).  Returns pages restored."""
+        if not isinstance(snap, dict):
+            import pickle
+
+            with open(snap, "rb") as f:
+                snap = pickle.load(f)
+        if self.prefix is None:
+            raise ValueError("load_snapshot() needs the prefix cache enabled")
+        if snap.get("format") != SNAPSHOT_FORMAT:
+            raise ValueError(
+                f"unknown snapshot format {snap.get('format')!r} "
+                f"(this engine writes {SNAPSHOT_FORMAT})"
+            )
+        for field, mine in (
+            ("model", self.cfg.name),
+            ("page_size", self.pool.page_size),
+            ("kv_dtype", self.cfg.kv_dtype),
+        ):
+            if snap[field] != mine:
+                raise ValueError(
+                    f"snapshot {field}={snap[field]!r} does not match "
+                    f"engine {field}={mine!r}"
+                )
+        want = [(tuple(a.shape[1:]), str(a.dtype)) for a in snap["leaves"]]
+        if want != lm.page_leaf_shapes(self.cache):
+            raise ValueError(
+                "snapshot page-pool layout does not match this engine's "
+                "cache (different reduced config or leaf set)"
+            )
+        phys: Dict[int, int] = {}
+        keep: List[int] = []
+        for i, (parent, _blk) in enumerate(snap["nodes"]):
+            if parent >= 0 and parent not in phys:
+                continue  # ancestor skipped (pool ran short): skip the chain
+            if not self.pool.free:
+                continue  # partial restore: longest prefixes that fit
+            phys[i] = self.pool.alloc(owner="prefix-snapshot")
+            keep.append(i)
+        if keep:
+            dst = [phys[i] for i in keep]
+            values = [np.asarray(a)[keep] for a in snap["leaves"]]
+            self.cache = lm.scatter_pages(self.cache, dst, values)
+            local = {i: j for j, i in enumerate(keep)}
+            entries = []
+            for i in keep:
+                parent, blk = snap["nodes"][i]
+                entries.append((
+                    local[parent] if parent >= 0 else -1, tuple(blk), phys[i]
+                ))
+            self.prefix.import_nodes(entries)
+        return len(keep)
+
+    @classmethod
+    def restore(cls, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                snap, injector: Optional[FaultInjector] = None,
+                ) -> "ServingEngine":
+        """Crash-safe restart: a fresh engine pre-warmed with
+        ``snapshot()``'s radix index and page contents, so a warm-prefix
+        request hits the cache immediately — TTFT matches the pre-restart
+        cached path instead of paying a cold prefill."""
+        eng = cls(cfg, params, serve_cfg, injector=injector)
+        eng.load_snapshot(snap)
+        return eng
 
     # -- accounting -----------------------------------------------------
     def kv_cache_bytes(self) -> int:

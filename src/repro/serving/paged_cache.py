@@ -47,6 +47,7 @@ Invariants (property-tested in tests/test_property.py):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
@@ -91,9 +92,13 @@ class BlockPool:
     """
 
     def __init__(self, num_blocks: int, page_size: int, base: int = 0,
-                 page_bytes: Optional[int] = None):
+                 page_bytes: Optional[int] = None, injector=None):
         if num_blocks <= 0 or page_size <= 0:
             raise ValueError("num_blocks and page_size must be positive")
+        # optional serving.faults.FaultInjector: when its schedule says so,
+        # alloc() raises PoolExhausted exactly as a genuinely empty pool
+        # would — chaos testing exercises every caller's rollback path
+        self.injector = injector
         self.num_blocks = int(num_blocks)
         self.page_size = int(page_size)
         self.base = int(base)
@@ -124,6 +129,8 @@ class BlockPool:
 
     # ------------------------------------------------------------------
     def alloc(self, owner: object = None) -> int:
+        if self.injector is not None and self.injector.fire("pool_alloc"):
+            raise PoolExhausted("injected fault: pool_alloc")
         if not self._free:
             raise PoolExhausted(
                 f"all {self.num_blocks} KV blocks in use"
@@ -208,10 +215,22 @@ class SlotTables:
             raise PoolExhausted(
                 f"slot {slot} needs {grow} blocks, pool has {self.pool.free}"
             )
-        for _ in range(grow):
-            blk = self.pool.alloc(owner)
-            self._blocks[slot].append(blk)
-            self._np[slot, len(self._blocks[slot]) - 1] = blk
+        got: List[int] = []
+        try:
+            for _ in range(grow):
+                blk = self.pool.alloc(owner)
+                got.append(blk)
+                self._blocks[slot].append(blk)
+                self._np[slot, len(self._blocks[slot]) - 1] = blk
+        except PoolExhausted:
+            # an injected alloc fault can fire past the free-count
+            # pre-check above: roll back so the allocate-nothing contract
+            # holds however the failure arrived
+            n = len(self._blocks[slot])
+            del self._blocks[slot][n - len(got):]
+            self._np[slot, n - len(got): n] = 0
+            self.pool.release(got)
+            raise
         return grow
 
     def attach(self, slot: int, pages: Sequence[int]) -> int:
@@ -459,4 +478,62 @@ class PrefixCache:
                 self.pool.release([nd.page])
                 self.evictions += 1
                 freed += 1
+        return freed
+
+    # -- persistence (engine.snapshot / restore) ------------------------
+    def export(self) -> List[Tuple[int, tuple, int]]:
+        """Flatten the index to ``(parent, token_block, page)`` triples
+        with parents strictly before children (parent ``-1`` = root) — the
+        serializable half of the engine's ``snapshot()`` (the other half
+        is the page *contents*, gathered from the device pools)."""
+        out: List[Tuple[int, tuple, int]] = []
+        index = {id(self._root): -1}
+        queue = collections.deque([self._root])
+        while queue:
+            nd = queue.popleft()
+            for child in nd.children.values():
+                out.append((index[id(nd)], child.token_block, child.page))
+                index[id(child)] = len(out) - 1
+                queue.append(child)
+        return out
+
+    def import_nodes(self, entries: Sequence[Tuple[int, tuple, int]]) -> int:
+        """Rebuild exported chains: each entry ``(parent, token_block,
+        page)`` references an earlier entry by position (``-1`` = root) and
+        hands the index a freshly-allocated page whose single reference the
+        index takes over — the steady state a published prefill page
+        reaches.  A token block already cached keeps its existing page and
+        the caller's duplicate allocation is released.  Returns nodes
+        added."""
+        now = self._tick()
+        nodes: Dict[int, _PrefixNode] = {-1: self._root}
+        added = 0
+        for i, (parent, blk, page) in enumerate(entries):
+            pnode = nodes[parent]
+            blk = tuple(blk)
+            child = pnode.children.get(blk)
+            if child is None:
+                child = _PrefixNode(page, hash((pnode.key, blk)), pnode, blk)
+                child.last_use = now
+                pnode.children[blk] = child
+                self.insertions += 1
+                added += 1
+            else:
+                self.pool.release([page])
+            nodes[i] = child
+        return added
+
+    def flush(self) -> int:
+        """Drop the index's reference on every cached page and reset the
+        tree (engine shutdown).  Pages a slot table still shares survive
+        under their remaining references; the rest recycle immediately.
+        Returns pages the index let go."""
+        freed = 0
+        stack = list(self._root.children.values())
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            self.pool.release([nd.page])
+            freed += 1
+        self._root.children = {}
         return freed

@@ -14,6 +14,16 @@ import jax
 import jax.numpy as jnp
 
 
+def guarded_argmax(logits: jax.Array) -> jax.Array:
+    """argmax that never returns garbage on poisoned rows: NaN compares
+    false everywhere (plain argmax of an all-NaN row is implementation-
+    defined), so NaNs count as ``-inf`` and an all-``-inf`` row
+    deterministically yields id 0 — always a valid vocab index."""
+    return jnp.argmax(
+        jnp.where(jnp.isnan(logits), -jnp.inf, logits), axis=-1
+    ).astype(jnp.int32)
+
+
 def sample(
     logits: jax.Array,  # (B, V) f32
     key,
@@ -22,7 +32,8 @@ def sample(
     top_p: Optional[float] = None,
 ) -> jax.Array:
     if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return guarded_argmax(logits)
+    raw = logits
     logits = logits / temperature
     vocab = logits.shape[-1]
     if top_k is not None:
@@ -40,7 +51,14 @@ def sample(
         cutoff_idx = jnp.minimum(jnp.sum(cum < top_p, axis=-1), vocab - 1)
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    tok = jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    # a row with no finite mass left (fully masked, or NaN/Inf-poisoned
+    # upstream) makes categorical sample garbage — softmax of all -inf is
+    # NaN.  Fall back to argmax of the *raw* logits so the emitted id is
+    # always a valid vocab index; the serving engine separately counts and
+    # fails requests whose raw logits were poisoned (poisoned_rows).
+    bad = ~jnp.any(jnp.isfinite(logits), axis=-1)
+    return jnp.where(bad, guarded_argmax(raw), tok)
 
 
 def sample_step(
@@ -68,7 +86,7 @@ def sample_step(
     ``lm.decode_loop``.)
     """
     if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), key
+        return guarded_argmax(logits), key
     new_key, sub = jax.random.split(key)
     if gate is not None:
         new_key = jnp.where(gate, new_key, key)

@@ -1,0 +1,450 @@
+"""Fault-tolerance tests: request lifecycle, fault injection, the live
+invariant auditor, the seeded chaos harness, and crash-safe snapshot /
+restore of the prefix cache (ISSUE-8 acceptance surface).
+
+The contract under test:
+
+* every request exits through exactly one terminal status, with its pages
+  released on every exit path (cancel, deadline, retry exhaustion,
+  poisoned logits, rejection, shutdown);
+* pool and grant faults are output-preserving — requests they touch retry
+  by recompute and finish byte-identical to a fault-free run;
+* poison faults fail exactly the affected request;
+* ``audit=True`` re-derives the refcount ledger every tick and raises
+  :class:`AuditError` at the tick the books diverge;
+* a restarted engine restored from ``snapshot()`` serves warm-prefix
+  TTFT immediately (the crash-safety carry-over from the ROADMAP).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import (
+    AuditError,
+    Fault,
+    FaultInjector,
+    ServeConfig,
+    ServingEngine,
+    audit_engine,
+    random_schedule,
+)
+from repro.serving.engine import (
+    CANCELLED,
+    COMPLETED,
+    FAILED,
+    QUEUED,
+    REJECTED,
+    TERMINAL,
+    TIMED_OUT,
+)
+from repro.serving.faults import chaos_smoke
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen2_1_5b").reduced()
+    return cfg, lm.init(cfg, jax.random.PRNGKey(0))
+
+
+def _run(cfg, params, prompts, injector=None, submit_kw=None, **scfg_kw):
+    eng = ServingEngine(cfg, params, ServeConfig(**scfg_kw),
+                        injector=injector)
+    submit_kw = submit_kw or [{}] * len(prompts)
+    reqs = [eng.submit(p, **kw) for p, kw in zip(prompts, submit_kw)]
+    eng.run()
+    return reqs, eng
+
+
+def _prompts(cfg, rng, sizes=(6, 3, 9, 2)):
+    return [rng.integers(0, cfg.vocab_size, size=n).tolist() for n in sizes]
+
+
+def _leftover(eng):
+    """Pages still allocated beyond what the prefix index legitimately
+    holds — zero means every request freed its pages."""
+    held = eng.prefix.pages if eng.prefix is not None else 0
+    return eng.pool.in_use - held
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle: terminal statuses and the freed-page guarantee
+# ---------------------------------------------------------------------------
+
+
+class TestLifecycle:
+    BASE = dict(slots=1, max_len=48, max_new_tokens=6, page_size=4)
+
+    def test_cancel_queued(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(**self.BASE))
+        reqs = [eng.submit(p) for p in _prompts(cfg, rng, sizes=(6, 5, 4))]
+        reqs[2].cancel()
+        eng.run()
+        assert reqs[2].status == CANCELLED and reqs[2].done
+        assert reqs[2].output == []
+        assert "cancel" in reqs[2].error
+        assert all(r.status == COMPLETED for r in reqs[:2])
+        assert _leftover(eng) == 0
+
+    def test_cancel_running_preserves_partial_output(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(**self.BASE))
+        req = eng.submit(rng.integers(0, cfg.vocab_size, size=6).tolist())
+        while not req.output:  # step until mid-generation
+            eng.step()
+        req.cancel()
+        eng.run()
+        assert req.status == CANCELLED
+        assert 0 < len(req.output) < self.BASE["max_new_tokens"]
+        assert _leftover(eng) == 0
+
+    def test_cancel_is_noop_after_terminal(self, qwen, rng):
+        cfg, params = qwen
+        reqs, _ = _run(cfg, params, _prompts(cfg, rng, sizes=(4,)),
+                       **self.BASE)
+        reqs[0].cancel()
+        assert reqs[0].status == COMPLETED  # not flipped to CANCELLED
+
+    def test_deadline_expires_in_queue(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(**self.BASE))
+        hog = eng.submit(rng.integers(0, cfg.vocab_size, size=6).tolist())
+        late = eng.submit(rng.integers(0, cfg.vocab_size, size=6).tolist(),
+                          deadline_ticks=2)
+        eng.run()
+        assert hog.status == COMPLETED
+        assert late.status == TIMED_OUT and late.admit_step is None
+        assert "deadline" in late.error
+        assert _leftover(eng) == 0
+
+    def test_deadline_expires_mid_generation(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=1, max_len=48, max_new_tokens=20, page_size=4))
+        req = eng.submit(rng.integers(0, cfg.vocab_size, size=4).tolist(),
+                         deadline_ticks=4)
+        eng.run()
+        assert req.status == TIMED_OUT
+        assert 0 < len(req.output) < 20  # partial output preserved
+        assert _leftover(eng) == 0
+
+    def test_reject_never_fits(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=1, max_len=16, max_new_tokens=2, page_size=4))
+        ok = eng.submit(rng.integers(0, cfg.vocab_size, size=4).tolist())
+        huge = eng.submit(rng.integers(0, cfg.vocab_size, size=64).tolist())
+        eng.run()
+        assert huge.status == REJECTED and "blocks" in huge.error
+        assert ok.status == COMPLETED
+        assert _leftover(eng) == 0
+
+    def _pressure_engines(self, cfg, params, rng, **extra):
+        """Two shared-prefix requests in a pool too small for both: the
+        shared page is pinned (rc > 1) so the scheduler must preempt."""
+        head = rng.integers(0, cfg.vocab_size, size=4).tolist()
+        prompts = [head + rng.integers(0, cfg.vocab_size, size=4).tolist()
+                   for _ in range(2)]
+        refs = [_run(cfg, params, [p], slots=1, max_len=16,
+                     max_new_tokens=6, page_size=4)[0][0].output
+                for p in prompts]
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=2, max_len=16, max_new_tokens=6, page_size=4,
+            num_blocks=5, **extra))
+        return prompts, refs, eng
+
+    def test_max_retries_exhaustion_fails_request(self, qwen, rng):
+        cfg, params = qwen
+        prompts, refs, eng = self._pressure_engines(cfg, params, rng)
+        survivor = eng.submit(prompts[0])
+        victim = eng.submit(prompts[1], max_retries=0)
+        eng.run()
+        assert victim.status == FAILED and "max_retries" in victim.error
+        assert victim.preemptions == 1
+        assert survivor.status == COMPLETED and survivor.output == refs[0]
+        assert _leftover(eng) == 0
+
+    def test_retry_backoff_still_completes_identically(self, qwen, rng):
+        cfg, params = qwen
+        prompts, refs, eng = self._pressure_engines(
+            cfg, params, rng, retry_backoff=2, audit=True)
+        reqs = [eng.submit(p) for p in prompts]
+        eng.run()
+        assert eng.preemptions >= 1
+        assert [r.output for r in reqs] == refs  # recompute resume exact
+        assert all(r.status == COMPLETED for r in reqs)
+        assert getattr(reqs[1], "_not_before", 0) > 0  # backoff engaged
+        assert _leftover(eng) == 0
+
+    def test_drain_finishes_residents_keeps_queue(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(**self.BASE))
+        reqs = [eng.submit(p) for p in _prompts(cfg, rng, sizes=(6, 5, 4))]
+        eng.step()  # reqs[0] holds the single slot
+        eng.drain()
+        assert reqs[0].status == COMPLETED
+        assert [r.status for r in reqs[1:]] == [QUEUED, QUEUED]
+        assert not eng.admission_open and len(eng.queue) == 2
+        eng.admission_open = True  # reopen: queued work resumes
+        eng.run()
+        assert all(r.status == COMPLETED for r in reqs)
+
+    def test_shutdown_frees_every_page(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params,
+                            ServeConfig(audit=True, **self.BASE))
+        reqs = [eng.submit(p) for p in _prompts(cfg, rng)]
+        eng.step()
+        eng.shutdown()
+        assert all(r.done and r.status in TERMINAL for r in reqs)
+        assert sum(r.status == CANCELLED for r in reqs) >= 1  # the queued
+        assert eng.pool.in_use == 0  # prefix index flushed too
+        assert eng.prefix.pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Fault injection at the allocation / dispatch sites
+# ---------------------------------------------------------------------------
+
+
+class TestFaultInjection:
+    BASE = dict(slots=2, max_len=48, max_new_tokens=5, page_size=4)
+
+    def test_fault_site_validated(self):
+        with pytest.raises(ValueError, match="unknown fault site"):
+            Fault("cosmic_ray")
+
+    def test_injector_fires_once_per_fault(self):
+        inj = FaultInjector([Fault("pool_alloc", tick=3)], clock=lambda: 5)
+        assert inj.pending("pool_alloc") and inj.remaining == 1
+        f = inj.fire("pool_alloc")
+        assert f is not None and f.fired_at == 5
+        assert inj.fire("pool_alloc") is None  # consumed
+        assert inj.fired == {"pool_alloc": 1, "grant": 0, "poison": 0}
+
+    def test_injector_respects_clock(self):
+        now = [0]
+        inj = FaultInjector([Fault("grant", tick=4)], clock=lambda: now[0])
+        assert inj.fire("grant") is None  # not due yet
+        now[0] = 4
+        assert inj.fire("grant") is not None
+
+    def test_pool_fault_is_output_preserving(self, qwen, rng):
+        cfg, params = qwen
+        prompts = _prompts(cfg, rng)
+        ref, _ = _run(cfg, params, prompts, **self.BASE)
+        inj = FaultInjector([Fault("pool_alloc", tick=t)
+                             for t in (0, 2, 4)])
+        reqs, eng = _run(cfg, params, prompts, injector=inj,
+                         audit=True, **self.BASE)
+        assert inj.fired["pool_alloc"] == 3
+        assert [r.output for r in reqs] == [r.output for r in ref]
+        assert all(r.status == COMPLETED for r in reqs)
+        assert _leftover(eng) == 0
+
+    def test_grant_fault_forces_per_tick_fallback(self, qwen, rng):
+        cfg, params = qwen
+        prompts = _prompts(cfg, rng)
+        ref, _ = _run(cfg, params, prompts, sync_every=4, **self.BASE)
+        inj = FaultInjector([Fault("grant", tick=2)])
+        reqs, eng = _run(cfg, params, prompts, injector=inj,
+                         sync_every=4, audit=True, **self.BASE)
+        assert inj.fired["grant"] == 1
+        assert eng.window_fallbacks >= 1
+        assert [r.output for r in reqs] == [r.output for r in ref]
+
+    def test_poison_fails_exactly_the_hit_request(self, qwen, rng):
+        cfg, params = qwen
+        prompts = _prompts(cfg, rng)
+        ref, _ = _run(cfg, params, prompts, **self.BASE)
+        inj = FaultInjector([Fault("poison", tick=3, slot=0)])
+        reqs, eng = _run(cfg, params, prompts, injector=inj,
+                         audit=True, **self.BASE)
+        assert eng.poisoned_rows == 1
+        failed = [r for r in reqs if r.status == FAILED]
+        assert len(failed) == 1 and "poisoned" in failed[0].error
+        for r, rr in zip(reqs, ref):
+            if r.status == COMPLETED:
+                assert r.output == rr.output
+        assert _leftover(eng) == 0
+
+    def test_poison_inside_window_routes_per_tick(self, qwen, rng):
+        """A pending poison fault closes the multi-step window (the scan
+        has no per-row detection) so the poisoned row is still caught."""
+        cfg, params = qwen
+        inj = FaultInjector([Fault("poison", tick=3, slot=1)])
+        reqs, eng = _run(cfg, params, _prompts(cfg, rng), injector=inj,
+                         sync_every=8, audit=True, **self.BASE)
+        assert eng.poisoned_rows == 1
+        assert sum(r.status == FAILED for r in reqs) == 1
+        assert _leftover(eng) == 0
+
+
+# ---------------------------------------------------------------------------
+# Invariant auditor
+# ---------------------------------------------------------------------------
+
+
+class TestAuditor:
+    BASE = dict(slots=2, max_len=32, max_new_tokens=4, page_size=4)
+
+    def test_clean_run_audits_every_tick(self, qwen, rng):
+        cfg, params = qwen
+        _, eng = _run(cfg, params, _prompts(cfg, rng), audit=True,
+                      **self.BASE)
+        # every tick audited (the final zero-work step audits too)
+        assert eng.audits_run >= eng.steps_run > 0
+
+    def test_orphan_allocation_detected(self, qwen, rng):
+        cfg, params = qwen
+        _, eng = _run(cfg, params, _prompts(cfg, rng, sizes=(6,)),
+                      **self.BASE)
+        eng.pool.alloc(owner="leak")  # allocated, referenced by nobody
+        with pytest.raises(AuditError, match="referenced by no"):
+            audit_engine(eng)
+
+    def test_refcount_divergence_detected(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(**self.BASE))
+        eng.submit(rng.integers(0, cfg.vocab_size, size=6).tolist())
+        eng.step()  # slot 0 live and holding blocks
+        audit_engine(eng)  # sane before corruption
+        eng.pool.release([eng.tables.blocks(0)[0]])  # table -> freed page
+        with pytest.raises(AuditError):
+            audit_engine(eng)
+
+    def test_terminal_request_in_slot_detected(self, qwen, rng):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(**self.BASE))
+        req = eng.submit(rng.integers(0, cfg.vocab_size, size=6).tolist())
+        eng.step()
+        req.done = True  # bypassed _terminate: slot still held
+        with pytest.raises(AuditError, match="terminal request"):
+            audit_engine(eng)
+
+
+# ---------------------------------------------------------------------------
+# Chaos harness: seeded workloads x fault schedules
+# ---------------------------------------------------------------------------
+
+
+class TestChaos:
+    def test_fixed_schedule_smoke(self, qwen):
+        stats = chaos_smoke(seed=0, verbose=False)
+        assert stats["mismatched"] == 0
+        assert stats["leaked_pages"] == 0
+        assert stats["affected"] <= 1  # only the poisoned request
+        assert stats["faults_fired"]["pool_alloc"] >= 1
+        assert stats["audits_run"] > 0
+
+    @pytest.mark.parametrize("seed", [1, 2, 3])
+    def test_random_preserving_schedules_byte_identical(self, qwen, seed):
+        """pool/grant faults only (both output-preserving): every request
+        must complete with the exact fault-free tokens, under audit, and
+        drain back to an empty pool."""
+        cfg, params = qwen
+        rng = np.random.default_rng(seed)
+        shared = rng.integers(0, cfg.vocab_size, size=8).tolist()
+        prompts = [shared + rng.integers(0, cfg.vocab_size, size=n).tolist()
+                   for n in (3, 5, 2, 6)]
+        kw = dict(slots=2, max_len=48, max_new_tokens=5, page_size=4,
+                  num_blocks=14, sync_every=4)
+        ref, _ = _run(cfg, params, prompts, **kw)
+        inj = FaultInjector(random_schedule(
+            seed, n_faults=5, max_tick=20, sites=("pool_alloc", "grant")))
+        reqs, eng = _run(cfg, params, prompts, injector=inj, audit=True,
+                         **kw)
+        assert all(r.status == COMPLETED for r in reqs)
+        assert [r.output for r in reqs] == [r.output for r in ref]
+        eng.drain()
+        assert _leftover(eng) == 0
+        eng.shutdown()
+        assert eng.pool.in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe persistence: snapshot / restore
+# ---------------------------------------------------------------------------
+
+
+class TestSnapshotRestore:
+    KW = dict(slots=1, max_len=48, max_new_tokens=3, page_size=4,
+              prefill_chunk=4, token_budget=5)
+
+    def _warm_engine(self, cfg, params, prompt):
+        eng = ServingEngine(cfg, params, ServeConfig(**self.KW))
+        cold = eng.submit(prompt)
+        warm = eng.submit(prompt)
+        eng.run()
+        return eng, cold, warm
+
+    def test_roundtrip_restores_warm_ttft(self, qwen, rng):
+        cfg, params = qwen
+        prompt = rng.integers(0, cfg.vocab_size, size=20).tolist()
+        eng, cold, warm = self._warm_engine(cfg, params, prompt)
+        assert warm.ttft_admit_ticks < cold.ttft_admit_ticks
+        snap = eng.snapshot()
+        eng2 = ServingEngine.restore(cfg, params, ServeConfig(**self.KW),
+                                     snap)
+        audit_engine(eng2)  # grafted pages are ledger-consistent
+        restored = eng2.submit(prompt)
+        eng2.run()
+        assert restored.output == cold.output  # same tokens across restart
+        assert restored.cached_tokens == warm.cached_tokens
+        assert restored.ttft_admit_ticks == warm.ttft_admit_ticks
+        eng2.shutdown()
+        assert eng2.pool.in_use == 0
+
+    def test_snapshot_pickles_to_disk(self, qwen, rng, tmp_path):
+        cfg, params = qwen
+        prompt = rng.integers(0, cfg.vocab_size, size=20).tolist()
+        eng, cold, warm = self._warm_engine(cfg, params, prompt)
+        path = str(tmp_path / "kv.snap")
+        snap = eng.snapshot(path)
+        assert len(snap["nodes"]) == eng.prefix.pages
+        eng2 = ServingEngine.restore(cfg, params, ServeConfig(**self.KW),
+                                     path)
+        restored = eng2.submit(prompt)
+        eng2.run()
+        assert restored.output == cold.output
+        assert restored.ttft_admit_ticks == warm.ttft_admit_ticks
+
+    def test_partial_restore_when_pool_short(self, qwen, rng):
+        cfg, params = qwen
+        prompt = rng.integers(0, cfg.vocab_size, size=20).tolist()
+        eng, _, _ = self._warm_engine(cfg, params, prompt)
+        snap = eng.snapshot()
+        assert len(snap["nodes"]) == 5  # the full 20-token prompt chain
+        small = ServingEngine(cfg, params, ServeConfig(
+            num_blocks=3, **self.KW))  # shorter than the snapshot chain
+        got = small.load_snapshot(snap)
+        assert got < len(snap["nodes"])
+        audit_engine(small)  # the partial graft is still consistent
+
+    def test_config_mismatch_is_loud(self, qwen, rng):
+        cfg, params = qwen
+        prompt = rng.integers(0, cfg.vocab_size, size=20).tolist()
+        eng, _, _ = self._warm_engine(cfg, params, prompt)
+        snap = eng.snapshot()
+        other = ServingEngine(cfg, params, ServeConfig(
+            slots=1, max_len=48, max_new_tokens=3, page_size=8))
+        with pytest.raises(ValueError, match="page_size"):
+            other.load_snapshot(snap)
+        bad = dict(snap, format=99)
+        fresh = ServingEngine(cfg, params, ServeConfig(**self.KW))
+        with pytest.raises(ValueError, match="format"):
+            fresh.load_snapshot(bad)
+
+    def test_snapshot_requires_prefix_cache(self, qwen):
+        cfg, params = qwen
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=1, max_len=16, max_new_tokens=1, prefix_cache=False))
+        with pytest.raises(ValueError, match="prefix cache"):
+            eng.snapshot()

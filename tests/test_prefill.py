@@ -246,10 +246,14 @@ def test_budget_never_exceeded(rng):
     assert eng.token_budget == 20
     assert eng.tick_tokens and max(eng.tick_tokens) <= eng.token_budget
 
-    # a budget below the slot count floors at `slots` (decode always fits)
-    # and the chunk clamps so a grant still fits the leftover room
+    # a budget below the slot count can never fit a full generation batch
+    # in one tick — rejected at construction rather than silently floored
+    with pytest.raises(ValueError, match="token_budget"):
+        ServeConfig(slots=4, max_len=32, max_new_tokens=2, token_budget=1)
+
+    # budget == slots is the legal floor and clamps the chunk to 1
     eng2 = ServingEngine(cfg, params, ServeConfig(
-        slots=4, max_len=32, max_new_tokens=2, token_budget=1))
+        slots=4, max_len=32, max_new_tokens=2, token_budget=4))
     assert eng2.token_budget == 4
     assert eng2.prefill_chunk == 1
 

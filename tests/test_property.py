@@ -395,3 +395,48 @@ class TestKernelProperties:
         rng = np.random.default_rng(seed)
         x = rng.standard_normal((m, n), dtype=np.float32)
         np.testing.assert_array_equal(np.asarray(kern(x)), x)
+
+
+class TestFaultToleranceProperties:
+    """Chaos property: *no* random fault schedule may leak pages or break
+    refcount conservation.  The per-tick auditor (``audit=True``) checks
+    the full ledger after every step, so any divergence raises at the
+    tick that caused it; the end-state assertions pin the freed-page
+    guarantee after drain and shutdown."""
+
+    @given(
+        st.integers(0, 2**16),  # schedule seed
+        st.integers(1, 6),  # faults in the schedule
+        st.booleans(),  # include poison faults (request-terminating)
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_random_fault_schedules_never_leak(self, seed, n_faults,
+                                               with_poison):
+        import jax
+
+        from repro.configs import get_config
+        from repro.models import lm as _lm
+        from repro.serving import FaultInjector, ServeConfig, ServingEngine
+        from repro.serving import random_schedule
+
+        cfg = get_config("qwen2_1_5b").reduced()
+        if "qwen" not in _TINY_PARAMS:
+            _TINY_PARAMS["qwen"] = _lm.init(cfg, jax.random.PRNGKey(0))
+        params = _TINY_PARAMS["qwen"]
+        sites = ("pool_alloc", "grant") + (("poison",) if with_poison else ())
+        inj = FaultInjector(random_schedule(
+            seed, n_faults=n_faults, max_tick=16, sites=sites, slots=2))
+        eng = ServingEngine(cfg, params, ServeConfig(
+            slots=2, max_len=32, max_new_tokens=4, page_size=4,
+            num_blocks=10, sync_every=4, audit=True), injector=inj)
+        rng = np.random.default_rng(seed)
+        shared = rng.integers(0, cfg.vocab_size, size=4).tolist()
+        for n in (3, 5, 2, 4):
+            eng.submit(shared + rng.integers(0, cfg.vocab_size,
+                                             size=n).tolist())
+        eng.run(max_steps=200)  # audits every tick
+        eng.drain()
+        held = eng.prefix.pages if eng.prefix is not None else 0
+        assert eng.pool.in_use == held  # only the index holds pages
+        eng.shutdown()
+        assert eng.pool.in_use == 0 and eng.pool.free == eng.pool.num_blocks

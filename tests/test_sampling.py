@@ -74,3 +74,49 @@ class TestTopPClamp:
         key = jax.random.PRNGKey(5)
         got = np.asarray(sampling.sample(logits, key, temperature=1.0, top_p=0.1))
         np.testing.assert_array_equal(got, np.zeros(16, np.int32))
+
+
+class TestPoisonedRowGuard:
+    """An all--inf or all-NaN logits row (fully masked distribution, or
+    numerical corruption upstream) must never yield a garbage token id:
+    the guard falls back to argmax semantics where NaN counts as -inf, so
+    a fully poisoned row deterministically emits id 0 — always a valid
+    vocab index — and the serving engine separately fails the request."""
+
+    @pytest.mark.parametrize("fill", [-np.inf, np.nan])
+    @pytest.mark.parametrize("temperature", [0.0, 1.0])
+    def test_fully_poisoned_row_emits_id_zero(self, fill, temperature):
+        logits = jnp.full((2, 8), fill, dtype=jnp.float32)
+        got = np.asarray(sampling.sample(logits, jax.random.PRNGKey(0),
+                                         temperature=temperature))
+        assert got.dtype == np.int32
+        np.testing.assert_array_equal(got, [0, 0])
+
+    @pytest.mark.parametrize("temperature", [0.0, 1.0])
+    def test_mixed_batch_leaves_healthy_rows_alone(self, rng, temperature):
+        healthy = _logits(rng, b=3, v=8)
+        poisoned = healthy.at[1].set(jnp.nan)
+        key = jax.random.PRNGKey(2)
+        got = np.asarray(sampling.sample(poisoned, key,
+                                         temperature=temperature))
+        want = np.asarray(sampling.sample(healthy, key,
+                                          temperature=temperature))
+        assert got[1] == 0  # NaN row guarded
+        assert (0 <= got).all() and (got < 8).all()
+        if temperature == 0.0:  # greedy: rows are independent
+            np.testing.assert_array_equal(got[[0, 2]], want[[0, 2]])
+
+    def test_guard_survives_top_k_top_p_masking(self, rng):
+        # top_p/top_k can mask a row down to nothing only via poisoned
+        # input; either way categorical's softmax sees all -inf -> NaN
+        logits = _logits(rng, b=2, v=8).at[0].set(-jnp.inf)
+        got = np.asarray(sampling.sample(
+            logits, jax.random.PRNGKey(3), temperature=0.7, top_k=4,
+            top_p=0.9))
+        assert got[0] == 0
+        assert 0 <= got[1] < 8
+
+    def test_sample_step_greedy_guards_too(self):
+        logits = jnp.full((1, 8), jnp.nan, dtype=jnp.float32)
+        tok, key = sampling.sample_step(logits, jax.random.PRNGKey(4))
+        assert int(tok[0]) == 0

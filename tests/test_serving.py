@@ -1178,3 +1178,65 @@ class TestQuantizedKV:
             blocks_for_bytes(budget, fp.pool.page_bytes) == 64
         with pytest.raises(ValueError):
             blocks_for_bytes(budget, 0)
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig construction validation (fail loud, not mid-serve)
+# ---------------------------------------------------------------------------
+
+
+class TestServeConfigValidation:
+    OK = dict(slots=2, max_len=32, max_new_tokens=4)
+
+    def test_defaults_construct(self):
+        ServeConfig(**self.OK)  # the happy path stays happy
+
+    @pytest.mark.parametrize("field", [
+        "slots", "max_len", "max_new_tokens", "page_size", "prefill_chunk",
+        "num_blocks",
+    ])
+    @pytest.mark.parametrize("bad", [0, -3])
+    def test_nonpositive_sizes_rejected(self, field, bad):
+        with pytest.raises(ValueError, match=field):
+            ServeConfig(**{**self.OK, field: bad})
+
+    def test_budget_below_slots_rejected(self):
+        with pytest.raises(ValueError, match="token_budget"):
+            ServeConfig(slots=4, max_len=32, max_new_tokens=2,
+                        token_budget=3)
+
+    def test_unknown_kv_dtype_rejected(self):
+        with pytest.raises(ValueError, match="kv_dtype"):
+            ServeConfig(**self.OK, kv_dtype="fp8")
+
+    def test_unknown_cache_and_prefill_rejected(self):
+        with pytest.raises(ValueError, match="cache"):
+            ServeConfig(**self.OK, cache="unified")
+        with pytest.raises(ValueError, match="prefill"):
+            ServeConfig(**self.OK, prefill="speculative")
+
+    def test_negative_backoff_rejected(self):
+        with pytest.raises(ValueError, match="retry_backoff"):
+            ServeConfig(**self.OK, retry_backoff=-1)
+
+
+def test_int8_prefix_shared_preemption_resumes_exactly(rng):
+    """A request holding prefix-shared *quantized* pages is preempted under
+    pool pressure and resumes by recompute: the shared int8 page stays
+    pinned in the index (refcount intact), the resumed replay re-attaches
+    it, and the tokens match isolated single-slot int8 runs bit-for-bit —
+    sharing + COW bookkeeping is format-agnostic."""
+    cfg = _qwen()
+    params = _params(cfg)
+    head = rng.integers(0, cfg.vocab_size, size=4).tolist()
+    prompts = [head + rng.integers(0, cfg.vocab_size, size=4).tolist()
+               for _ in range(2)]
+    base = dict(max_len=16, max_new_tokens=6, page_size=4, kv_dtype="int8")
+    refs = [_run_engine(cfg, params, [p], slots=1, **base)[0][0]
+            for p in prompts]
+    out, reqs, eng = _run_engine(cfg, params, prompts, slots=2,
+                                 num_blocks=5, audit=True, **base)
+    assert eng.preemptions >= 1 and reqs[1].preemptions >= 1
+    assert out == refs  # recompute resume over quantized pages is lossless
+    assert eng.pages_shared > 0
+    assert eng.pool.in_use == eng.prefix.pages  # only the index holds pages

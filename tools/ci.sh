@@ -15,6 +15,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # the newest surface and must not rot against jax/numpy API churn.
 python -m pytest -x -q -W 'error::DeprecationWarning:repro\.serving' "$@"
 
+# Seeded chaos smoke (ISSUE-8): a fixed workload x fault schedule with the
+# invariant auditor on every tick — unaffected requests must stay
+# byte-identical to the fault-free run and shutdown must free every page.
+python -m repro.serving.faults --seed 0
+
 # Exercise the serving path end-to-end on a tiny config: engine + paged
 # cache + scheduler + both cache layouts asserting identical outputs, the
 # chunked-prefill fast path (asserts chunked prefill finishes within
