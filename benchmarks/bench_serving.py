@@ -69,6 +69,14 @@ allocated pages.  Phase B snapshots the warm prefix cache, restores it
 into a fresh engine, and checks the restored warm TTFT matches the
 pre-restart warm hit instead of paying the cold prefill.
 
+Workload 9 — *guarded dispatch under table corruption* (ISSUE-9): the same
+shared-prefix workload fault-free, then under a schedule of injected
+block-table corruptions (out-of-range id / reserved page 0 / duplicated
+page, cycling).  The dispatch guard must intercept every corruption before
+a page is touched, FAILing exactly the hit request, with all surviving
+requests byte-identical to the fault-free run and zero pages leaked —
+recorded as the regression-gated ``guard_unaffected_byte_identity``.
+
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json]
 """
 from __future__ import annotations
@@ -768,6 +776,84 @@ def _chaos_workload(cfg, params, smoke: bool):
     return rows
 
 
+def _guard_workload(cfg, params, smoke: bool):
+    """Workload 9 — guarded dispatch under table corruption (ISSUE-9)."""
+    from repro.serving import Fault, FaultInjector
+
+    if smoke:
+        n_req, max_new = 6, 5
+    else:
+        n_req, max_new = 9, 7
+    rng = np.random.default_rng(9)
+    shared = rng.integers(0, cfg.vocab_size, size=8).tolist()
+    prompts = [shared + rng.integers(0, cfg.vocab_size, size=int(t)).tolist()
+               for t in rng.integers(2, 7, size=n_req)]
+    base = dict(slots=2, max_len=48, max_new_tokens=max_new, page_size=4,
+                num_blocks=14, sync_every=4)
+
+    def drive(label, injector=None, **kw):
+        eng = ServingEngine(cfg, params, ServeConfig(**dict(base, **kw)),
+                            injector=injector)
+        reqs = [eng.submit(p) for p in prompts]
+        t0 = time.time()
+        eng.run(max_steps=10_000)
+        eng.drain()
+        eng.shutdown()
+        dt = time.time() - t0
+        toks = sum(len(r.output) for r in reqs)
+        return eng, reqs, {
+            "mode": label,
+            "tok_per_s": round(toks / max(dt, 1e-9), 2),
+            "steps": eng.steps_run,
+            "n_req": n_req,
+            "table_corruptions": eng.table_corruptions,
+            "guard_failures": eng.guard_failures,
+            "leaked_pages": eng.pool.in_use,  # after shutdown: must be 0
+            "outputs": [r.output for r in reqs],
+        }
+
+    _, ref_reqs, ref_row = drive("guard_faultfree")
+    # spaced wider than sync_every so each corruption lands on its own
+    # dispatch and the injector cycles through all three flavors
+    schedule = [
+        Fault("table_corrupt", tick=3),
+        Fault("table_corrupt", tick=9, slot=1),
+        Fault("table_corrupt", tick=15),
+    ]
+    eng, reqs, row = drive("guard_injected",
+                           injector=FaultInjector(schedule), audit=True)
+    completed = [r for r in reqs if r.status == "completed"]
+    identical = sum(r.output == ref_reqs[reqs.index(r)].output
+                    for r in completed)
+    failed = [r for r in reqs if r.status == "failed"]
+    row["completed"] = len(completed)
+    row["affected"] = len(failed)
+    row["unaffected_identical"] = round(identical / max(len(completed), 1), 4)
+    if row["table_corruptions"] < 1:
+        raise AssertionError("no table corruption came due (run too short)")
+    if row["guard_failures"] < 1 or not failed:
+        raise AssertionError("injected corruption was never caught")
+    if any("dispatch guard" not in r.error for r in failed):
+        raise AssertionError("a FAILED request does not blame the guard")
+    if identical != len(completed):
+        raise AssertionError(
+            f"{len(completed) - identical} guard-survivor requests diverged")
+    if row["leaked_pages"] != 0:
+        raise AssertionError(f"shutdown leaked {row['leaked_pages']} pages")
+    rows = [ref_row, row]
+    print(f"# serving: guarded dispatch under table corruption ({n_req} "
+          f"reqs, {len(schedule)} injected corruptions, audit every tick)")
+    print("mode,tok_per_s,steps,table_corruptions,guard_failures,"
+          "completed,affected,unaffected_identical,leaked_pages")
+    for r in rows:
+        print(f"{r['mode']},{r['tok_per_s']},{r['steps']},"
+              f"{r['table_corruptions']},{r['guard_failures']},"
+              f"{r.get('completed', n_req)},{r.get('affected', 0)},"
+              f"{r.get('unaffected_identical', 1.0)},{r['leaked_pages']}")
+    print()
+    return rows
+
+
 def derived_metrics(rows):
     """Cross-row metrics for the BENCH_serving.json trajectory record.
 
@@ -854,6 +940,12 @@ def derived_metrics(rows):
         # better and slip past the regression gate)
         out["drain_leaked_pages"] = round(
             1.0 / (1.0 + c["leaked_pages"]), 4)
+    if "guard_injected" in by_mode:
+        g = by_mode["guard_injected"]
+        # fraction of guard-survivor requests byte-identical to the
+        # fault-free run (1.0 = the guard FAILs only the hit request and
+        # perturbs nobody else)
+        out["guard_unaffected_byte_identity"] = g["unaffected_identical"]
     if "snapshot_restore" in by_mode:
         s = by_mode["snapshot_restore"]
         # crash-safety payoff: cold prefill ticks over the restored
@@ -874,6 +966,7 @@ def run(smoke: bool = False):
     rows += _mla_decode_workload(smoke)
     rows += _quant_workload(cfg, params, smoke)
     rows += _chaos_workload(cfg, params, smoke)
+    rows += _guard_workload(cfg, params, smoke)
     # outputs are asserted above; keep the JSON/return rows lean
     for r in rows:
         r.pop("outputs", None)

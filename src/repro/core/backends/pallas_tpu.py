@@ -17,9 +17,10 @@ from typing import Any, Dict, List
 import numpy as np
 
 from ..buffer import GLOBAL, SCALAR, TileBuffer
-from ..errors import LoweringError, ScheduleError
+from ..errors import LoweringError, ScheduleError, VerifyError
 from ..expr import BinExpr, ConstExpr, Expr, VarExpr, evaluate
 from ..lowering.indexing import make_index_map, no_loads
+from ..lowering.verify import alias_wiring
 from ..lowering.module import CompiledKernel, LoweredModule
 from ..lowering.phases import LOOP, POST, PRE
 from ..lowering.windows import _is_onchip
@@ -129,10 +130,18 @@ def emit_pallas(module: LoweredModule) -> CompiledKernel:
         pltpu.VMEM(b.shape, jnp.dtype(b.dtype)) for b in scratch_bufs
     ]
     # alias operand indices are positional over *all* pallas_call inputs —
-    # scalar-prefetch operands included
+    # scalar-prefetch operands included.  Cross-check against the verifier's
+    # canonical wiring: a drift between the operand list assembled here and
+    # the windows' aliased marks would silently alias the wrong buffers.
     input_output_aliases = {
         n_scalars + n_in_ops + i: j for i, j in enumerate(aliased_js)
     }
+    expected_aliases = alias_wiring(module)
+    if input_output_aliases != expected_aliases:
+        raise VerifyError(
+            f"{program.name}: input_output_aliases {input_output_aliases} "
+            f"disagrees with the verifier wiring {expected_aliases}"
+        )
 
     kext = pipe.extent if pipe is not None else None
 

@@ -77,6 +77,11 @@ class LoweredModule:
     out_window_of: Dict[int, int] = dataclasses.field(default_factory=dict)
     # -- estimate_cost -----------------------------------------------------
     cost: Optional[KernelCost] = None
+    # -- verify ------------------------------------------------------------
+    # runtime obligations (verify.Obligation): checks the static verifier
+    # could not prove because they depend on runtime scalars (table-directed
+    # windows); the dispatch guard in kernels/ops.py discharges them.
+    obligations: List[Any] = dataclasses.field(default_factory=list)
 
     # ---------------------------------------------------------------------
     @property

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Tuple
 
+from ..errors import TileError
 from ..infer import infer_layouts
 from ..schedule import Schedule, plan_vmem
 from .cost import estimate_cost
@@ -20,6 +21,7 @@ from .fingerprint import program_fingerprint, schedule_key
 from .grid import plan_grid
 from .module import LoweredModule
 from .phases import LOOP, split_phases
+from .verify import pass_verify
 from .windows import collect_windows
 
 
@@ -106,6 +108,7 @@ PIPELINE: List[Tuple[str, Callable[[LoweredModule], None]]] = [
     ("plan_stages", pass_plan_stages),
     ("plan_vmem", pass_plan_vmem),
     ("plan_params", pass_plan_params),
+    ("verify", pass_verify),
     ("estimate_cost", pass_estimate_cost),
 ]
 
@@ -118,10 +121,20 @@ _ANALYSIS_CACHE: Dict[Tuple[str, tuple], LoweredModule] = {}
 
 
 def run_pipeline(program, schedule: Schedule) -> LoweredModule:
-    """Run every pass; no caching (unit tests / debugging)."""
+    """Run every pass; no caching (unit tests / debugging).
+
+    A TileError escaping a pass is tagged with the program name and the
+    failing pass (``TileError.context``) so a mid-pipeline failure names
+    its kernel instead of surfacing as a bare message three layers up.
+    """
     m = LoweredModule(program, schedule)
-    for _name, p in PIPELINE:
-        p(m)
+    for name, p in PIPELINE:
+        try:
+            p(m)
+        except TileError as e:
+            if e.context is None:
+                e.context = f"program {program.name!r}, pass {name!r}"
+            raise
     return m
 
 

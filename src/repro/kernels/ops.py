@@ -50,6 +50,104 @@ from .prefill_attention import (
 _DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
 _CACHE: dict = {}
 
+# Obligation kinds (core.lowering.verify.Obligation) that guard_dispatch
+# discharges.  A future kernel emitting a new kind must either extend the
+# guard or keep the obligation out of the serving dispatch path; the test
+# suite asserts every paged kernel's obligations stay within this set.
+GUARDED_KINDS = frozenset({"table_in_range", "table_writes_disjoint"})
+
+
+def guard_dispatch(tables, num_pages, page_size, work):
+    """Discharge the static verifier's runtime obligations for one paged
+    dispatch, before any page is read or written.
+
+    ``tables`` is the (rows, max_pages) block table, ``num_pages`` the pool
+    extent on the page axis (page 0 reserved as the garbage sink), and
+    ``work`` an iterable of ``(row, read_end, write_begin, write_end)``
+    token positions: the row will read KV for positions ``[0, read_end)``
+    and write positions ``[write_begin, write_end)``.
+
+    Checks (cheap, host-side, O(tokens) ints):
+
+    * capacity — ``read_end``/``write_end`` within ``max_pages*page_size``;
+    * ``table_in_range`` — every entry backing a live position lies in
+      ``[1, num_pages)`` (0 is the reserved sink: a live position mapped
+      there would read garbage or lose its write);
+    * ``table_writes_disjoint`` — no page is written by two rows, written
+      twice within a row, or written by one row while live in another.
+
+    All violations are collected and raised as one :class:`GuardError`
+    (``.violations`` = list of ``(row, kind, message)``) so a batch
+    dispatcher can fail exactly the offending rows and keep the rest.
+    """
+    import numpy as np
+
+    from repro.core.errors import GuardError
+
+    tb = np.asarray(tables)
+    max_pages = tb.shape[1]
+    capacity = max_pages * page_size
+    violations = []
+    live: dict = {}  # row -> np entries backing positions [0, read_end)
+    writes: dict = {}  # row -> np entries written in [write_begin, write_end)
+    for row, read_end, wbeg, wend in work:
+        if read_end > capacity or wend > capacity:
+            violations.append(
+                (row, "table_in_range",
+                 f"length {max(read_end, wend)} exceeds page capacity "
+                 f"{capacity} ({max_pages} pages x {page_size})")
+            )
+            continue
+        n_live = -(-int(read_end) // page_size)
+        entries = tb[row, :n_live].astype(np.int64)
+        bad = np.flatnonzero((entries < 1) | (entries >= num_pages))
+        if bad.size:
+            j = int(bad[0])
+            violations.append(
+                (row, "table_in_range",
+                 f"entry {j} is page {int(entries[j])}, not in "
+                 f"[1, {num_pages}) (page 0 is the reserved sink)")
+            )
+            continue
+        live[row] = entries
+        if wend > wbeg:
+            pbeg, pend = int(wbeg) // page_size, -(-int(wend) // page_size)
+            writes[row] = tb[row, pbeg:pend].astype(np.int64)
+
+    writer_of: dict = {}  # page -> first writer row
+    bad_rows = set()
+    for row, pages in writes.items():
+        for pg in pages.tolist():
+            other = writer_of.get(pg)
+            if other is not None and (other != row or
+                                      pages.tolist().count(pg) > 1):
+                for r in {row, other} - bad_rows:
+                    violations.append(
+                        (r, "table_writes_disjoint",
+                         f"page {pg} written by rows {other} and {row}")
+                    )
+                bad_rows.update({row, other})
+            else:
+                writer_of[pg] = row
+    for row, pages in writes.items():
+        if row in bad_rows:
+            continue
+        pset = set(pages.tolist())
+        for other, lv in live.items():
+            if other == row:
+                continue
+            shared = pset.intersection(lv.tolist())
+            if shared:
+                violations.append(
+                    (row, "table_writes_disjoint",
+                     f"page {sorted(shared)[0]} written by row {row} while "
+                     f"live in row {other}")
+                )
+                bad_rows.add(row)
+                break
+    if violations:
+        raise GuardError(violations)
+
 
 def default_backend() -> str:
     if _DEFAULT != "auto":

@@ -53,6 +53,11 @@ def main(argv=None):
                          "tick (page conservation, refcounts, radix "
                          "reachability, slot hygiene); raises AuditError "
                          "at the tick the books diverge")
+    ap.add_argument("--guards", choices=["on", "off"], default="on",
+                    help="discharge the kernels' runtime obligations "
+                         "(block-table range + disjoint-write checks) "
+                         "before every paged dispatch; 'off' benchmarks "
+                         "raw dispatch cost without the host-side checks")
     ap.add_argument("--deadline-ticks", type=int, default=None,
                     help="per-request deadline in engine ticks; expired "
                          "requests exit TIMED_OUT with partial output")
@@ -74,7 +79,8 @@ def main(argv=None):
                     num_blocks=args.num_blocks, prefill=args.prefill,
                     prefill_chunk=args.prefill_chunk,
                     token_budget=args.token_budget,
-                    sync_every=args.sync_every, audit=args.audit),
+                    sync_every=args.sync_every, audit=args.audit,
+                    guards=args.guards == "on"),
     )
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):

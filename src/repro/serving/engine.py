@@ -102,6 +102,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.errors import GuardError
+from repro.kernels.ops import guard_dispatch
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -318,6 +320,14 @@ class ServeConfig:
     # Under a preemption storm, backoff lets the slots drain instead of
     # thrashing the same victims through recompute-resume every tick.
     retry_backoff: int = 0
+    # discharge the kernels' runtime obligations (core.lowering.verify)
+    # before every paged dispatch: block-table entries in range, no
+    # duplicate writable pages, lengths within capacity.  A violation FAILs
+    # exactly the offending request (graceful degradation) instead of
+    # letting a corrupt table scribble on another request's pages.  On by
+    # default; opt out (e.g. to benchmark raw dispatch cost) with
+    # ``guards=False`` / ``--guards off``.
+    guards: bool = True
 
     def __post_init__(self):
         # loud at construction, not a shape error three layers down
@@ -539,6 +549,9 @@ class ServingEngine:
         self.admission_open = True  # drain()/shutdown() close intake
         self.poisoned_rows = 0  # logits rows with no finite value seen
         self.audits_run = 0  # invariant audits executed (scfg.audit)
+        self.guard_failures = 0  # requests FAILed by the dispatch guard
+        self.table_corruptions = 0  # injected table_corrupt faults fired
+        self._corrupt_mode = 0  # cycles injected-corruption flavors
         self.injector = injector
         if injector is not None:
             injector.bind_clock(lambda: self.steps_run)
@@ -957,6 +970,16 @@ class ServingEngine:
                         self._tables_dirty = True
                 return None
             self._apply_cow(pairs)
+            spans = [(s, min(n, int(rem[s]) + 1)) for s in active]
+            if len(self._guard_work(spans)) != len(spans):
+                # a guard violation FAILed the blamed slot(s): give back
+                # the survivors' grow-ahead and fall back to the per-tick
+                # path, whose own guard re-checks the trimmed dispatch
+                for s in active:
+                    if self.slot_req[s] is not None:
+                        if self.tables.trim(s, int(self.pos[s]) + 1):
+                            self._tables_dirty = True
+                return None
         loop = self._loop_fns.get(n)
         if loop is None:
             loop = self._loop_fns[n] = _decode_loop_fn(
@@ -1096,6 +1119,79 @@ class ServingEngine:
             mask[rows[f.slot % len(rows)]] = True
         return mask
 
+    def _fire_table_corrupt(self, work: List[Tuple[int, int]]):
+        """Due ``table_corrupt`` faults overwrite one device-table entry of
+        a dispatched slot — the page backing its write position, so the bad
+        entry sits inside both the guarded live prefix and the write range.
+        Corruption is physical: it fires whether or not guards are enabled
+        (with guards off, the invariant auditor is what notices the row
+        diverging from the block ledger).  Flavors cycle deterministically:
+        out-of-range id, reserved page 0 in the live prefix, duplicate of
+        another dispatched row's page."""
+        if self.injector is None or self.tables is None or not work:
+            return
+        ps = self.pool.page_size
+        out_of_range = self.pool.base + self.pool.num_blocks + 5
+        while True:
+            f = self.injector.fire("table_corrupt")
+            if f is None:
+                break
+            s, n = work[f.slot % len(work)]
+            j = max(0, -(-(int(self.pos[s]) + n) // ps) - 1)
+            mode = self._corrupt_mode % 3
+            self._corrupt_mode += 1
+            if mode == 0:
+                bad = out_of_range
+            elif mode == 1:
+                bad = 0  # reserved sink page inside the live prefix
+            else:
+                other = next((t for t, _ in work if t != s
+                              and self.tables.num_blocks(t) > 0), None)
+                bad = (self.tables.blocks(other)[0]
+                       if other is not None else out_of_range)
+            self.tables.poke(s, j, bad)
+            self._tables_dirty = True
+            self.table_corruptions += 1
+
+    def _guard_work(self, work: List[Tuple[int, int]],
+                    ) -> List[Tuple[int, int]]:
+        """Discharge the kernels' runtime obligations for the ``(slot,
+        n_tokens)`` pairs about to dispatch (core.lowering.verify emits
+        them; this is where the engine pays): every live block-table entry
+        in range, no duplicate writable pages, lengths within capacity.  A
+        violating slot FAILs through ``_terminate`` — graceful degradation,
+        never a kernel scribbling on another request's pages — and is
+        dropped from the dispatch; the survivors proceed untouched."""
+        if self.tables is None or not work:
+            return work
+        self._fire_table_corrupt(work)
+        if not self.scfg.guards:
+            return work
+        rows = []
+        for s, n in work:
+            p = int(self.pos[s])
+            rows.append((s, p + n, p, p + n))
+        try:
+            guard_dispatch(
+                self.tables.tables(),
+                self.pool.base + self.pool.num_blocks,
+                self.pool.page_size, rows,
+            )
+        except GuardError as e:
+            blamed = sorted({row for row, _, _ in e.violations})
+            detail = {row: f"{kind}: {msg}"
+                      for row, kind, msg in reversed(e.violations)}
+            for s in blamed:
+                req = self.slot_req[s]
+                if req is None:
+                    continue
+                self.guard_failures += 1
+                self._terminate(req, FAILED, slot=s,
+                                error=f"dispatch guard: {detail[s]}")
+            dead = set(blamed)
+            return [(s, n) for s, n in work if s not in dead]
+        return work
+
     def _apply_cow(self, pairs: List[Tuple[int, int]]):
         """Run the device-side page copies for COW repoints.  Pairs are
         padded to a power-of-two count to bound jit trace variants; padding
@@ -1122,10 +1218,11 @@ class ServingEngine:
             active, pairs = self._cow_or_preempt(
                 [(s, int(self.pos[s])) for s in active]
             )
+            self._apply_cow(pairs)
+            active = [s for s, _ in self._guard_work([(s, 1) for s in active])]
             if not active:
                 self.dispatches -= 1  # nothing actually dispatched
                 return 0
-            self._apply_cow(pairs)
         feed = np.zeros((self.scfg.slots,), np.int32)
         live = np.zeros((self.scfg.slots,), bool)
         full_len: Dict[int, int] = {}
@@ -1184,6 +1281,7 @@ class ServingEngine:
                 [(s, int(self.pos[s])) for s in gen]
             )
             self._apply_cow(pairs)
+            gen = [s for s, _ in self._guard_work([(s, 1) for s in gen])]
         if gen:
             feed = np.zeros((self.scfg.slots,), np.int32)
             live = np.zeros((self.scfg.slots,), bool)
@@ -1220,6 +1318,7 @@ class ServingEngine:
             )
             chunk_lens = {s: chunk_lens[s] for s in ok}
             self._apply_cow(pairs)
+            chunk_lens = dict(self._guard_work(list(chunk_lens.items())))
         if chunk_lens:
             width = self.prefill_chunk
             toks = np.zeros((self.scfg.slots, width), np.int32)

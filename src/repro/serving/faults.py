@@ -14,12 +14,19 @@ through the allocation and dispatch sites the engine already has —
   sampling (the engine routes this through the per-tick step so the row is
   detectable), modelling numerical corruption from a bad kernel or flaky
   device memory.
+* ``"table_corrupt"`` — one device block-table entry of a dispatched slot
+  is overwritten (out-of-range id / reserved page 0 / duplicate of another
+  row's page, cycling), modelling a corrupted table upload.  The dispatch
+  guard (``ServeConfig.guards``) must reject the row before any page is
+  read or written; with guards off, :func:`audit_engine`'s ledger check is
+  what notices.
 
 Pool and grant faults are *output-preserving* by the engine's own design
 (preemption resumes by recompute, grant failure degrades to per-tick
 stepping), so a chaos run can assert byte-identical outputs for every
-request a fault didn't terminate.  Poison faults fail the affected request
-(``status="failed"``) and must leave everyone else untouched.
+request a fault didn't terminate.  Poison and table-corrupt faults fail
+the affected request (``status="failed"``) and must leave everyone else
+untouched.
 
 :func:`audit_engine` is the live counterpart of the offline hypothesis
 properties in tests/test_property.py: with ``ServeConfig.audit=True`` the
@@ -42,7 +49,7 @@ import numpy as np
 
 from .paged_cache import blocks_for
 
-SITES = ("pool_alloc", "grant", "poison")
+SITES = ("pool_alloc", "grant", "poison", "table_corrupt")
 
 
 @dataclasses.dataclass
@@ -282,7 +289,7 @@ def chaos_smoke(seed: int = 0, verbose: bool = True) -> dict:
     schedule = [
         Fault("pool_alloc", tick=2), Fault("poison", tick=4, slot=1),
         Fault("pool_alloc", tick=6), Fault("grant", tick=7),
-        Fault("pool_alloc", tick=10),
+        Fault("pool_alloc", tick=10), Fault("table_corrupt", tick=12),
     ]
     eng, reqs = drive(FaultInjector(schedule))
     eng.drain()
@@ -302,9 +309,14 @@ def chaos_smoke(seed: int = 0, verbose: bool = True) -> dict:
         "preemptions": eng.preemptions,
         "leaked_pages": eng.pool.in_use,
         "audits_run": eng.audits_run,
+        "table_corruptions": eng.table_corruptions,
+        "guard_failures": eng.guard_failures,
     }
     if mismatched:
         raise AuditError(f"unaffected requests diverged: uids {mismatched}")
+    if eng.table_corruptions and not eng.guard_failures:
+        raise AuditError(
+            f"table corruption fired but the guard caught nothing: {summary}")
     if eng.pool.in_use != 0:
         raise AuditError(
             f"shutdown leaked {eng.pool.in_use} pages: {summary}")

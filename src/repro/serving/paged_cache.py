@@ -311,6 +311,16 @@ class SlotTables:
     def tables(self) -> np.ndarray:
         return self._np.copy()
 
+    def poke(self, slot: int, idx: int, value: int) -> int:
+        """Chaos hook: overwrite one *device-table* entry without touching
+        the block ledger (``_blocks`` stays truthful, so release paths and
+        page conservation are unaffected).  Models a corrupted table upload
+        — the dispatch guard is expected to catch the divergence before
+        any kernel consumes it.  Returns the previous entry."""
+        prev = int(self._np[slot, idx])
+        self._np[slot, idx] = int(value)
+        return prev
+
     def lookup(self, slot: int, pos: int) -> int:
         """Physical page holding token position ``pos`` of ``slot``."""
         page = pos // self.pool.page_size

@@ -227,7 +227,8 @@ class TestFaultInjection:
         f = inj.fire("pool_alloc")
         assert f is not None and f.fired_at == 5
         assert inj.fire("pool_alloc") is None  # consumed
-        assert inj.fired == {"pool_alloc": 1, "grant": 0, "poison": 0}
+        assert inj.fired == {"pool_alloc": 1, "grant": 0, "poison": 0,
+                             "table_corrupt": 0}
 
     def test_injector_respects_clock(self):
         now = [0]
@@ -331,6 +332,90 @@ class TestAuditor:
 
 
 # ---------------------------------------------------------------------------
+# Dispatch guard: runtime obligations discharged before every paged launch
+# ---------------------------------------------------------------------------
+
+
+class TestGuardedDispatch:
+    BASE = dict(slots=2, max_len=48, max_new_tokens=6, page_size=4,
+                num_blocks=14, sync_every=4)
+
+    def _workload(self, cfg, rng):
+        shared = rng.integers(0, cfg.vocab_size, size=8).tolist()
+        return [shared + rng.integers(0, cfg.vocab_size, size=n).tolist()
+                for n in (3, 5, 2, 6)]
+
+    def test_guards_off_matches_guards_on_when_clean(self, qwen, rng):
+        """The guard observes — with no corruption it must not change a
+        single token, whatever path (window / chunked / replay) runs."""
+        cfg, params = qwen
+        prompts = self._workload(cfg, rng)
+        on, eng_on = _run(cfg, params, prompts, **self.BASE)
+        off, eng_off = _run(cfg, params, prompts, guards=False, **self.BASE)
+        assert [r.output for r in on] == [r.output for r in off]
+        assert eng_on.guard_failures == 0
+        assert eng_off.scfg.guards is False
+
+    def test_table_corrupt_fails_only_the_hit_request(self, qwen, rng):
+        """The acceptance scenario: an injected corrupt table entry FAILs
+        exactly the dispatched request it hit — before any page is read or
+        written — while every other request completes byte-identical to
+        the fault-free run, under per-tick audit, leaking zero pages."""
+        cfg, params = qwen
+        prompts = self._workload(cfg, rng)
+        ref, _ = _run(cfg, params, prompts, **self.BASE)
+        inj = FaultInjector([Fault("table_corrupt", tick=3)])
+        reqs, eng = _run(cfg, params, prompts, injector=inj, audit=True,
+                         **self.BASE)
+        assert eng.table_corruptions == 1
+        assert eng.guard_failures == 1
+        failed = [r for r in reqs if r.status == FAILED]
+        assert len(failed) == 1
+        assert "dispatch guard" in failed[0].error
+        for r, base in zip(reqs, ref):
+            if r.status == COMPLETED:
+                assert r.output == base.output
+        eng.drain()
+        eng.shutdown()
+        assert eng.pool.in_use == 0
+
+    def test_every_corruption_flavor_is_caught(self, qwen, rng):
+        """The injector cycles out-of-range / reserved-zero / duplicate
+        corruption; each must be caught by the guard, never dispatched."""
+        cfg, params = qwen
+        prompts = self._workload(cfg, rng)
+        # ticks spaced wider than sync_every so each fault lands on its
+        # own dispatch (a multi-tick window advances the clock in jumps,
+        # and co-due faults would corrupt one victim twice)
+        inj = FaultInjector([Fault("table_corrupt", tick=t, slot=t)
+                             for t in (2, 7, 12)])
+        reqs, eng = _run(cfg, params, prompts, injector=inj, audit=True,
+                         **self.BASE)
+        assert eng.table_corruptions == 3
+        assert eng.guard_failures >= 3
+        assert sum(r.status == FAILED for r in reqs) >= 1
+        eng.drain()
+        eng.shutdown()
+        assert eng.pool.in_use == 0
+
+    def test_unguarded_corruption_caught_by_auditor(self, qwen, rng):
+        """Satellite: guard and auditor agree on what corruption *is* —
+        with guards off the same injected fault must trip the per-tick
+        ledger audit instead of passing silently."""
+        cfg, params = qwen
+        prompts = self._workload(cfg, rng)
+        inj = FaultInjector([Fault("table_corrupt", tick=3)])
+        # per-tick stepping: inside a multi-tick window the corrupt entry
+        # can be trimmed away with the grow-ahead before the boundary
+        # audit looks (the guard checks *before* dispatch; the auditor
+        # only sees state that survives the step)
+        kw = {**self.BASE, "sync_every": 1}
+        with pytest.raises(AuditError, match="diverged"):
+            _run(cfg, params, prompts, injector=inj, audit=True,
+                 guards=False, **kw)
+
+
+# ---------------------------------------------------------------------------
 # Chaos harness: seeded workloads x fault schedules
 # ---------------------------------------------------------------------------
 
@@ -340,8 +425,11 @@ class TestChaos:
         stats = chaos_smoke(seed=0, verbose=False)
         assert stats["mismatched"] == 0
         assert stats["leaked_pages"] == 0
-        assert stats["affected"] <= 1  # only the poisoned request
+        # only the poisoned and table-corrupted requests may be affected
+        assert stats["affected"] <= 2
         assert stats["faults_fired"]["pool_alloc"] >= 1
+        assert stats["faults_fired"]["table_corrupt"] == 1
+        assert stats["guard_failures"] >= 1
         assert stats["audits_run"] > 0
 
     @pytest.mark.parametrize("seed", [1, 2, 3])

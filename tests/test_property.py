@@ -397,6 +397,61 @@ class TestKernelProperties:
         np.testing.assert_array_equal(np.asarray(kern(x)), x)
 
 
+class TestDispatchGuardProperties:
+    """Guard property: whatever single corruption hits a live block-table
+    entry — out-of-range id, reserved page 0, or a duplicate of another
+    row's page landing on a write position — ``guard_dispatch`` must
+    reject the dispatch before any page is read or written, and a valid
+    table must always pass (no false rejections)."""
+
+    PS = 4
+
+    @given(
+        st.integers(0, 2**16),  # layout seed
+        st.integers(2, 5),  # rows
+        st.integers(2, 6),  # max_pages per row
+        st.integers(0, 2),  # corruption flavor
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_corrupted_tables_always_rejected(self, seed, n_rows,
+                                              max_pages, flavor):
+        from repro.core.errors import GuardError
+        from repro.kernels.ops import GUARDED_KINDS, guard_dispatch
+
+        rng = np.random.default_rng(seed)
+        num_pages = n_rows * max_pages + 1
+        ids = rng.permutation(np.arange(1, num_pages))
+        tb = np.zeros((n_rows, max_pages), np.int32)
+        work, fill, k = [], [], 0
+        for r in range(n_rows):
+            n_live = int(rng.integers(1, max_pages + 1))
+            pages = ids[k : k + n_live].tolist()
+            k += n_live
+            fill.append(pages)
+            tb[r, : n_live] = pages
+            end = int(rng.integers((n_live - 1) * self.PS + 1,
+                                   n_live * self.PS + 1))
+            work.append((r, end, end - 1, end))
+        guard_dispatch(tb, num_pages, self.PS, work)  # valid: must pass
+        victim = int(rng.integers(0, n_rows))
+        live = -(-work[victim][1] // self.PS)
+        if flavor == 0:
+            tb[victim, int(rng.integers(0, live))] = (
+                num_pages + int(rng.integers(0, 7))
+            )
+        elif flavor == 1:
+            tb[victim, int(rng.integers(0, live))] = 0
+        else:
+            # duplicate another row's page onto the victim's write page
+            other = (victim + 1) % n_rows
+            tb[victim, live - 1] = fill[other][0]
+        with pytest.raises(GuardError) as ei:
+            guard_dispatch(tb, num_pages, self.PS, work)
+        assert all(kind in GUARDED_KINDS
+                   for _, kind, _ in ei.value.violations)
+        assert any(r == victim for r, _, _ in ei.value.violations)
+
+
 class TestFaultToleranceProperties:
     """Chaos property: *no* random fault schedule may leak pages or break
     refcount conservation.  The per-tick auditor (``audit=True``) checks
@@ -423,7 +478,8 @@ class TestFaultToleranceProperties:
         if "qwen" not in _TINY_PARAMS:
             _TINY_PARAMS["qwen"] = _lm.init(cfg, jax.random.PRNGKey(0))
         params = _TINY_PARAMS["qwen"]
-        sites = ("pool_alloc", "grant") + (("poison",) if with_poison else ())
+        sites = ("pool_alloc", "grant") + (
+            ("poison", "table_corrupt") if with_poison else ())
         inj = FaultInjector(random_schedule(
             seed, n_faults=n_faults, max_tick=16, sites=sites, slots=2))
         eng = ServingEngine(cfg, params, ServeConfig(

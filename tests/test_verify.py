@@ -1,0 +1,413 @@
+"""Kernel guardrails: the static verifier pass, the sanitizing reference
+interpreter, and the dispatch guard (ISSUE-9 acceptance surface).
+
+Three layers, one contract:
+
+* ``core/lowering/verify.py`` proves what is provable at lowering time —
+  static window bounds, cross-cell write disjointness, alias wiring — and
+  emits a structured :class:`Obligation` for every check that depends on
+  runtime scalars (paged block tables);
+* the ``sanitize`` backend executes the same dataflow as ``reference``
+  with out-of-bounds, duplicate-write, uninitialized-read and non-finite
+  detection on every region access;
+* ``kernels/ops.guard_dispatch`` discharges the emitted obligations
+  against concrete block tables before any page is touched.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Schedule, analyze, compile as tl_compile
+from repro.core import lang as T
+from repro.core.backends.reference import (
+    _check_region_starts,
+    _check_scalar_index,
+)
+from repro.core.errors import GuardError, SanitizeError, VerifyError
+from repro.core.lowering.verify import alias_wiring, interval
+from repro.kernels import parity_inputs, parity_programs
+from repro.kernels.ops import GUARDED_KINDS, guard_dispatch
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# Planted-defect programs
+# ---------------------------------------------------------------------------
+
+
+def racy_program():
+    """Both grid cells store to O[0:16] — a proven write race."""
+
+    @T.prim_func
+    def Racy(A: T.Tensor((32, 128), "float32"),
+             O: T.Tensor((16, 128), "float32")):
+        with T.Kernel(2) as bx:
+            s = T.alloc_shared((16, 128), "float32")
+            T.copy(A[bx * 16, 0], s)
+            T.copy(s, O[0, 0])
+
+    return Racy
+
+
+def escaping_program():
+    """bx=1 reads rows [24, 48) of a 32-row buffer — provably OOB."""
+
+    @T.prim_func
+    def Escape(A: T.Tensor((32, 128), "float32"),
+               O: T.Tensor((48, 128), "float32")):
+        with T.Kernel(2) as bx:
+            s = T.alloc_shared((24, 128), "float32")
+            T.copy(A[bx * 24, 0], s)
+            T.copy(s, O[bx * 24, 0])
+
+    return Escape
+
+
+def dup_write_program():
+    """(bx // 2) * 16 defeats the affine disjointness proof (accepted by
+    the static verifier) but lands both cells on O[0:16] at runtime — the
+    sanitizer's cross-cell duplicate-write check catches what the static
+    pass documents as unprovable."""
+
+    @T.prim_func
+    def DupWrite(A: T.Tensor((32, 128), "float32"),
+                 O: T.Tensor((16, 128), "float32")):
+        with T.Kernel(2) as bx:
+            s = T.alloc_shared((16, 128), "float32")
+            T.copy(A[bx * 16, 0], s)
+            T.copy(s, O[(bx // 2) * 16, 0])
+
+    return DupWrite
+
+
+def half_written_program():
+    """Only rows [0, 16) of a 32-row output are ever written."""
+
+    @T.prim_func
+    def HalfOut(A: T.Tensor((16, 128), "float32"),
+                O: T.Tensor((32, 128), "float32")):
+        with T.Kernel(1) as bx:
+            s = T.alloc_shared((16, 128), "float32")
+            T.copy(A[0, 0], s)
+            T.copy(s, O[0, 0])
+
+    return HalfOut
+
+
+def gather_program(pages=4, rows=8):
+    """Minimal table-directed kernel: page axis of Src positioned by the
+    scalar-prefetch Tbl — the static verifier cannot bound it and must
+    emit a ``table_in_range`` obligation instead."""
+
+    @T.prim_func
+    def Gather(Tbl: T.ScalarTensor((pages,), "int32"),
+               Src: T.Tensor((pages, rows, 128), "float32"),
+               Out: T.Tensor((pages, rows, 128), "float32")):
+        with T.Kernel(pages) as bx:
+            s = T.alloc_shared((rows, 128), "float32")
+            T.copy(Src[Tbl[bx], 0, 0], s)
+            T.copy(s, Out[bx, 0, 0])
+
+    return Gather
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: the static verifier pass
+# ---------------------------------------------------------------------------
+
+
+class TestStaticVerifier:
+    def test_every_kernel_verifies_clean(self):
+        """The full parity corpus lowers with the verify pass in the
+        pipeline — no false positives — and every emitted obligation is a
+        kind the dispatch guard knows how to discharge."""
+        count = 0
+        for name, prog in parity_programs():
+            m = analyze(prog, Schedule())
+            count += 1
+            for ob in m.obligations:
+                assert ob.kind in GUARDED_KINDS, (name, ob)
+        assert count > 0
+
+    def test_planted_write_race_rejected(self):
+        with pytest.raises(VerifyError, match="write race"):
+            tl_compile(racy_program(), target="reference")
+
+    def test_planted_oob_window_rejected(self):
+        with pytest.raises(VerifyError, match="escape"):
+            tl_compile(escaping_program(), target="reference")
+
+    def test_error_context_names_program_and_pass(self):
+        """Satellite: a mid-pipeline failure carries the program name and
+        the failing pass on the exception."""
+        with pytest.raises(VerifyError) as ei:
+            tl_compile(racy_program(), target="reference")
+        assert ei.value.context is not None
+        assert "Racy" in ei.value.context and "verify" in ei.value.context
+        assert "Racy" in str(ei.value)
+
+    def test_unprovable_affine_pattern_accepted(self):
+        # the documented limitation: present-but-unprovable is accepted
+        m = analyze(dup_write_program(), Schedule())
+        assert m.obligations == []
+
+    def test_table_directed_axis_becomes_obligation(self):
+        m = analyze(gather_program(), Schedule())
+        kinds = {ob.kind for ob in m.obligations}
+        assert "table_in_range" in kinds
+        ob = next(o for o in m.obligations if o.kind == "table_in_range")
+        assert ob.tables == ("Tbl",) and ob.param == "Src" and ob.axis == 0
+        assert "Tbl" in ob.describe()
+
+    def test_paged_attention_obligations(self):
+        from repro.kernels.paged_attention import paged_attention_program
+
+        prog = paged_attention_program(
+            slots=2, heads=2, kv_heads=1, head_dim=128,
+            page_size=8, max_pages=4, num_pages=9,
+        )
+        m = analyze(prog, Schedule())
+        assert m.obligations, "paged kernel must owe runtime checks"
+        assert {ob.kind for ob in m.obligations} <= GUARDED_KINDS
+        assert all("Tables" in ob.tables for ob in m.obligations)
+
+    def test_alias_wiring_matches_backend(self):
+        """The verifier's wiring is what the Pallas backend asserts its
+        own ``input_output_aliases`` against; for an atomic kernel the
+        aliased operand sits after scalars + input windows."""
+
+        @T.prim_func
+        def ColSum(X: T.Tensor((4, 16, 128), "float32"),
+                   O: T.Tensor((16, 128), "float32")):
+            with T.Kernel(4) as bx:
+                xs = T.alloc_shared((16, 128), "float32")
+                T.copy(X[bx, 0, 0], xs)
+                T.atomic_add(O[0, 0], xs)
+
+        m = analyze(ColSum, Schedule())
+        wiring = alias_wiring(m)
+        assert wiring == {len(m.scalar_params) + len(m.in_windows): 0}
+        # and the pallas backend accepts it (the cross-check would raise)
+        kern = tl_compile(ColSum, Schedule(interpret=True))
+        assert kern.backend == "pallas"
+
+    def test_interval_arithmetic(self):
+        from repro.core.expr import VarExpr
+
+        v = VarExpr("i", extent=8)
+        assert interval(v * 4 + 2) == (2.0, 30.0)
+        assert interval((v - 4) * -1) == (-3.0, 4.0)
+        assert interval(v % 3) == (0.0, 2.0)
+        assert interval(v // 2) == (0.0, 3.0)
+        lo, hi = interval(VarExpr("free"))
+        assert lo == -np.inf and hi == np.inf
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: the sanitizing interpreter
+# ---------------------------------------------------------------------------
+
+_CASES = dict(parity_programs())
+
+
+def _make_input(param, rng):
+    if param.dtype.startswith(("int", "uint")):
+        return rng.integers(-4, 4, size=param.shape).astype(param.dtype)
+    return rng.standard_normal(param.shape).astype(param.dtype)
+
+
+class TestSanitizer:
+    @pytest.mark.parametrize("name", sorted(_CASES))
+    def test_sanitize_parity(self, name, rng):
+        """Every kernel in the corpus runs clean under the sanitizer and
+        matches the plain reference interpreter bit-for-bit (the sanitizer
+        observes, it must not perturb)."""
+        prog = _CASES[name]
+        sk = tl_compile(prog, target="sanitize")
+        rk = tl_compile(prog, target="reference")
+        assert sk.backend == "sanitize"
+        args = parity_inputs(name, prog, rng)
+        if args is None:
+            args = [_make_input(p, rng) for p in sk.arg_params]
+        sout, rout = sk(*args), rk(*args)
+        if not isinstance(sout, tuple):
+            sout, rout = (sout,), (rout,)
+        for s, r in zip(sout, rout):
+            np.testing.assert_array_equal(np.asarray(s), np.asarray(r))
+
+    def test_duplicate_write_detected(self, rng):
+        kern = tl_compile(dup_write_program(), target="sanitize")
+        a = rng.standard_normal((32, 128)).astype(np.float32)
+        with pytest.raises(SanitizeError, match="duplicate write"):
+            kern(a)
+        # the plain reference interpreter runs the same program silently —
+        # the hazard the sanitizer exists to surface
+        tl_compile(dup_write_program(), target="reference")(a)
+
+    def test_unwritten_output_detected(self, rng):
+        kern = tl_compile(half_written_program(), target="sanitize")
+        a = rng.standard_normal((16, 128)).astype(np.float32)
+        with pytest.raises(SanitizeError, match="never written"):
+            kern(a)
+
+    def test_nonfinite_output_named_with_origin(self, rng):
+        @T.prim_func
+        def Copy(X: T.Tensor((16, 128), "float32"),
+                 O: T.Tensor((16, 128), "float32")):
+            with T.Kernel(1) as bx:
+                s = T.alloc_shared((16, 128), "float32")
+                T.copy(X[0, 0], s)
+                T.copy(s, O[0, 0])
+
+        kern = tl_compile(Copy, target="sanitize")
+        x = rng.standard_normal((16, 128)).astype(np.float32)
+        x[3, 7] = np.nan
+        with pytest.raises(SanitizeError, match="non-finite"):
+            kern(x)
+
+    def test_gather_parity_with_valid_table(self, rng):
+        kern = tl_compile(gather_program(), target="sanitize")
+        tbl = np.array([2, 0, 3, 1], np.int32)
+        src = rng.standard_normal((4, 8, 128)).astype(np.float32)
+        out = np.asarray(kern(tbl, src))
+        np.testing.assert_array_equal(out, src[tbl])
+
+    def test_negative_table_entry_rejected(self, rng):
+        """Satellite: a negative dynamic start previously hit Python's
+        silent negative-index wrap in the reference interpreter; both the
+        plain and sanitizing interpreters now reject it loudly."""
+        src = rng.standard_normal((4, 8, 128)).astype(np.float32)
+        bad = np.array([2, -1, 3, 1], np.int32)
+        for target in ("reference", "sanitize"):
+            kern = tl_compile(gather_program(), target=target)
+            with pytest.raises(SanitizeError, match="out of bounds"):
+                kern(bad, src)
+
+    def test_oversized_table_entry_rejected(self, rng):
+        src = rng.standard_normal((4, 8, 128)).astype(np.float32)
+        bad = np.array([2, 9, 3, 1], np.int32)  # page 9 of 4
+        kern = tl_compile(gather_program(), target="reference")
+        with pytest.raises(SanitizeError, match="out of bounds"):
+            kern(bad, src)
+
+    def test_region_start_checks_unit(self):
+        buf = type("B", (), {"name": "X", "shape": (8, 16)})()
+        _check_region_starts(buf, (0, 8), (8, 8), "copy")  # in bounds
+        with pytest.raises(SanitizeError, match="out of bounds"):
+            _check_region_starts(buf, (-1, 0), (4, 4), "copy")
+        with pytest.raises(SanitizeError, match="out of bounds"):
+            _check_region_starts(buf, (6, 0), (4, 4), "copy")
+        _check_scalar_index(buf, (7, 15))
+        with pytest.raises(SanitizeError, match="scalar load"):
+            _check_scalar_index(buf, (8, 0))
+        with pytest.raises(SanitizeError, match="scalar load"):
+            _check_scalar_index(buf, (0, -2))
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: the dispatch guard (unit level; engine level in test_chaos.py)
+# ---------------------------------------------------------------------------
+
+
+def _tables(rows, max_pages, fill):
+    tb = np.zeros((rows, max_pages), np.int32)
+    for r, pages in enumerate(fill):
+        tb[r, : len(pages)] = pages
+    return tb
+
+
+class TestDispatchGuard:
+    PS = 4  # page size
+    NP = 9  # pool pages: valid ids [1, 9)
+
+    def test_clean_dispatch_passes(self):
+        tb = _tables(2, 4, [[1, 2, 3], [4, 5]])
+        guard_dispatch(tb, self.NP, self.PS,
+                       [(0, 10, 9, 10), (1, 6, 5, 6)])
+
+    def test_out_of_range_entry_blames_the_row(self):
+        tb = _tables(2, 4, [[1, 99, 3], [4, 5]])
+        with pytest.raises(GuardError) as ei:
+            guard_dispatch(tb, self.NP, self.PS,
+                           [(0, 10, 9, 10), (1, 6, 5, 6)])
+        rows = {r for r, _, _ in ei.value.violations}
+        kinds = {k for _, k, _ in ei.value.violations}
+        assert rows == {0} and kinds == {"table_in_range"}
+        assert "99" in str(ei.value)
+
+    def test_reserved_page0_in_live_prefix_rejected(self):
+        tb = _tables(1, 4, [[1, 0, 3]])
+        with pytest.raises(GuardError, match="reserved"):
+            guard_dispatch(tb, self.NP, self.PS, [(0, 10, 9, 10)])
+
+    def test_capacity_overflow_rejected(self):
+        tb = _tables(1, 4, [[1, 2, 3, 4]])
+        with pytest.raises(GuardError, match="capacity"):
+            guard_dispatch(tb, self.NP, self.PS, [(0, 17, 16, 17)])
+
+    def test_duplicate_writable_page_blames_both_rows(self):
+        tb = _tables(2, 4, [[1, 2, 7], [4, 5, 7]])
+        with pytest.raises(GuardError) as ei:
+            guard_dispatch(tb, self.NP, self.PS,
+                           [(0, 10, 9, 10), (1, 10, 9, 10)])
+        rows = {r for r, _, _ in ei.value.violations}
+        kinds = {k for _, k, _ in ei.value.violations}
+        assert rows == {0, 1} and kinds == {"table_writes_disjoint"}
+
+    def test_write_into_another_rows_live_page_blames_writer(self):
+        # rows share page 1 read-only in their prefixes (legal prefix
+        # sharing) but row 1 *writes* into page 2, live in row 0
+        tb = _tables(2, 4, [[1, 2, 3], [1, 6, 2]])
+        with pytest.raises(GuardError) as ei:
+            guard_dispatch(tb, self.NP, self.PS,
+                           [(0, 10, 9, 10), (1, 10, 9, 10)])
+        assert {r for r, _, _ in ei.value.violations} == {1}
+
+    def test_readonly_prefix_sharing_is_legal(self):
+        tb = _tables(2, 4, [[1, 2, 3], [1, 2, 6]])
+        guard_dispatch(tb, self.NP, self.PS,
+                       [(0, 10, 9, 10), (1, 10, 9, 10)])
+
+    def test_random_corruptions_always_rejected(self, rng):
+        """Seeded sweep of the guard property (the hypothesis twin lives
+        in test_property.py): whatever live entry is corrupted — out of
+        range, reserved zero, or a duplicate of another row's page — the
+        guard rejects the dispatch before any page write."""
+        for trial in range(50):
+            n_rows = int(rng.integers(2, 5))
+            max_pages = int(rng.integers(3, 7))
+            num_pages = n_rows * max_pages + 1
+            ids = rng.permutation(np.arange(1, num_pages))
+            work, fill, k = [], [], 0
+            for r in range(n_rows):
+                n_live = int(rng.integers(1, max_pages + 1))
+                fill.append(ids[k : k + n_live].tolist())
+                k += n_live
+                end = int(
+                    rng.integers((n_live - 1) * self.PS + 1,
+                                 n_live * self.PS + 1)
+                )
+                work.append((r, end, end - 1, end))
+            tb = _tables(n_rows, max_pages, fill)
+            guard_dispatch(tb, num_pages, self.PS, work)  # valid: passes
+            victim = int(rng.integers(0, n_rows))
+            live = -(-work[victim][1] // self.PS)
+            mode = trial % 3
+            if mode == 0:
+                tb[victim, int(rng.integers(0, live))] = (
+                    num_pages + int(rng.integers(0, 5))
+                )
+            elif mode == 1:
+                tb[victim, int(rng.integers(0, live))] = 0
+            else:
+                # land the duplicate on the victim's *write* page so the
+                # corruption is a write hazard, not legal read sharing
+                other = (victim + 1) % n_rows
+                tb[victim, live - 1] = fill[other][0]
+            with pytest.raises(GuardError) as ei:
+                guard_dispatch(tb, num_pages, self.PS, work)
+            assert any(k in GUARDED_KINDS
+                       for _, k, _ in ei.value.violations)

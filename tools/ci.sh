@@ -13,11 +13,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 # DeprecationWarnings from the serving modules are errors: the scheduler is
 # the newest surface and must not rot against jax/numpy API churn.
+# The suite includes the kernel guardrails (ISSUE-9): the full parity
+# corpus re-runs under the sanitizing interpreter (tests/test_verify.py),
+# so every kernel executes with OOB / duplicate-write / uninitialized-read
+# / non-finite detection on, not just the planted-defect programs.
 python -m pytest -x -q -W 'error::DeprecationWarning:repro\.serving' "$@"
 
-# Seeded chaos smoke (ISSUE-8): a fixed workload x fault schedule with the
-# invariant auditor on every tick — unaffected requests must stay
+# Seeded chaos smoke (ISSUE-8/9): a fixed workload x fault schedule with
+# the invariant auditor on every tick — unaffected requests must stay
 # byte-identical to the fault-free run and shutdown must free every page.
+# The schedule includes a table_corrupt fault, so the dispatch guard's
+# graceful degradation (FAIL exactly the hit request) is proved here too.
 python -m repro.serving.faults --seed 0
 
 # Exercise the serving path end-to-end on a tiny config: engine + paged
