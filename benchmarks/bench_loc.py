@@ -103,8 +103,24 @@ def run():
         f"(budget {QUANT_MARGINAL_LOC_BUDGET})",
     ))
 
+    # Speculative decoding (ISSUE-10) routes its verify pass through the
+    # chunked-prefill programs above (prefill_attention / mla_prefill and
+    # their quant twins): scoring all draft positions in one dispatch is
+    # just a C-wide chunk, so the kernel registry gains no spec-specific
+    # program and the feature's kernel LoC cost is zero by construction.
+    import repro.kernels as _kernels
+
+    spec_factories = [n for n in dir(_kernels) if not n.startswith("__")
+                      and ("spec" in n.lower() or "draft" in n.lower())]
+    rows.append(Row(
+        "loc_spec_verify_kernels", float(len(spec_factories)),
+        "spec decode verify reuses chunked prefill; zero new kernel programs",
+    ))
+
     check(lambda: programs["flash_mla"].source_lines <= 80,
           "mla-loc-within-paper-claim")
+    check(lambda: not spec_factories,
+          "spec-verify-zero-new-kernel-lines")
     check(lambda: attention_total <= PRE_REFACTOR_ATTENTION_LOC,
           "attention-refactor-net-simplification")
     check(lambda: quant_marginal <= QUANT_MARGINAL_LOC_BUDGET,
@@ -126,6 +142,11 @@ def derived_metrics(rows):
         "quant_marginal_loc_headroom": round(
             QUANT_MARGINAL_LOC_BUDGET
             / max(by["loc_quant_marginal_max"], 1.0), 3
+        ),
+        # 1.0 = speculative decoding added zero kernel programs (its
+        # verify pass is the chunked-prefill kernels, dispatched C-wide)
+        "spec_verify_kernel_reuse": round(
+            1.0 / (1.0 + by["loc_spec_verify_kernels"]), 3
         ),
     }
 

@@ -1,0 +1,23 @@
+"""Speculative decoding via n-gram self-speculation: each round drafts 4
+tokens from the slot's own history, verifies all of them in one chunked-
+prefill pass, and commits the accepted prefix on device — composing with
+the multi-step window (sync_every) so one host dispatch covers up to
+sync_every * (draft_len + 1) tokens.  Greedy output is byte-identical to
+plain decode; the printed stats show the draft acceptance rate.
+
+    PYTHONPATH=src python examples/spec_decode.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main([
+        "--arch", "qwen2_1_5b",
+        "--reduced",
+        "--requests", "12",
+        "--slots", "4",
+        "--max-new", "24",
+        "--prompt-len", "6",
+        "--sync-every", "4",
+        "--spec-decode", "ngram",
+        "--draft-len", "4",
+    ])

@@ -27,6 +27,7 @@ kernels used to hand-roll): running max with the ``-inf`` clamp, exp2
 scaling by ``log2(e)``, l/m fragment carries, and the final normalize.
 """
 from repro.core import lang as T
+from repro.core.layout import LANE
 
 # Clamp the running max before differencing: fully-masked tiles leave it at
 # -inf, and (-inf) - (-inf) = nan.  -2^20; exp2 underflows long before.
@@ -135,8 +136,19 @@ class DequantStage:
 
     The packed bytes and scales stay resident in ``packed_shared`` /
     ``scale_shared`` after a load: the prefill kernels re-copy those slices
-    straight into the page pools (write path stores what was read, no
-    re-quantization).
+    straight into the page pools through :meth:`packed_rows` (write path
+    stores what was read, no re-quantization).
+
+    The local unpack staging is *lane-padded*: ``packed_shared`` is a
+    BlockSpec window (its block shape must mirror the global page layout),
+    but ``packed_local`` lowers to plain VMEM scratch — and a packed minor
+    dim below the TPU lane width (int4 head_dim 64 packs to 32 bytes; the
+    vector unit is 8x128) would hand Mosaic a misaligned scratch tile.  So
+    the fragment rounds its minor dim up to a LANE multiple, the staging
+    copy fills only the live ``[0:cols]`` columns, and the padding tail is
+    zeroed once at allocation so the sanitizing interpreter (DESIGN.md
+    §5.8) never sees an uninitialized read whatever later passes do with
+    the buffer.
     """
 
     def __init__(self, rows, feat, fmt, dtype="float32"):
@@ -146,11 +158,20 @@ class DequantStage:
         self.pack = KV_PACK[fmt]
         if feat % self.pack:
             raise ValueError("feature dim must be a multiple of the pack factor")
-        self.packed_shared = T.alloc_shared((rows, feat // self.pack), "int8")
-        self.packed_local = T.alloc_fragment((rows, feat // self.pack), "int8")
+        self.cols = feat // self.pack  # live packed columns
+        padded = -(-self.cols // LANE) * LANE
+        self.packed_shared = T.alloc_shared((rows, self.cols), "int8")
+        self.packed_local = T.alloc_fragment((rows, padded), "int8")
         self.scale_shared = T.alloc_shared((rows, 1), dtype)
         self.deq = T.alloc_fragment((rows, feat), dtype)
         self.out = T.alloc_shared((rows, feat), dtype)
+        if padded != self.cols:
+            T.clear(self.packed_local)
+
+    def packed_rows(self, r0, r1):
+        """The live packed columns of rows ``[r0:r1]`` of the staged bytes —
+        what the prefill write-back copies into the page pool."""
+        return self.packed_shared[r0:r1, 0:self.cols]
 
     def load(self, packed_region, scale_region):
         """Stage one packed tile + scales and return the dequantized tile."""
@@ -160,7 +181,8 @@ class DequantStage:
 
     def dequant(self):
         """Unpack + scale whatever is staged in ``packed_shared``."""
-        T.copy(self.packed_shared, self.packed_local)
+        T.copy(self.packed_shared,
+               self.packed_local[0 : self.rows, 0 : self.cols])
         if self.fmt == "int4":
             for i, j in T.Parallel(self.rows, self.feat):
                 v = (self.packed_local[i, j // 2] >> ((j % 2) * 4)) & 15

@@ -478,11 +478,11 @@ def mla_prefill_quant_program(
             tidx = T.minimum(Starts[bz] // page_size + bq, max_pages - 1)
             dst_page = T.if_then_else(live_page, Tables[bz, tidx], 0)
             T.copy(
-                kc.packed_shared[bq * page_size : bq * page_size + page_size, :],
+                kc.packed_rows(bq * page_size, bq * page_size + page_size),
                 KVPages[dst_page, 0, 0],
             )
             T.copy(
-                pc.packed_shared[bq * page_size : bq * page_size + page_size, :],
+                pc.packed_rows(bq * page_size, bq * page_size + page_size),
                 KPePages[dst_page, 0, 0],
             )
             T.copy(

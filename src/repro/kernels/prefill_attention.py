@@ -269,11 +269,11 @@ def prefill_attention_quant_program(
             tidx = T.minimum(Starts[bz] // page_size + bq, max_pages - 1)
             dst_page = T.if_then_else(live_page, Tables[bz, tidx], 0)
             T.copy(
-                kc.packed_shared[bq * page_size : bq * page_size + page_size, :],
+                kc.packed_rows(bq * page_size, bq * page_size + page_size),
                 KPages[bh, dst_page, 0, 0],
             )
             T.copy(
-                vc.packed_shared[bq * page_size : bq * page_size + page_size, :],
+                vc.packed_rows(bq * page_size, bq * page_size + page_size),
                 VPages[bh, dst_page, 0, 0],
             )
             T.copy(

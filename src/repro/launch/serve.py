@@ -48,6 +48,17 @@ def main(argv=None):
                          "device-resident jax.lax.scan loop when every "
                          "active slot is generating (scheduler runs at "
                          "sync boundaries only)")
+    ap.add_argument("--spec-decode", choices=["ngram"], default=None,
+                    help="speculative decoding draft proposer: each round "
+                         "drafts --draft-len tokens (ngram = self-"
+                         "speculation over the slot's own history) and "
+                         "verifies all of them in one chunk forward; "
+                         "greedy output stays byte-identical to plain "
+                         "decode, composes multiplicatively with "
+                         "--sync-every")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="draft tokens proposed per speculative round "
+                         "(verify chunk is draft_len+1 wide)")
     ap.add_argument("--audit", action="store_true",
                     help="run the serving invariant auditor after every "
                          "tick (page conservation, refcounts, radix "
@@ -79,7 +90,9 @@ def main(argv=None):
                     num_blocks=args.num_blocks, prefill=args.prefill,
                     prefill_chunk=args.prefill_chunk,
                     token_budget=args.token_budget,
-                    sync_every=args.sync_every, audit=args.audit,
+                    sync_every=args.sync_every,
+                    spec_decode=args.spec_decode, draft_len=args.draft_len,
+                    audit=args.audit,
                     guards=args.guards == "on"),
     )
     rng = np.random.default_rng(args.seed)
@@ -101,6 +114,13 @@ def main(argv=None):
         extra += (
             f", {engine.decode_windows} multi-step windows "
             f"({engine.window_fallbacks} fallbacks)"
+        )
+    if engine.spec_proposer is not None:
+        rate = engine.spec_accepted / max(engine.spec_proposed, 1)
+        extra += (
+            f", {engine.spec_windows} spec windows: "
+            f"{engine.spec_accepted}/{engine.spec_proposed} drafts accepted "
+            f"({rate:.2f})"
         )
     ttfts = [r.ttft_ticks for r in done if r.ttft_ticks is not None]
     if ttfts:

@@ -703,19 +703,12 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
     return cfg.attention in ("gqa", "mla") and cfg.family not in ("ssm", "hybrid")
 
 
-def prefill_step(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
-                 unroll: int = 1):
-    """One chunked-prefill step: a (B, C) block of prompt tokens advances
-    every slot with ``lens[b] > 0`` by ``lens[b]`` positions in a single
-    forward pass (vs C batched decode steps under token replay).
-
-    ``tokens`` (B, C) int32 (dead tail arbitrary), ``pos`` (B,) chunk start
-    positions, ``lens`` (B,) live tokens per slot (0 = slot idle this step).
-    Returns ``(logits, cache)`` where ``logits`` (B, V) belong to each
-    slot's *last live* chunk token — exactly what sampling needs when a
-    chunk completes its prompt.  Works against both cache layouts through
-    the same ``Cache`` interface as ``decode_step``.
-    """
+def _prefill_trunk(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
+                   unroll: int = 1):
+    """The shared chunk-wide forward pass behind :func:`prefill_step` and
+    :func:`verify_step`: embed, every block's chunk attention + KV page
+    writes, final norm.  Returns ``(x (B, C, d), Cache)`` — the hidden
+    states of every chunk position, before any logits projection."""
     if not supports_chunked_prefill(cfg):
         raise NotImplementedError(
             f"chunked prefill supports attention archs (GQA/MLA); {cfg.name} "
@@ -754,6 +747,26 @@ def prefill_step(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
             new_rest.append(cnew)
 
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, Cache(new_prefix, new_rest, cache.stacked, cache.max_len,
+                    layout, cache.page_size, tables)
+
+
+def prefill_step(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
+                 unroll: int = 1):
+    """One chunked-prefill step: a (B, C) block of prompt tokens advances
+    every slot with ``lens[b] > 0`` by ``lens[b]`` positions in a single
+    forward pass (vs C batched decode steps under token replay).
+
+    ``tokens`` (B, C) int32 (dead tail arbitrary), ``pos`` (B,) chunk start
+    positions, ``lens`` (B,) live tokens per slot (0 = slot idle this step).
+    Returns ``(logits, cache)`` where ``logits`` (B, V) belong to each
+    slot's *last live* chunk token — exactly what sampling needs when a
+    chunk completes its prompt.  Works against both cache layouts through
+    the same ``Cache`` interface as ``decode_step``.
+    """
+    lens = jnp.asarray(lens, jnp.int32)
+    x, cache = _prefill_trunk(params, cfg, cache, tokens, pos, lens,
+                              unroll=unroll)
     # each slot's last live chunk position feeds the logits (idle slots
     # gather row 0 — garbage the engine ignores)
     last = jnp.clip(lens - 1, 0, x.shape[1] - 1)
@@ -761,8 +774,174 @@ def prefill_step(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
     logits = L.unembed(params["embed"], x_last, cfg)
     if cfg.logit_soft_cap:
         logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
-    return logits, Cache(new_prefix, new_rest, cache.stacked, cache.max_len,
-                         layout, cache.page_size, tables)
+    return logits, cache
+
+
+def verify_step(params, cfg: ModelConfig, cache: Cache, tokens, pos, lens,
+                unroll: int = 1):
+    """Speculative-decode verify: score every chunk position in one pass.
+
+    This *is* chunked prefill — the same ``_prefill_trunk`` (same kernels,
+    same table-directed KV page writes) — differing only in the logits
+    projection: where :func:`prefill_step` unembeds each slot's last live
+    token, verify unembeds the whole chunk, because accept/rollback needs
+    the model's next-token distribution after *every* draft prefix.
+    Returns ``(logits (B, C, V), cache)``; rows of idle slots
+    (``lens == 0``) are garbage the caller masks.
+    """
+    x, cache = _prefill_trunk(params, cfg, cache, tokens, pos, lens,
+                              unroll=unroll)
+    logits = L.unembed(params["embed"], x, cfg)
+    if cfg.logit_soft_cap:
+        logits = cfg.logit_soft_cap * jnp.tanh(logits / cfg.logit_soft_cap)
+    return logits, cache
+
+
+def ngram_propose(history, pos, feed, draft_len: int):
+    """Self-speculation draft proposer: n-gram lookahead over the slot's own
+    token history (prompt + committed output) — no second model, no weights.
+
+    ``history`` (B, H) int32 holds each slot's tokens by sequence index
+    (``history[b, pos[b]] == feed[b]``, entries past ``pos`` undefined).
+    For each slot, find the most recent earlier occurrence of the current
+    ``(prev, last)`` bigram, falling back to a unigram match on ``last``,
+    and propose the ``draft_len`` tokens that followed it.  No match (or a
+    match too close to the end) degrades to repeating ``feed`` — proposals
+    are always *valid* token ids, and verify rejects wrong ones, so
+    proposer quality only ever affects speed, never output.
+    """
+    b, h = history.shape
+    last = jnp.asarray(feed, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    js = jnp.arange(h, dtype=jnp.int32)[None, :]
+    known = js < pos[:, None]  # strictly-past indices only
+    uni = known & (history == last[:, None])
+    prev = jnp.where(
+        pos > 0,
+        jnp.take_along_axis(history, jnp.maximum(pos - 1, 0)[:, None],
+                            axis=1)[:, 0],
+        -1,
+    )
+    shifted = jnp.concatenate(
+        [jnp.full((b, 1), -1, history.dtype), history[:, :-1]], axis=1
+    )
+    bi = uni & (shifted == prev[:, None])
+    j_bi = jnp.max(jnp.where(bi, js, -1), axis=1)
+    j_uni = jnp.max(jnp.where(uni, js, -1), axis=1)
+    j = jnp.where(j_bi >= 0, j_bi, j_uni)
+    cols = j[:, None] + 1 + jnp.arange(draft_len, dtype=jnp.int32)[None, :]
+    ok = (j[:, None] >= 0) & (cols <= pos[:, None])
+    cand = jnp.take_along_axis(history, jnp.clip(cols, 0, h - 1), axis=1)
+    return jnp.where(ok, cand, last[:, None])
+
+
+# Draft-proposer registry (ServeConfig.spec_decode names an entry): the plug
+# point where a tiny draft *model* slots in later — any (history, pos, feed,
+# draft_len) -> (B, draft_len) proposals function qualifies, because the
+# verify/accept machinery never trusts a proposal.
+DRAFT_PROPOSERS = {"ngram": ngram_propose}
+
+
+def spec_decode_loop(params, cfg: ModelConfig, cache: Cache, feed, pos, key,
+                     live, remaining, history, *, n_rounds: int,
+                     draft_len: int, propose_fn, sample_fn, accept_fn,
+                     eos_id: int, max_len: int, poison=None, unroll: int = 1):
+    """``n_rounds`` draft-verify rounds in one ``jax.lax.scan`` dispatch —
+    the speculative twin of :func:`decode_loop`, composing with it
+    multiplicatively: where a decode-loop iteration emits one token, a
+    round here drafts ``draft_len`` tokens (``propose_fn``), scores all of
+    them plus the feed token in one chunk forward (:func:`verify_step` —
+    batched verify *is* chunked prefill), and emits the accepted prefix
+    plus the model's own next token, so one host dispatch covers up to
+    ``n_rounds * (draft_len + 1)`` tokens.
+
+    Accept/rollback are carry masks, not copies: the verify chunk writes
+    KV for all ``draft_len + 1`` positions through the block tables, and a
+    rejected tail is *logically* truncated by not advancing ``pos`` past
+    the accepted prefix — the stale pages sit beyond the slot's live
+    length, invisible to the ragged masks, and the next round's chunk
+    write overwrites them (the engine's ``SlotTables.trim`` returns the
+    unused grow-ahead at the sync boundary).
+
+    ``sample_fn(logits (B, C, V), key, gate) -> (targets (B, C), key)``
+    must advance the key by a *fixed* number of splits per gated round
+    (``sampling.spec_sample_step``), so the stream is deterministic
+    regardless of acceptance lengths; ``accept_fn(drafts, targets) ->
+    (B, C) bool`` is the leading-accept mask (``sampling.spec_accept``).
+    Greedy targets make the emitted stream byte-identical to plain decode
+    by construction: every emitted token is the argmax after a committed,
+    fully-verified prefix.
+
+    ``poison`` (B,) bool overwrites a slot's verify logits with NaN (fault
+    injection); slots whose logits hold no finite value — injected or
+    genuine — emit nothing and stop, reported through ``bad`` for the
+    engine to FAIL exactly that request.
+
+    Returns ``(targets (n, B, C), emitted (n, B, C) bool, bad (n, B) bool,
+    key, cache)`` with ``C = draft_len + 1``; ``emitted[t, b, i]`` marks
+    target ``i`` of round ``t`` as a token the host must deliver, in order.
+    """
+    c = draft_len + 1
+    feed = jnp.asarray(feed, jnp.int32)
+    if poison is None:
+        poison = jnp.zeros(feed.shape, bool)
+    idx = jnp.arange(c, dtype=jnp.int32)
+    h = history.shape[1]
+
+    def body(carry, _):
+        cache, feed, pos, key, live, remaining, history = carry
+        drafts = propose_fn(history, pos, feed, draft_len)
+        chunk = jnp.concatenate([feed[:, None], drafts], axis=1)
+        lens = jnp.where(live, c, 0).astype(jnp.int32)
+        logits, cache = verify_step(params, cfg, cache, chunk, pos, lens,
+                                    unroll=unroll)
+        logits = jnp.where(poison[:, None, None], jnp.nan, logits)
+        bad = jnp.any(~jnp.any(jnp.isfinite(logits), axis=-1), axis=-1) & live
+        tgt, key = sample_fn(logits, key, live.any())
+        eos_hit = tgt == eos_id
+        ieos = eos_hit.astype(jnp.int32)
+        prev_eos = (jnp.cumsum(ieos, axis=1) - ieos) > 0
+        # target i is emitted iff every draft before it verified, no earlier
+        # target was EOS, and the slot still had allowance/room — exactly
+        # decode_loop's per-tick stop conditions, applied per position
+        emit = (
+            accept_fn(drafts, tgt)
+            & ~prev_eos
+            & ((pos[:, None] + idx[None, :]) < max_len)
+            & (idx[None, :] < remaining[:, None])
+            & live[:, None]
+            & ~bad[:, None]
+        )
+        nem = emit.sum(axis=1, dtype=jnp.int32)
+        last_tok = jnp.take_along_axis(
+            tgt, jnp.clip(nem - 1, 0, c - 1)[:, None], axis=1
+        )[:, 0]
+        feed = jnp.where(nem > 0, last_tok, feed)
+        # append the emitted tokens to the history so the next round's
+        # n-gram lookahead sees them (rejected targets never land)
+        wcols = jnp.where(emit, pos[:, None] + 1 + idx[None, :], h)
+        history = history.at[jnp.arange(history.shape[0])[:, None], wcols].set(
+            tgt, mode="drop"
+        )
+        pos = pos + nem
+        remaining = remaining - nem
+        stop = (
+            (emit & eos_hit).any(axis=1)
+            | (remaining <= 0)
+            | (pos >= max_len)
+            | bad
+        )
+        return (cache, feed, pos, key, live & ~stop, remaining, history), (
+            tgt, emit, bad,
+        )
+
+    carry = (cache, feed, jnp.asarray(pos, jnp.int32), key, live,
+             jnp.asarray(remaining, jnp.int32),
+             jnp.asarray(history, jnp.int32))
+    (cache, _, _, key, _, _, _), (toks, emitted, bad) = jax.lax.scan(
+        body, carry, None, length=n_rounds
+    )
+    return toks, emitted, bad, key, cache
 
 
 def _unstack(tree, n):

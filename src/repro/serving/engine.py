@@ -115,7 +115,7 @@ from .paged_cache import (
     SlotTables,
     blocks_for,
 )
-from .sampling import sample_step
+from .sampling import sample_step, spec_accept, spec_sample_step
 
 # One jit'd decode step per (model configuration, sampling temperature),
 # shared by every engine instance (and so by every request): constructing a
@@ -223,6 +223,39 @@ def _decode_loop_fn(cfg: ModelConfig, temperature: float, n_steps: int,
     )
 
 
+def _spec_loop_fn(cfg: ModelConfig, temperature: float, proposer: str,
+                  n_rounds: int, draft_len: int, eos_id: int, max_len: int):
+    """The speculative window: ``n_rounds`` draft-verify rounds in one
+    ``jax.lax.scan`` dispatch (``lm.spec_decode_loop``) — each round
+    proposes ``draft_len`` tokens from the slot's own history, scores them
+    in one chunk forward through the prefill kernels, and commits the
+    accepted prefix as on-device masks."""
+
+    def build():
+        snap = copy.deepcopy(cfg)
+        propose = lm.DRAFT_PROPOSERS[proposer]
+
+        def sample_fn(logits, key, gate):
+            return spec_sample_step(logits, key, temperature=temperature,
+                                    gate=gate)
+
+        def loop(p, c, feed, pos, key, live, remaining, history, poison):
+            return lm.spec_decode_loop(
+                p, snap, c, feed, pos, key, live, remaining, history,
+                n_rounds=n_rounds, draft_len=draft_len, propose_fn=propose,
+                sample_fn=sample_fn, accept_fn=spec_accept, eos_id=eos_id,
+                max_len=max_len, poison=poison,
+            )
+
+        return jax.jit(loop, donate_argnums=(1,))
+
+    return _cached_fn(
+        ("spec_loop", repr(cfg), temperature, proposer, n_rounds, draft_len,
+         eos_id, max_len),
+        build,
+    )
+
+
 def _copy_pages_fn(cfg: ModelConfig):
     """jit'd copy-on-write page duplication (``lm.copy_pages``), donating
     the cache like every other step so XLA copies pages in place.  One
@@ -310,6 +343,22 @@ class ServeConfig:
     # all-or-nothing grow-ahead page grant for the worst-case window, else
     # that boundary falls back to a per-tick step.
     sync_every: int = 1
+    # -- speculative decoding ---------------------------------------------
+    # draft proposer name (lm.DRAFT_PROPOSERS) or None = off.  "ngram" is
+    # self-speculation: an on-device lookahead over each slot's own emitted
+    # tokens — no second model, no new weights; the registry is the plug
+    # point for a tiny draft model later.  A speculative round drafts
+    # draft_len tokens, scores all of them plus the feed token in ONE chunk
+    # forward through the prefill kernels (batched verify *is* chunked
+    # prefill), and commits the accepted prefix on device — so it composes
+    # multiplicatively with sync_every: one host dispatch covers up to
+    # sync_every * (draft_len + 1) tokens.  Requires an arch with
+    # supports_chunked_prefill (checked at engine init, where the model
+    # config is known).  Greedy output is byte-identical to plain decode by
+    # construction; temperature streams advance the PRNG key a fixed
+    # draft_len + 2 splits per round regardless of acceptance length.
+    spec_decode: Optional[str] = None
+    draft_len: int = 4
     # -- fault tolerance --------------------------------------------------
     # run the invariant auditor (serving.faults.audit_engine) after every
     # tick: page conservation, refcount consistency, radix reachability,
@@ -332,7 +381,7 @@ class ServeConfig:
     def __post_init__(self):
         # loud at construction, not a shape error three layers down
         for name in ("slots", "max_len", "max_new_tokens", "page_size",
-                     "prefill_chunk"):
+                     "prefill_chunk", "draft_len"):
             v = getattr(self, name)
             if v <= 0:
                 raise ValueError(f"{name} must be positive, got {v}")
@@ -357,6 +406,12 @@ class ServeConfig:
         if self.retry_backoff < 0:
             raise ValueError(
                 f"retry_backoff must be >= 0, got {self.retry_backoff}"
+            )
+        if (self.spec_decode is not None
+                and self.spec_decode not in lm.DRAFT_PROPOSERS):
+            raise ValueError(
+                f"unknown spec_decode proposer {self.spec_decode!r} "
+                f"(registered: {sorted(lm.DRAFT_PROPOSERS)})"
             )
 
 
@@ -513,6 +568,25 @@ class ServingEngine:
         )
         self.sync_every = max(1, serve_cfg.sync_every)
         self._loop_fns: Dict[int, object] = {}  # window length -> jit'd loop
+        # -- speculative decoding -----------------------------------------
+        # gated on the model config (hence here, not __post_init__): the
+        # verify pass routes through the chunked-prefill kernels, so an
+        # arch that cannot chunk-prefill cannot verify drafts either
+        if serve_cfg.spec_decode is not None and not lm.supports_chunked_prefill(cfg):
+            raise ValueError(
+                f"spec_decode={serve_cfg.spec_decode!r} requires a chunked-"
+                f"prefill arch (GQA/MLA); {cfg.name} (attention="
+                f"{cfg.attention}, family={cfg.family}) cannot run the "
+                "verify pass"
+            )
+        self.spec_proposer = serve_cfg.spec_decode
+        self._spec_loop_fns: Dict[int, object] = {}  # rounds -> jit'd loop
+        self.spec_windows = 0  # speculative dispatches taken
+        self.spec_rounds = 0  # draft-verify rounds drained (>=1 emit or bad)
+        self.spec_proposed = 0  # draft tokens scored by verify
+        self.spec_accepted = 0  # draft tokens accepted (excl. bonus token)
+        self.spec_all_rejected = 0  # live slot-rounds accepting zero drafts
+        self.spec_fallbacks = 0  # spec window declined -> plain window/tick
         # the device-side block-table tensor is cached across ticks and
         # re-uploaded only after the scheduler mutates tables (admission
         # growth, grow-ahead grants/trims, preemption, EOS recycling)
@@ -873,14 +947,19 @@ class ServingEngine:
                 self.steps_run += 1
             return 0
         self.dispatches += 1
-        window_ok = (
-            self.sync_every > 1 and all(self._gen_ready(s) for s in active)
-        )
-        if (window_ok and self.injector is not None
-                and self.injector.pending("poison")):
+        all_gen = all(self._gen_ready(s) for s in active)
+        spec_ok = self.spec_proposer is not None and all_gen
+        window_ok = self.sync_every > 1 and all_gen
+        if (self.injector is not None and self.injector.pending("poison")):
             # poison faults land per-tick, where per-row detection runs;
-            # the window has no mid-scan logits check
-            window_ok = False
+            # the plain window has no mid-scan logits check (the spec
+            # window checks verify logits, but through its own site)
+            spec_ok = window_ok = False
+        if spec_ok:
+            done = self._step_spec_window(active)
+            if done is not None:
+                return done
+            self.spec_fallbacks += 1  # no headroom / grant denied
         if window_ok:
             done = self._step_window(active)
             if done is not None:
@@ -891,31 +970,73 @@ class ServingEngine:
         return self._step_replay(active)
 
     # -- device-resident multi-step window ------------------------------
-    def _grant_window(self, active: List[int], n: int, rem) -> bool:
+    def _grant_window(self, active: List[int], spans: Dict[int, int]) -> bool:
         """All-or-nothing grow-ahead: every active slot gets pages covering
-        its worst case over the ``n``-tick window — at most ``rem[s]``
-        emitted tokens plus the frozen-position dead-iteration write, and
-        never past ``max_len`` — so a slot near its token limit doesn't
-        inflate the ask with pages it can never touch.  On any shortfall
-        the grant rolls back *exactly* — every slot trimmed to its
-        pre-grant block count and the table-dirty flag restored, so a
-        failed grant costs no table re-upload — and the boundary falls
-        back to per-tick stepping.  The grant itself never preempts, so a
-        tight pool degrades throughput, not scheduling."""
+        its worst-case window write span (``spans[s]`` tokens past its
+        current position, never past ``max_len``) — so a slot near its
+        token limit doesn't inflate the ask with pages it can never touch.
+        On any shortfall the grant rolls back *exactly* — every slot
+        trimmed to its pre-grant block count and the table-dirty flag
+        restored, so a failed grant costs no table re-upload — and the
+        boundary falls back to per-tick stepping.  The grant itself never
+        preempts, so a tight pool degrades throughput, not scheduling."""
         if self.injector is not None and self.injector.fire("grant"):
             return False  # injected mid-window grant failure
         pre = {s: self.tables.num_blocks(s) for s in active}
         dirty_before = self._tables_dirty
         for s in active:
             req = self.slot_req[s]
-            span = min(n, int(rem[s]) + 1)
-            target = min(int(self.pos[s]) + span, self.scfg.max_len)
+            target = min(int(self.pos[s]) + spans[s], self.scfg.max_len)
             if not self._ensure_with_evict(s, target, req.uid):
                 ps = self.pool.page_size
                 for t in active:
                     self.tables.trim(t, pre[t] * ps)
                 self._tables_dirty = dirty_before
                 return False
+        return True
+
+    def _prepare_window(self, active: List[int],
+                        spans: Dict[int, int]) -> bool:
+        """Shared paged-window preamble for the plain and speculative
+        multi-step paths: grow-ahead grant, copy-on-write over the whole
+        write span, and the dispatch guard over the granted tables.  On any
+        failure the grow-ahead is returned (survivors trimmed to
+        ``pos + 1``) and the caller falls back — per-tick stepping for the
+        plain window, plain window for the speculative one.  ``spans[s]``
+        is the slot's worst-case token span; the caller has already clamped
+        it to ``max_len`` headroom."""
+        if self.tables is None:
+            return True
+        if not self._grant_window(active, spans):
+            return False
+        pairs: List[Tuple[int, int]] = []
+        try:
+            for s in active:
+                target = min(int(self.pos[s]) + spans[s], self.scfg.max_len)
+                last = max(int(self.pos[s]), target - 1)
+                self._cow_range(s, last, protect=frozenset(active),
+                                out=pairs)
+        except PoolExhausted:
+            # a COW copy could not be satisfied even after eviction: apply
+            # the copies already repointed (their tables reference the
+            # fresh pages), give back the grow-ahead, and fall back — the
+            # per-tick path's COW failure preempts
+            self._apply_cow(pairs)
+            for s in active:
+                if self.tables.trim(s, int(self.pos[s]) + 1):
+                    self._tables_dirty = True
+            return False
+        self._apply_cow(pairs)
+        work = [(s, spans[s]) for s in active]
+        if len(self._guard_work(work)) != len(work):
+            # a guard violation FAILed the blamed slot(s): give back the
+            # survivors' grow-ahead and fall back, where the next path's
+            # own guard re-checks the trimmed dispatch
+            for s in active:
+                if self.slot_req[s] is not None:
+                    if self.tables.trim(s, int(self.pos[s]) + 1):
+                        self._tables_dirty = True
+            return False
         return True
 
     def _step_window(self, active: List[int]) -> Optional[int]:
@@ -948,38 +1069,9 @@ class ServingEngine:
         )
         while n // 2 >= max_span:
             n //= 2
-        if self.tables is not None:
-            if not self._grant_window(active, n, rem):
-                return None
-            pairs: List[Tuple[int, int]] = []
-            try:
-                for s in active:
-                    span = min(n, int(rem[s]) + 1)
-                    target = min(int(self.pos[s]) + span, self.scfg.max_len)
-                    last = max(int(self.pos[s]), target - 1)
-                    self._cow_range(s, last, protect=frozenset(active),
-                                    out=pairs)
-            except PoolExhausted:
-                # a COW copy could not be satisfied even after eviction:
-                # apply the copies already repointed (their tables
-                # reference the fresh pages), give back the grow-ahead,
-                # and fall back to per-tick — where COW failure preempts
-                self._apply_cow(pairs)
-                for s in active:
-                    if self.tables.trim(s, int(self.pos[s]) + 1):
-                        self._tables_dirty = True
-                return None
-            self._apply_cow(pairs)
-            spans = [(s, min(n, int(rem[s]) + 1)) for s in active]
-            if len(self._guard_work(spans)) != len(spans):
-                # a guard violation FAILed the blamed slot(s): give back
-                # the survivors' grow-ahead and fall back to the per-tick
-                # path, whose own guard re-checks the trimmed dispatch
-                for s in active:
-                    if self.slot_req[s] is not None:
-                        if self.tables.trim(s, int(self.pos[s]) + 1):
-                            self._tables_dirty = True
-                return None
+        spans = {s: min(n, int(rem[s]) + 1) for s in active}
+        if not self._prepare_window(active, spans):
+            return None
         loop = self._loop_fns.get(n)
         if loop is None:
             loop = self._loop_fns[n] = _decode_loop_fn(
@@ -1013,6 +1105,131 @@ class ServingEngine:
         if self.tables is not None:
             # return unused grow-ahead pages so boundary-time admission /
             # preemption sees the same pool a per-tick engine would
+            for s in active:
+                if self.slot_req[s] is not None:
+                    if self.tables.trim(s, int(self.pos[s]) + 1):
+                        self._tables_dirty = True
+        return len(active)
+
+    # -- speculative draft-verify window --------------------------------
+    def _step_spec_window(self, active: List[int]) -> Optional[int]:
+        """Up to ``sync_every`` draft-verify rounds in one dispatch
+        (``lm.spec_decode_loop``).  Each round's verify chunk writes
+        ``draft_len + 1`` KV positions through the block tables, so the
+        grow-ahead must cover the worst case ``n * (draft_len + 1)`` tokens
+        per slot (capped by the slot's token allowance plus the round's
+        unaccepted draft tail); rejected tails stay *logically* truncated
+        behind the position carry and the grant's unused pages return via
+        ``trim`` at the sync boundary — rollback never allocates, so it can
+        never leak.  Returns #active slots, or ``None`` when a slot lacks
+        ``max_len`` headroom for even one round or the grant/COW/guard
+        preamble declines (caller falls back to the plain window, which is
+        byte-identical by construction)."""
+        scfg = self.scfg
+        k = scfg.draft_len
+        c = k + 1
+        b = scfg.slots
+        feed = np.zeros((b,), np.int32)
+        live = np.zeros((b,), bool)
+        rem = np.zeros((b,), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            feed[s] = (req.prompt + req.output)[req._cursor]  # type: ignore[attr-defined]
+            live[s] = True
+            limit = req.max_new_tokens or scfg.max_new_tokens
+            rem[s] = limit - len(req.output)
+
+        # a slot's worst-case write span over n rounds: every verify chunk
+        # lands c positions from the current pos, and a live round commits
+        # at least one token, so the furthest write is bounded both by
+        # n * c and by the token allowance plus one round's draft tail
+        def span(s: int, n: int) -> int:
+            return min(n * c, int(rem[s]) + k)
+
+        # clamp rounds by halving (each distinct n is its own scan trace):
+        # first to the emission spans, then until every slot's worst-case
+        # chunk write fits under max_len — unlike the plain window, a
+        # verify chunk writes ahead of what it commits, so headroom is a
+        # hard precondition, not an optimization
+        n = self.sync_every
+        max_rounds = max(
+            -(-min(int(rem[s]), scfg.max_len - int(self.pos[s])) // c)
+            for s in active
+        )
+        while n // 2 >= max_rounds:
+            n //= 2
+        while n > 1 and any(
+            int(self.pos[s]) + span(s, n) > scfg.max_len for s in active
+        ):
+            n //= 2
+        if any(int(self.pos[s]) + span(s, n) > scfg.max_len for s in active):
+            return None  # a slot within c of max_len: plain path finishes it
+        spans = {s: span(s, n) for s in active}
+        if not self._prepare_window(active, spans):
+            return None
+
+        hist = np.zeros((b, scfg.max_len), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            toks = req.prompt + req.output
+            hist[s, : len(toks)] = toks
+        poison = self._poison_mask(active, site="spec_poison")
+
+        loop = self._spec_loop_fns.get(n)
+        if loop is None:
+            loop = self._spec_loop_fns[n] = _spec_loop_fn(
+                self.cfg, scfg.temperature, self.spec_proposer, n, k,
+                scfg.eos_id, scfg.max_len,
+            )
+        toks, emitted, bad, self._key, self.cache = loop(
+            self.params, self._fresh_cache(), jnp.asarray(feed),
+            jnp.asarray(self.pos), self._key, jnp.asarray(live),
+            jnp.asarray(rem), jnp.asarray(hist), jnp.asarray(poison),
+        )
+        self.spec_windows += 1
+        toks = np.asarray(toks)
+        emitted = np.asarray(emitted)
+        bad = np.asarray(bad)
+        # drain: replay each round through the same host-side bookkeeping
+        # the per-tick path runs — the device emit masks already encode
+        # acceptance, EOS, token limits and max_len, so _emit_token's stop
+        # conditions fire on exactly the tokens the mask delivers
+        for t in range(n):
+            row = emitted[t]
+            rbad = bad[t]
+            if not row.any() and not rbad.any():
+                break  # every slot stopped; later rounds are dead too
+            self.spec_rounds += 1
+            for s in active:
+                req = self.slot_req[s]
+                if req is None:
+                    continue
+                if rbad[s]:
+                    self.poisoned_rows += 1
+                    self._terminate(
+                        req, FAILED, slot=s,
+                        error="poisoned verify logits (no finite value)")
+                    continue
+                if not row[s].any():
+                    continue
+                acc = int(row[s].sum()) - 1  # drafts accepted this round
+                self.spec_proposed += k
+                self.spec_accepted += acc
+                if acc == 0:
+                    self.spec_all_rejected += 1
+                for i in range(c):
+                    if not row[s, i]:
+                        continue
+                    self.pos[s] += 1
+                    req._cursor += 1  # type: ignore[attr-defined]
+                    self._emit_token(s, req, int(toks[t, s, i]))
+                    if req.done:
+                        break
+            self.tick_tokens.append(int(row.sum()))
+            self.steps_run += 1
+        if self.tables is not None:
+            # rejected draft tails sit in pages past pos under the
+            # grow-ahead grant; trim reclaims them with the unused grant
             for s in active:
                 if self.slot_req[s] is not None:
                     if self.tables.trim(s, int(self.pos[s]) + 1):
@@ -1105,15 +1322,18 @@ class ServingEngine:
             pairs += local
         return survivors, pairs
 
-    def _poison_mask(self, rows: List[int]) -> np.ndarray:
-        """(slots,) bool — rows the injector poisons this dispatch.  A due
-        poison fault targets ``fault.slot`` mod the dispatched rows, so a
-        schedule stays meaningful whatever the slot occupancy is by then."""
+    def _poison_mask(self, rows: List[int],
+                     site: str = "poison") -> np.ndarray:
+        """(slots,) bool — rows the injector poisons this dispatch
+        (``site``: "poison" for per-tick logits, "spec_poison" for the
+        speculative window's verify logits).  A due fault targets
+        ``fault.slot`` mod the dispatched rows, so a schedule stays
+        meaningful whatever the slot occupancy is by then."""
         mask = np.zeros((self.scfg.slots,), bool)
         if self.injector is None or not rows:
             return mask
         while True:
-            f = self.injector.fire("poison")
+            f = self.injector.fire(site)
             if f is None:
                 break
             mask[rows[f.slot % len(rows)]] = True

@@ -20,6 +20,15 @@ through the allocation and dispatch sites the engine already has —
   guard (``ServeConfig.guards``) must reject the row before any page is
   read or written; with guards off, :func:`audit_engine`'s ledger check is
   what notices.
+* ``"spec_poison"`` — the speculative window's accept/rollback path: one
+  slot's *verify* logits are overwritten with NaN on device
+  (``lm.spec_decode_loop``'s ``poison`` mask), so every target of every
+  round is garbage.  The loop's own non-finite check must emit nothing for
+  that slot and report it ``bad``; the engine FAILs exactly that request,
+  and the rejected draft tail plus the grow-ahead grant must still come
+  back through ``trim`` — rollback never leaks pages.  (Grant denial
+  mid-draft-window rides the existing ``"grant"`` site: the speculative
+  grow-ahead runs through the same all-or-nothing grant.)
 
 Pool and grant faults are *output-preserving* by the engine's own design
 (preemption resumes by recompute, grant failure degrades to per-tick
@@ -49,7 +58,7 @@ import numpy as np
 
 from .paged_cache import blocks_for
 
-SITES = ("pool_alloc", "grant", "poison", "table_corrupt")
+SITES = ("pool_alloc", "grant", "poison", "table_corrupt", "spec_poison")
 
 
 @dataclasses.dataclass

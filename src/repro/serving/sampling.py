@@ -93,3 +93,64 @@ def sample_step(
     tok = sample(logits, sub, temperature=temperature, top_k=top_k,
                  top_p=top_p)
     return tok, new_key
+
+
+def spec_accept(drafts: jax.Array, targets: jax.Array) -> jax.Array:
+    """Token-match accept rule for self-speculative decoding.
+
+    ``drafts`` (B, K) proposed tokens, ``targets`` (B, K+1) the model's own
+    next tokens after each chunk prefix (``targets[:, i]`` follows the
+    prefix ending at draft ``i``).  Returns the (B, K+1) leading-accept
+    mask: position 0 (the model's token after the committed feed) is always
+    acceptable, and draft ``i`` extends the run iff it matched the target
+    the model produced at the same position — the first mismatch rejects
+    everything after it, because later targets were conditioned on a prefix
+    the model just refused.
+
+    Under greedy targets this is byte-identical to plain decode by
+    construction: every accepted position's target is the argmax after an
+    exactly-committed prefix.  Under temperature targets, token-match
+    against a sample from the true conditional is unbiased for the same
+    reason — the emitted token at each position is drawn from the model's
+    distribution given the accepted prefix.
+    """
+    acc = (drafts == targets[:, :-1]).astype(jnp.int32)
+    run = jnp.cumprod(acc, axis=1).astype(bool)
+    return jnp.concatenate(
+        [jnp.ones((drafts.shape[0], 1), bool), run], axis=1
+    )
+
+
+def spec_sample_step(
+    logits: jax.Array,  # (B, C, V) f32 — one row per verify-chunk position
+    key,
+    temperature: float = 0.0,
+    top_k: Optional[int] = None,
+    top_p: Optional[float] = None,
+    gate=None,  # optional () bool: when False the key is left unadvanced
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunk-wide :func:`sample_step` for speculative verify: one target
+    token per chunk position, ``(targets (B, C), new_key)``.
+
+    The key-stream determinism rule lives here: a gated round always splits
+    the key into exactly ``C + 1`` subkeys — one carry + one per position —
+    *regardless of how many positions end up accepted*.  Acceptance length
+    only selects which already-sampled targets are emitted; it never feeds
+    back into the key schedule, so a slot's token stream is a pure function
+    of (seed, round index), deterministic across acceptance histories and
+    across other slots' fates.  Greedy keeps the decode-loop contract: no
+    split is traced and the key passes through untouched.
+    """
+    if temperature <= 0.0:
+        return guarded_argmax(logits), key
+    c = logits.shape[1]
+    keys = jax.random.split(key, c + 1)
+    new_key = keys[0]
+    if gate is not None:
+        new_key = jnp.where(gate, new_key, key)
+    cols = [
+        sample(logits[:, i], keys[i + 1], temperature=temperature,
+               top_k=top_k, top_p=top_p)
+        for i in range(c)
+    ]
+    return jnp.stack(cols, axis=1), new_key

@@ -228,7 +228,7 @@ class TestFaultInjection:
         assert f is not None and f.fired_at == 5
         assert inj.fire("pool_alloc") is None  # consumed
         assert inj.fired == {"pool_alloc": 1, "grant": 0, "poison": 0,
-                             "table_corrupt": 0}
+                             "table_corrupt": 0, "spec_poison": 0}
 
     def test_injector_respects_clock(self):
         now = [0]
@@ -536,3 +536,79 @@ class TestSnapshotRestore:
             slots=1, max_len=16, max_new_tokens=1, prefix_cache=False))
         with pytest.raises(ValueError, match="prefix cache"):
             eng.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Faults inside the speculative draft-verify window (ISSUE-10 satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestSpecWindowFaults:
+    """The accept/rollback path under fire: uncommitted draft tokens live
+    only behind the position carry, so a fault mid-draft-window can cost
+    throughput but never tokens or pages."""
+
+    BASE = dict(slots=2, max_len=48, max_new_tokens=6, page_size=4,
+                sync_every=4, spec_decode="ngram", draft_len=3)
+
+    def test_spec_poison_fails_exactly_the_hit_request(self, qwen, rng):
+        """Poisoned verify logits are detected on device inside the scan:
+        the loop emits nothing for that row and reports it bad; the engine
+        FAILs exactly that request, everyone else finishes byte-identical
+        to the fault-free run, and rollback leaks zero pages."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, rng)
+        ref, _ = _run(cfg, params, prompts, **self.BASE)
+        inj = FaultInjector([Fault("spec_poison", tick=3, slot=0)])
+        reqs, eng = _run(cfg, params, prompts, injector=inj, audit=True,
+                         **self.BASE)
+        assert inj.fired["spec_poison"] == 1
+        assert eng.poisoned_rows == 1
+        failed = [r for r in reqs if r.status == FAILED]
+        assert len(failed) == 1
+        assert "poisoned verify logits" in failed[0].error
+        for r, base in zip(reqs, ref):
+            if r.status == COMPLETED:
+                assert r.output == base.output
+        assert _leftover(eng) == 0
+
+    def test_grant_denial_mid_draft_window_is_output_preserving(
+            self, qwen, rng):
+        """A denied grow-ahead grant closes the draft window for that
+        dispatch (spec_fallbacks counts it) but the engine degrades to the
+        plain window / per-tick path and every request still completes
+        byte-identical."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, rng)
+        ref, _ = _run(cfg, params, prompts, **self.BASE)
+        inj = FaultInjector([Fault("grant", tick=2)])
+        reqs, eng = _run(cfg, params, prompts, injector=inj, audit=True,
+                         **self.BASE)
+        assert inj.fired["grant"] == 1
+        assert eng.spec_fallbacks >= 1
+        assert all(r.status == COMPLETED for r in reqs)
+        assert [r.output for r in reqs] == [r.output for r in ref]
+        assert _leftover(eng) == 0
+
+    def test_table_corrupt_under_spec_blames_the_hit_request(
+            self, qwen, rng):
+        """The dispatch guard runs on the draft window's page tables like
+        any other dispatch: a corrupt entry FAILs exactly the request it
+        hit before any page is touched."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, rng)
+        ref, _ = _run(cfg, params, prompts, **self.BASE)
+        inj = FaultInjector([Fault("table_corrupt", tick=3)])
+        reqs, eng = _run(cfg, params, prompts, injector=inj, audit=True,
+                         **self.BASE)
+        assert eng.table_corruptions == 1
+        assert eng.guard_failures == 1
+        failed = [r for r in reqs if r.status == FAILED]
+        assert len(failed) == 1
+        assert "dispatch guard" in failed[0].error
+        for r, base in zip(reqs, ref):
+            if r.status == COMPLETED:
+                assert r.output == base.output
+        eng.drain()
+        eng.shutdown()
+        assert eng.pool.in_use == 0

@@ -251,3 +251,40 @@ def test_backend_parity(name, rng):
         np.testing.assert_allclose(
             np.asarray(p), np.asarray(r), rtol=1e-4, atol=2e-3
         )
+
+
+# ---------------------------------------------------------------------------
+# DequantStage lane padding (ROADMAP §3 residue): packed int8 scratch must
+# land on the TPU lane width; window-backed packed buffers must not be
+# padded (their block shape mirrors the global page layout).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["int8", "int4"])
+def test_dequant_stage_scratch_is_lane_aligned(fmt):
+    from repro.core.layout import LANE
+    from repro.core.lowering import run_pipeline
+    from repro.kernels.prefill_attention import (
+        prefill_attention_quant_program,
+    )
+
+    # head_dim // pack = 64 (int8) / 32 (int4): both narrower than LANE,
+    # exactly the misaligned minor dims Mosaic pays relayout copies for
+    m = run_pipeline(
+        prefill_attention_quant_program(
+            slots=1, heads=2, kv_heads=1, head_dim=64, chunk=8,
+            page_size=8, max_pages=4, num_pages=8, fmt=fmt),
+        Schedule(),
+    )
+    packed_scratch = [b for b in m.scratch_bufs if b.dtype == "int8"]
+    assert packed_scratch  # the dequant stages' local fragments
+    for b in packed_scratch:
+        assert b.shape[-1] % LANE == 0, (b.name, b.shape)
+    # the shared staging buffers are BlockSpec windows over the packed
+    # pools: their block shape must stay exactly the global page layout
+    cols = 64 // {"int8": 1, "int4": 2}[fmt]
+    packed_windows = [w.onchip for w in m.in_windows
+                      if w.onchip.dtype == "int8"]
+    assert packed_windows
+    for b in packed_windows:
+        assert b.shape[-1] == cols, (b.name, b.shape)

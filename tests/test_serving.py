@@ -1193,7 +1193,7 @@ class TestServeConfigValidation:
 
     @pytest.mark.parametrize("field", [
         "slots", "max_len", "max_new_tokens", "page_size", "prefill_chunk",
-        "num_blocks",
+        "num_blocks", "draft_len",
     ])
     @pytest.mark.parametrize("bad", [0, -3])
     def test_nonpositive_sizes_rejected(self, field, bad):
@@ -1240,3 +1240,252 @@ def test_int8_prefix_shared_preemption_resumes_exactly(rng):
     assert out == refs  # recompute resume over quantized pages is lossless
     assert eng.pages_shared > 0
     assert eng.pool.in_use == eng.prefix.pages  # only the index holds pages
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding (ISSUE-10): draft-verify inside the multi-step window
+# ---------------------------------------------------------------------------
+
+
+def _spec_mode_base(mode):
+    """(cfg_name, extra ServeConfig kwargs) for the byte-identity matrix."""
+    return {
+        "gqa_paged": ("qwen2_1_5b", {}),
+        "mla": ("deepseek_v2_lite_16b", {}),
+        "int8_kv": ("qwen2_1_5b", {"kv_dtype": "int8"}),
+    }[mode]
+
+
+class TestSpeculativeDecode:
+    """Speculative decoding is an *optimization*, never a behavior change:
+    greedy verify emits only tokens that are the model's own argmax after a
+    committed prefix, so every test drives the same requests through the
+    plain per-tick engine and the draft-verify window and asserts
+    byte-identical outputs."""
+
+    BASE = dict(slots=2, max_len=64, max_new_tokens=6, page_size=4,
+                temperature=0.0)
+
+    _REF_CACHE: dict = {}
+
+    def _ref(self, mode, cfg, params, prompts):
+        key = mode
+        if key not in self._REF_CACHE:
+            name, extra = _spec_mode_base(mode)
+            self._REF_CACHE[key] = _run_engine(
+                cfg, params, prompts, **self.BASE, **extra)
+        return self._REF_CACHE[key]
+
+    def _setup(self, mode, rng):
+        name, extra = _spec_mode_base(mode)
+        cfg = get_config(name).reduced()
+        params = _params(cfg)
+        prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+                   for n in (5, 7, 3, 6)]
+        return cfg, params, prompts, extra
+
+    @pytest.mark.parametrize("mode", ["gqa_paged", "mla", "int8_kv"])
+    @pytest.mark.parametrize("draft", [1, 2, 4])
+    @pytest.mark.parametrize("sync", [1, 4])
+    def test_greedy_byte_identity(self, mode, draft, sync, rng):
+        cfg, params, prompts, extra = self._setup(mode, rng)
+        ref, _, _ = self._ref(mode, cfg, params, prompts)
+        out, _, eng = _run_engine(
+            cfg, params, prompts, sync_every=sync, spec_decode="ngram",
+            draft_len=draft, audit=True, **self.BASE, **extra)
+        assert out == ref
+        assert eng.spec_windows > 0  # the draft-verify loop actually engaged
+        assert eng.pool.in_use == eng.prefix.pages  # rollback leaked nothing
+
+    def test_composes_with_sync_every_fewer_dispatches(self, rng):
+        """The acceptance-criterion shape at unit scale: on a self-similar
+        prompt the n-gram proposer lands drafts, so the spec engine spends
+        strictly fewer host dispatches than the sync-matched plain engine
+        for the same (byte-identical) output."""
+        cfg = _qwen()
+        params = _params(cfg)
+        motif = rng.integers(0, cfg.vocab_size, size=4).tolist()
+        prompts = [motif * 3 for _ in range(2)]
+        base = dict(slots=2, max_len=96, max_new_tokens=16, page_size=4,
+                    temperature=0.0, sync_every=4, prefix_cache=False)
+        ref, _, ref_eng = _run_engine(cfg, params, prompts, **base)
+        out, _, eng = _run_engine(cfg, params, prompts, spec_decode="ngram",
+                                  draft_len=4, **base)
+        assert out == ref
+        assert eng.spec_accepted > 0
+        assert eng.dispatches < ref_eng.dispatches
+        assert eng.pool.in_use == 0
+
+    def test_eos_mid_window(self, rng):
+        """A verified EOS must stop the stream inside the round: later
+        targets of the same round (and all later rounds) are discarded by
+        the on-device emit mask, exactly like plain decode stopping at
+        EOS."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+                   for n in (5, 7, 3, 6)]
+        base = dict(slots=2, max_len=64, max_new_tokens=8, page_size=4,
+                    temperature=0.0)
+        free, _, _ = _run_engine(cfg, params, prompts, **base)
+        eos = free[0][2]  # a token the greedy model actually emits mid-stream
+        ref, _, _ = _run_engine(cfg, params, prompts, eos_id=eos, **base)
+        out, _, eng = _run_engine(cfg, params, prompts, eos_id=eos,
+                                  sync_every=4, spec_decode="ngram",
+                                  draft_len=4, **base)
+        assert out == ref
+        assert eng.spec_windows > 0
+        assert any(len(o) < 8 for o in out)  # EOS genuinely cut a stream
+
+    def test_all_rejected_rounds(self, rng):
+        """A proposer that drafts garbage must cost speed only: every round
+        still emits the model's own next token (the bonus position), so the
+        output is byte-identical even when acceptance is zero."""
+        import jax.numpy as jnp
+        bad_name = "_test_pessimal"
+
+        def pessimal(history, pos, feed, draft_len):
+            # shift every draft off the feed token: near-certain mismatch
+            k = jnp.arange(draft_len, dtype=jnp.int32)[None, :]
+            return (jnp.asarray(feed, jnp.int32)[:, None] + 17 + k) % 101
+
+        lm.DRAFT_PROPOSERS[bad_name] = pessimal
+        try:
+            cfg = _qwen()
+            params = _params(cfg)
+            prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+                       for n in (5, 3)]
+            base = dict(slots=2, max_len=64, max_new_tokens=6, page_size=4,
+                        temperature=0.0)
+            ref, _, _ = _run_engine(cfg, params, prompts, **base)
+            out, _, eng = _run_engine(cfg, params, prompts, sync_every=4,
+                                      spec_decode=bad_name, draft_len=4,
+                                      audit=True, **base)
+        finally:
+            del lm.DRAFT_PROPOSERS[bad_name]
+        assert out == ref
+        assert eng.spec_all_rejected > 0  # whole rounds accepted zero drafts
+        # progress is still >= 1 token per live round: the loop never stalls
+        assert all(len(o) == 6 for o in out)
+
+    def test_preemption_resume_with_uncommitted_drafts(self, rng):
+        """Pool pressure mid-draft-window: the victim's uncommitted draft
+        tail lives only in pages behind the position carry, so recompute
+        resume (which replays prompt + *committed* output) is lossless."""
+        cfg = _qwen()
+        params = _params(cfg)
+        prompt1 = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        prompt2 = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        solo = dict(slots=1, max_len=16, max_new_tokens=6, page_size=4,
+                    temperature=0.0)
+        ref1, _, _ = _run_engine(cfg, params, [prompt1], **solo)
+        ref2, _, _ = _run_engine(cfg, params, [prompt2], **solo)
+        # pool of 4 blocks: both admit at 2 blocks, both need a 3rd
+        # mid-generation -> forced preemption while drafts are in flight
+        out, reqs, eng = _run_engine(
+            cfg, params, [prompt1, prompt2], slots=2, max_len=16,
+            max_new_tokens=6, page_size=4, num_blocks=4, sync_every=4,
+            spec_decode="ngram", draft_len=4, prefix_cache=False,
+            temperature=0.0)
+        assert eng.preemptions >= 1
+        assert out == [ref1[0], ref2[0]]  # recompute resume is lossless
+        assert eng.pool.in_use == 0
+
+    def test_temperature_stream_independent_of_acceptance(self, rng):
+        """The key-stream determinism rule: a gated round always splits the
+        key draft_len + 2 ways regardless of acceptance length, so one
+        slot's token stream cannot depend on another slot's drafts.  Same
+        seed, slot B's prompt fixed, slot A's prompt varied (same length,
+        so prefill ticks match): B's output must not move."""
+        cfg = _qwen()
+        params = _params(cfg)
+        pa1 = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        pa2 = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        pb = rng.integers(0, cfg.vocab_size, size=6).tolist()
+        base = dict(slots=2, max_len=64, max_new_tokens=12, page_size=4,
+                    temperature=0.8, seed=7, sync_every=4,
+                    spec_decode="ngram", draft_len=3)
+        out1, _, _ = _run_engine(cfg, params, [pa1, pb], **base)
+        out2, _, _ = _run_engine(cfg, params, [pa2, pb], **base)
+        assert out1[0] != out2[0]  # slot A genuinely diverged
+        assert out1[1] == out2[1]  # slot B's stream never moved
+
+    def test_temperature_runs_are_reproducible(self, rng):
+        cfg = _qwen()
+        params = _params(cfg)
+        prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+                   for n in (5, 3)]
+        base = dict(slots=2, max_len=64, max_new_tokens=8, page_size=4,
+                    temperature=0.8, seed=3, sync_every=4,
+                    spec_decode="ngram", draft_len=4)
+        out1, _, eng1 = _run_engine(cfg, params, prompts, **base)
+        out2, _, eng2 = _run_engine(cfg, params, prompts, **base)
+        assert out1 == out2
+        assert np.array_equal(np.asarray(eng1._key), np.asarray(eng2._key))
+
+    def test_greedy_never_splits_key(self, rng):
+        cfg = _qwen()
+        eng = ServingEngine(cfg, _params(cfg), ServeConfig(
+            slots=2, max_len=32, max_new_tokens=4, seed=7, page_size=4,
+            spec_decode="ngram", draft_len=2))
+        before = np.asarray(eng._key).copy()
+        for n in (5, 3):
+            eng.submit(rng.integers(0, cfg.vocab_size, size=n).tolist())
+        eng.run()
+        assert eng.spec_windows > 0
+        assert np.array_equal(np.asarray(eng._key), before)
+
+    def test_spec_requires_chunked_prefill_arch(self, rng):
+        """The verify pass *is* chunked prefill, so an arch that cannot
+        chunk-prefill (recurrent state) fails loudly at engine init."""
+        cfg = get_config("mamba2_2_7b").reduced()
+        with pytest.raises(ValueError, match="spec_decode"):
+            ServingEngine(cfg, _params(cfg), ServeConfig(
+                slots=1, max_len=16, max_new_tokens=2, cache="contiguous",
+                spec_decode="ngram"))
+
+    def test_unknown_proposer_rejected(self):
+        with pytest.raises(ValueError, match="spec_decode"):
+            ServeConfig(slots=2, max_len=32, max_new_tokens=4,
+                        spec_decode="crystal_ball")
+
+
+class TestNgramProposer:
+    """The draft proposer in isolation: pure function of the history."""
+
+    def test_bigram_match_preferred_and_most_recent(self):
+        import jax.numpy as jnp
+        hist = np.zeros((1, 16), np.int32)
+        # ... 5 6 7 ... 5 6 9 ... cursor after a fresh (5, 6) bigram
+        hist[0, :9] = [1, 5, 6, 7, 2, 5, 6, 9, 5]
+        drafts = np.asarray(lm.ngram_propose(
+            jnp.asarray(hist), jnp.asarray([9]), jnp.asarray([6]), 2))
+        # most recent earlier (5,6) is at j=6 -> propose history[7:9] = 9, 5
+        assert drafts.tolist() == [[9, 5]]
+
+    def test_unigram_fallback(self):
+        import jax.numpy as jnp
+        hist = np.zeros((1, 16), np.int32)
+        hist[0, :5] = [3, 8, 4, 2, 8]  # feed 8, prev 2: bigram (2,8) unseen
+        drafts = np.asarray(lm.ngram_propose(
+            jnp.asarray(hist), jnp.asarray([4]), jnp.asarray([8]), 2))
+        # unigram 8 at j=1 -> propose history[2:4] = 4, 2
+        assert drafts.tolist() == [[4, 2]]
+
+    def test_no_match_repeats_feed(self):
+        import jax.numpy as jnp
+        hist = np.zeros((2, 8), np.int32)
+        hist[0, :3] = [1, 2, 3]
+        hist[1, :1] = [9]
+        drafts = np.asarray(lm.ngram_propose(
+            jnp.asarray(hist), jnp.asarray([2, 0]), jnp.asarray([3, 9]), 3))
+        assert drafts.tolist() == [[3, 3, 3], [9, 9, 9]]
+
+    def test_match_near_cursor_truncates_to_feed(self):
+        import jax.numpy as jnp
+        hist = np.zeros((1, 8), np.int32)
+        hist[0, :4] = [5, 6, 5, 6]  # bigram (5,6) at j=1; only j=2..3 known
+        drafts = np.asarray(lm.ngram_propose(
+            jnp.asarray(hist), jnp.asarray([3]), jnp.asarray([6]), 4))
+        # history[2:4] = 5, 6 then past the cursor -> repeat feed
+        assert drafts.tolist() == [[5, 6, 6, 6]]
